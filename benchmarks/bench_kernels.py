@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — numbers are
+correctness-path timings, NOT TPU perf) vs the jnp oracle, plus payload
+size accounting which IS hardware-independent."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.quantize import compressed_bytes
+from repro.kernels.quantize import ops as qops, ref as qref
+from repro.kernels.weighted_agg import ops as wops, ref as wref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(force: bool = False):
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 4096))
+    lines = []
+    us = _time(lambda a: qops.quantize(a)[0], x)
+    lines.append(C.csv_line("kernel_quantize_pallas_interp", us,
+                            "shape=512x4096"))
+    us = _time(lambda a: qref.quantize_ref(a)[0], x)
+    lines.append(C.csv_line("kernel_quantize_jnp_ref", us, "shape=512x4096"))
+
+    u = jax.random.normal(jax.random.PRNGKey(1), (15, 512 * 256))
+    w = jax.random.uniform(jax.random.PRNGKey(2), (15,))
+    d = jnp.sum(w)
+    us = _time(wops.weighted_agg, u, w, d)
+    lines.append(C.csv_line("kernel_weighted_agg_pallas_interp", us,
+                            "N=15,D=131072"))
+    us = _time(lambda a, b, c: wref.weighted_agg_ref(a, b, c), u, w, d)
+    lines.append(C.csv_line("kernel_weighted_agg_jnp_ref", us,
+                            "N=15,D=131072"))
+
+    q, s = qref.quantize_ref(u)
+    us = _time(wops.dequant_agg, q, s, w, d)
+    lines.append(C.csv_line("kernel_dequant_agg_fused_interp", us,
+                            "N=15,D=131072"))
+
+    tree = {"w": x}
+    f32 = sum(l.size * 4 for l in jax.tree.leaves(tree))
+    lines.append(C.csv_line(
+        "quantize_payload_int8", 0.0,
+        f"bytes={compressed_bytes(tree, 8)};f32_bytes={f32};"
+        f"ratio={f32 / compressed_bytes(tree, 8):.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -1,0 +1,46 @@
+"""Paper Figure 6: effect of transport quantization on FedCD accuracy.
+
+Levels: none (f32), int8, int4 — the paper's claim is that quantization
+has no significant accuracy effect.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.fedcd import FedCDServer
+
+
+def run(rounds: int = 25, model: str = "mlp", force: bool = False):
+    name = f"fig6_quantization_{model}_{rounds}"
+    cached = None if force else C.load_result(name)
+    if cached is None:
+        results = {}
+        devs, data = C.make_data("hierarchical", seed=0)
+        params, loss_fn, acc_fn = C.model_fns(model)
+        for bits in (0, 8, 4):
+            cfg = C.default_cfg(quantize_bits=bits, milestones=(5, 15))
+            srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                              batch_size=C.BATCH)
+            srv.run(rounds)
+            results[str(bits)] = {
+                "acc": [float(m.test_acc.mean()) for m in srv.metrics],
+                "comm_bytes": int(sum(m.comm_bytes for m in srv.metrics)),
+            }
+        cached = {"rounds": rounds, "levels": results}
+        C.save_result(name, cached)
+    lines = []
+    base = cached["levels"]["0"]["acc"][-1]
+    for bits in ("0", "8", "4"):
+        r = cached["levels"][bits]
+        tag = "f32" if bits == "0" else f"int{bits}"
+        lines.append(C.csv_line(
+            f"fig6_acc_{tag}", 0.0,
+            f"acc={r['acc'][-1]:.3f};delta_vs_f32={r['acc'][-1]-base:+.3f};"
+            f"comm_MB={r['comm_bytes']/1e6:.0f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -1,0 +1,37 @@
+"""Paper Table 1: rounds till convergence + wall-clock ratio, FedCD vs
+FedAvg, on both experimental setups. Reuses the fig1/fig4 runs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from benchmarks import bench_hierarchical, bench_hypergeometric
+
+
+def run(rounds: int = 40, model: str = "mlp", force: bool = False):
+    bench_hierarchical.run(rounds, model, force)
+    bench_hypergeometric.run(rounds, model, force)
+    lines = []
+    for setup, mod in (("hierarchical", "fig1_hierarchical"),
+                       ("hypergeometric", "fig4_hypergeometric")):
+        r = C.load_result(f"{mod}_{model}_{rounds}")
+        # Table 1 semantics: FedCD converges at its own plateau; FedAvg is
+        # measured against the SAME accuracy target (it never reaches it,
+        # so it hits the cap — the paper's 300-round asterisk)
+        target = float(np.mean(r["fedcd_mean"][-5:])) - 0.02
+        cd_conv = C.rounds_to_target(r["fedcd_mean"], target)
+        avg_conv = C.rounds_to_target(r["fedavg_mean"], target)
+        avg_capped = "*" if avg_conv >= rounds else ""
+        cd_wall = r["fedcd_wall_s"] * cd_conv / rounds
+        avg_wall = r["fedavg_wall_s"] * avg_conv / rounds
+        ratio = avg_wall / max(cd_wall, 1e-9)
+        lines.append(C.csv_line(
+            f"table1_{setup}", 0.0,
+            f"rounds_fedcd={cd_conv};rounds_fedavg={avg_conv}{avg_capped};"
+            f"wallclock_1_to_{ratio:.3f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -1,0 +1,73 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Results cached under
+experiments/paper/ (delete or pass --force to re-run).
+
+  python -m benchmarks.run [--fast] [--force] [--model mlp|cnn]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer rounds (CI-scale)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_comm, bench_hierarchical,
+                            bench_hypergeometric, bench_kernels,
+                            bench_model_dynamics, bench_quantization,
+                            bench_wallclock)
+
+    long_rounds = 16 if args.fast else 40
+    short_rounds = 10 if args.fast else 25
+    dyn_rounds = 12 if args.fast else 30
+
+    benches = {
+        "hierarchical": lambda: bench_hierarchical.run(long_rounds,
+                                                       args.model,
+                                                       args.force),
+        "hypergeometric": lambda: bench_hypergeometric.run(long_rounds,
+                                                           args.model,
+                                                           args.force),
+        "quantization": lambda: bench_quantization.run(short_rounds,
+                                                       args.model,
+                                                       args.force),
+        "dynamics": lambda: bench_model_dynamics.run(dyn_rounds, args.model,
+                                                     args.force),
+        "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
+                                                 args.force),
+        "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),
+        "kernels": lambda: bench_kernels.run(args.force),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for name, fn in benches.items():
+        try:
+            t1 = time.time()
+            for line in fn():
+                print(line, flush=True)
+            print(f"# {name} done in {time.time() - t1:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: FedCD vs FedAvg on non-IID data in ~1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.config import FedCDConfig
+from repro.core.fedavg import FedAvgServer
+from repro.core.fedcd import FedCDServer
+from repro.data.partition import hierarchical_devices, stack_devices
+from repro.models.mlp import init_mlp_classifier, mlp_accuracy, mlp_loss
+
+
+def main() -> None:
+    # 30 devices, 10 label-archetypes in 2 meta-archetypes (paper §3.2)
+    devices = hierarchical_devices(seed=0, n_train=128, n_val=64, n_test=64)
+    data = stack_devices(devices)
+    cfg = FedCDConfig(n_devices=30, devices_per_round=15, local_epochs=2,
+                      milestones=(3, 8), late_delete_round=10, lr=0.08)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), hidden=64)
+
+    fedcd = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                        batch_size=32)
+    fedavg = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                          batch_size=32)
+    print(f"{'round':>5} {'FedCD acc':>10} {'FedAvg acc':>10} "
+          f"{'live models':>12}")
+    for t in range(1, 16):
+        m = fedcd.run_round(t)
+        f = fedavg.run_round(t)
+        print(f"{t:>5} {m.test_acc.mean():>10.3f} {f.test_acc.mean():>10.3f}"
+              f" {m.live_models:>12}")
+    gap = fedcd.metrics[-1].test_acc.mean() - fedavg.metrics[-1].test_acc.mean()
+    print(f"\nFedCD - FedAvg final gap: {gap:+.3f} "
+          f"(paper: FedCD higher + faster convergence)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Checkpoint IO: pytree -> flat npz (+ JSON treedef), registry -> JSON.
+
+No orbax in the container; this covers the framework's needs: periodic
+train-state snapshots, FedCD model-population snapshots (one file per
+global model + registry state), and resume.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz cannot store ml_dtypes; widen (load_checkpoint casts back
+            # to the template leaf's dtype)
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    extra: Dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    with open(path.removesuffix(".npz") + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (template pytree)."""
+    base = path.removesuffix(".npz")
+    data = np.load(base + ".npz")
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    flat_like = _flatten_with_paths(like)
+    leaves_by_key = {k: data[k] for k in data.files}
+    missing = set(flat_like) - set(leaves_by_key)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        arr = leaves_by_key[key]
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]
+
+
+def save_registry(path: str, registry_state: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(registry_state, f, indent=2)
+
+
+def load_registry(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,9 @@
+"""Assigned architecture configs. Importing this package populates the
+registry (each module calls ``register``)."""
+from repro.configs import (chameleon_34b, deepseek_v3_671b, fedcd_cifar,
+                           glm4_9b, internlm2_1_8b, llama3_405b,
+                           phi35_moe_42b, qwen3_4b, whisper_small,
+                           xlstm_125m, zamba2_7b)
+from repro.configs.base import (ARCH_REGISTRY, all_arch_names, get_arch,
+                                input_specs, reduced, shape_supported,
+                                decode_window)

@@ -1,0 +1,13 @@
+"""The paper's own experimental config: 10-layer CNN on CIFAR-shaped data,
+30 devices, 15 per round, milestones {5,15,25,30} (paper §3.1-3.2)."""
+from repro.config import FedCDConfig
+
+HIERARCHICAL = FedCDConfig(
+    n_devices=30, devices_per_round=15, local_epochs=2, score_window=3,
+    milestones=(5, 15, 25, 30), late_delete_round=20,
+    late_delete_threshold=0.3, max_models=16, lr=0.08, seed=0)
+
+HYPERGEOMETRIC = FedCDConfig(
+    n_devices=30, devices_per_round=15, local_epochs=2, score_window=3,
+    milestones=(5, 15, 25, 30), late_delete_round=20,
+    late_delete_threshold=0.3, max_models=16, lr=0.08, seed=0)

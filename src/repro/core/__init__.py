@@ -1,0 +1,7 @@
+"""FedCD core: the paper's contribution (scores, clone/delete, aggregation)."""
+from repro.core.scores import (ScoreState, init_scores, push_accuracies,
+                               normalized_scores, raw_scores,
+                               seed_clone_history)
+from repro.core.lifecycle import clone_at_milestone, apply_deletions
+from repro.core.aggregate import weighted_average
+from repro.core.registry import ModelRegistry

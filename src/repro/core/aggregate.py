@@ -1,0 +1,55 @@
+"""Score-weighted federated aggregation (paper eq 1).
+
+``w_m = Σ_i w_m_i · c_m_i / Σ_i c_m_i`` over the devices contributing to
+model m. (The paper's printed denominator Σ_m c_m_i is a typo — it equals
+1 after eq 3 and would make w_m a *sum*, not an average; the literal form
+is available behind ``literal_eq1=True`` for completeness. See DESIGN.md.)
+
+Two backends:
+  * pytree path (default): jnp einsum over a stacked (N, ...) update tree;
+  * Pallas path: fused weighted accumulation over flattened updates
+    (kernels/weighted_agg) — the server hot-spot for CNN-scale mode-A
+    aggregation; validated against this module in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(stacked_updates: Any, weights: jax.Array,
+                     literal_eq1: bool = False,
+                     use_kernel: bool = False) -> Any:
+    """stacked_updates: pytree with leading device axis N; weights (N,).
+
+    Devices with weight 0 contribute nothing (deleted/non-participating).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    denom = jnp.float32(1.0) if literal_eq1 else jnp.maximum(jnp.sum(w), 1e-12)
+
+    if use_kernel:
+        from repro.kernels.weighted_agg import ops as wa_ops
+        leaves, treedef = jax.tree_util.tree_flatten(stacked_updates)
+        outs = [wa_ops.weighted_agg(leaf, w, denom) for leaf in leaves]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def avg(leaf: jax.Array) -> jax.Array:
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        acc = jnp.sum(leaf.astype(jnp.float32) * wf, axis=0)
+        return (acc / denom).astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked_updates)
+
+
+def participation_weights(scores_c: np.ndarray, model_id: int,
+                          participating: np.ndarray,
+                          active: np.ndarray) -> np.ndarray:
+    """Per-device weight for aggregating model ``model_id`` this round:
+    c_m_i for participating devices that hold m, else 0."""
+    w = scores_c[:, model_id].copy()
+    w[~participating] = 0.0
+    w[~active[:, model_id]] = 0.0
+    return w

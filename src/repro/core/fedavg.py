@@ -1,0 +1,76 @@
+"""FedAvg baseline (McMahan et al. 2017) — the paper's comparison system.
+
+Identical client loop and data plumbing as FedCDServer so the comparison
+isolates the algorithm: one global model, uniform averaging over the
+participating devices' updates.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.config import FedCDConfig
+from repro.core.aggregate import weighted_average
+from repro.federated.simulation import make_eval, make_local_train, make_perms
+
+
+@dataclass
+class FedAvgRound:
+    round: int
+    test_acc: np.ndarray
+    val_acc: np.ndarray
+    comm_bytes: int
+    wall_s: float
+
+
+class FedAvgServer:
+    def __init__(self, cfg: FedCDConfig, init_params: Any,
+                 loss_fn: Callable, acc_fn: Callable,
+                 data: Dict[str, Any], batch_size: int = 64):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.data = data
+        self.batch_size = batch_size
+        self.n_devices = data["train"][0].shape[0]
+        self.params = init_params
+        self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
+        self.evaluate = make_eval(acc_fn)
+        self.metrics: List[FedAvgRound] = []
+        self._model_bytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(init_params))
+
+    def run_round(self, t: int) -> FedAvgRound:
+        t0 = time.time()
+        cfg = self.cfg
+        participating = np.zeros(self.n_devices, bool)
+        participating[self.rng.choice(self.n_devices, cfg.devices_per_round,
+                                      replace=False)] = True
+        xs, ys = self.data["train"]
+        perms = make_perms(self.rng, self.n_devices, xs.shape[1],
+                           self.batch_size, cfg.local_epochs)
+        trained = self.local_train(self.params, xs, ys, perms)
+        w = participating.astype(np.float32)
+        self.params = jax.tree.map(np.asarray, weighted_average(trained, w))
+        tx, ty = self.data["test"]
+        vx, vy = self.data["val"]
+        m = FedAvgRound(
+            round=t,
+            test_acc=np.asarray(self.evaluate(self.params, tx, ty)),
+            val_acc=np.asarray(self.evaluate(self.params, vx, vy)),
+            comm_bytes=2 * int(participating.sum()) * self._model_bytes,
+            wall_s=time.time() - t0)
+        self.metrics.append(m)
+        return m
+
+    def run(self, rounds: int, log_every: int = 0) -> List[FedAvgRound]:
+        for t in range(1, rounds + 1):
+            m = self.run_round(t)
+            if log_every and t % log_every == 0:
+                print(f"[fedavg] round {t:3d} "
+                      f"test_acc={m.test_acc.mean():.3f}")
+        return self.metrics

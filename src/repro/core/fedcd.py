@@ -1,0 +1,158 @@
+"""FedCD server orchestration — paper Algorithm 1, mode A (simulation).
+
+One ``FedCDServer.run_round`` = one line-for-line pass of Algorithm 1:
+sample K devices → each trains all its active models for E epochs →
+score-weighted aggregation per model (eq 1) → evaluate on validation
+data → update scores (eq 2-3) → deletions (eq 4 + late rule) → milestone
+cloning. Metrics needed by every paper figure/table are recorded in
+``self.metrics``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config import FedCDConfig
+from repro.core import quantize as qz
+from repro.core.aggregate import participation_weights, weighted_average
+from repro.core.lifecycle import apply_deletions, clone_at_milestone
+from repro.core.registry import ModelRegistry
+from repro.core.scores import (ScoreState, init_scores, normalized_scores,
+                               push_accuracies)
+from repro.federated.simulation import make_eval, make_local_train, make_perms
+
+
+@dataclass
+class RoundMetrics:
+    round: int
+    test_acc: np.ndarray            # (N,) best-model test accuracy per device
+    val_acc: np.ndarray             # (N,)
+    active_models: int              # total active (device, model) preferences
+    live_models: int                # models alive on the server
+    score_std: float                # mean over devices of σ(c_i) (Fig 9)
+    comm_bytes: int                 # up+down transport this round (§3.6)
+    wall_s: float
+    preferred: np.ndarray           # (N,) argmax-score model id (Fig 7)
+
+
+class FedCDServer:
+    def __init__(self, cfg: FedCDConfig, init_params: Any,
+                 loss_fn: Callable, acc_fn: Callable,
+                 data: Dict[str, Any], batch_size: int = 64,
+                 use_agg_kernel: bool = False):
+        """data: stacked device splits from ``partition.stack_devices``:
+        {"train": (xs (N,n,...), ys), "val": ..., "test": ...}."""
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.data = data
+        self.batch_size = batch_size
+        self.n_devices = data["train"][0].shape[0]
+        assert self.n_devices == cfg.n_devices, (self.n_devices, cfg.n_devices)
+        self.registry = ModelRegistry.create(init_params, cfg.max_models)
+        self.state = init_scores(cfg.n_devices, cfg.max_models,
+                                 cfg.score_window)
+        self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
+        self.evaluate = make_eval(acc_fn)
+        self.use_agg_kernel = use_agg_kernel
+        self.metrics: List[RoundMetrics] = []
+        self._model_bytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(init_params))
+
+    # -- transport accounting (paper §3.6) --------------------------------
+    def _transport_bytes(self, n_transfers: int) -> int:
+        if self.cfg.quantize_bits:
+            per = qz.compressed_bytes(self.registry.params[
+                self.registry.live_ids()[0]], self.cfg.quantize_bits)
+        else:
+            per = self._model_bytes
+        return n_transfers * per
+
+    def _maybe_compress(self, params: Any) -> Any:
+        return qz.roundtrip(params, self.cfg.quantize_bits)
+
+    # -- Algorithm 1 -------------------------------------------------------
+    def run_round(self, t: int) -> RoundMetrics:
+        t0 = time.time()
+        cfg = self.cfg
+        participating = np.zeros(self.n_devices, bool)
+        participating[self.rng.choice(self.n_devices, cfg.devices_per_round,
+                                      replace=False)] = True
+        c = normalized_scores(self.state)
+        xs, ys = self.data["train"]
+        n_examples = xs.shape[1]
+        transfers = 0
+
+        for m in self.registry.live_ids():
+            holders = self.state.active[:, m] & participating
+            if not holders.any():
+                continue
+            perms = make_perms(self.rng, self.n_devices, n_examples,
+                               self.batch_size, cfg.local_epochs)
+            trained = self.local_train(self.registry.params[m], xs, ys, perms)
+            w = participation_weights(c, m, participating, self.state.active)
+            new_params = weighted_average(trained, w,
+                                          use_kernel=self.use_agg_kernel)
+            self.registry.params[m] = self._maybe_compress(
+                jax.tree.map(np.asarray, new_params))
+            transfers += 2 * int(holders.sum())   # up + down per holder
+
+        # evaluate every live model on every device's validation set
+        accs = np.zeros((self.n_devices, cfg.max_models))
+        vx, vy = self.data["val"]
+        for m in self.registry.live_ids():
+            accs[:, m] = np.asarray(self.evaluate(self.registry.params[m],
+                                                  vx, vy))
+        self.state = push_accuracies(self.state, accs)
+        self.state, _ = apply_deletions(self.state, self.registry, t, cfg)
+        if t in cfg.milestones:
+            self.state, _ = clone_at_milestone(
+                self.state, self.registry, t, cfg, self.rng,
+                clone_params_fn=self._maybe_compress)
+            transfers += sum(int(self.state.active[:, m2].sum())
+                             for m2 in self.registry.live_ids())
+
+        metrics = self._collect(t, transfers, time.time() - t0)
+        self.metrics.append(metrics)
+        return metrics
+
+    def _collect(self, t: int, transfers: int, wall: float) -> RoundMetrics:
+        c = normalized_scores(self.state)
+        preferred = np.argmax(np.where(self.state.active, c, -1.0), axis=1)
+        tx, ty = self.data["test"]
+        vx, vy = self.data["val"]
+        test_acc = np.zeros(self.n_devices)
+        val_acc = np.zeros(self.n_devices)
+        for m in np.unique(preferred):
+            sel = preferred == m
+            if m not in self.registry.params:
+                continue
+            test_acc[sel] = np.asarray(self.evaluate(
+                self.registry.params[m], tx, ty))[sel]
+            val_acc[sel] = np.asarray(self.evaluate(
+                self.registry.params[m], vx, vy))[sel]
+        stds = []
+        for i in range(self.n_devices):
+            ci = c[i, self.state.active[i]]
+            stds.append(ci.std() if ci.size else 0.0)
+        return RoundMetrics(
+            round=t, test_acc=test_acc, val_acc=val_acc,
+            active_models=int(self.state.active.sum()),
+            live_models=len(self.registry.live_ids()),
+            score_std=float(np.mean(stds)),
+            comm_bytes=self._transport_bytes(transfers),
+            wall_s=wall, preferred=preferred)
+
+    def run(self, rounds: int, log_every: int = 0) -> List[RoundMetrics]:
+        for t in range(1, rounds + 1):
+            m = self.run_round(t)
+            if log_every and t % log_every == 0:
+                print(f"[fedcd] round {t:3d} live={m.live_models} "
+                      f"active={m.active_models} "
+                      f"test_acc={m.test_acc.mean():.3f} "
+                      f"score_std={m.score_std:.3f}")
+        return self.metrics

@@ -1,0 +1,77 @@
+"""Server-side model registry: genealogy and liveness of global models.
+
+The registry is the control plane of the FedCD population. Model ids are
+stable for the lifetime of a run (the paper counts deleted models in M);
+params of dead models are dropped eagerly to bound server storage
+(paper §3.6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class ModelEntry:
+    model_id: int
+    parent: Optional[int]
+    birth_round: int
+    alive: bool = True
+    death_round: Optional[int] = None
+
+
+@dataclass
+class ModelRegistry:
+    m_cap: int
+    entries: Dict[int, ModelEntry] = field(default_factory=dict)
+    params: Dict[int, Any] = field(default_factory=dict)
+
+    @classmethod
+    def create(cls, initial_params: Any, m_cap: int = 16) -> "ModelRegistry":
+        reg = cls(m_cap=m_cap)
+        reg.entries[0] = ModelEntry(0, None, 0)
+        reg.params[0] = initial_params
+        return reg
+
+    @property
+    def total_created(self) -> int:
+        """M in the paper: all models ever created (deleted included)."""
+        return len(self.entries)
+
+    def live_ids(self) -> List[int]:
+        return sorted(m for m, e in self.entries.items() if e.alive)
+
+    def allocate(self, parent: int, birth_round: int) -> Optional[int]:
+        """Next free slot id, or None when at capacity."""
+        mid = len(self.entries)
+        if mid >= self.m_cap:
+            return None
+        self.entries[mid] = ModelEntry(mid, parent, birth_round)
+        return mid
+
+    def clone(self, parent: int, birth_round: int, clone_params: Any
+              ) -> Optional[int]:
+        mid = self.allocate(parent, birth_round)
+        if mid is not None:
+            self.params[mid] = clone_params
+        return mid
+
+    def kill(self, model_id: int, round_: int) -> None:
+        e = self.entries[model_id]
+        if e.alive:
+            e.alive = False
+            e.death_round = round_
+            self.params.pop(model_id, None)
+
+    def genealogy(self) -> Dict[int, Optional[int]]:
+        return {m: e.parent for m, e in self.entries.items()}
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "m_cap": self.m_cap,
+            "entries": [
+                {"id": e.model_id, "parent": e.parent, "birth": e.birth_round,
+                 "alive": e.alive, "death": e.death_round}
+                for e in self.entries.values()
+            ],
+        }

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic datasets + non-IID archetype partitioners."""

@@ -1,0 +1,2 @@
+"""Federated runtime: vmapped device simulation (mode A) and cluster-scale
+sharded FedCD rounds (mode B). See DESIGN.md §3."""

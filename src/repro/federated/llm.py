@@ -1,0 +1,139 @@
+"""FedCD at LM scale (mode B, DESIGN.md §3): the paper's control plane
+(scores / clone / delete) driving compiled score-weighted train steps.
+
+Each round:
+  1. sample K participating clients (their scores weight the loss; 0 =
+     not participating — eq 1's mask);
+  2. every live global model runs one compiled mode-B round step
+     (score-weighted loss == eq 1 aggregation of per-client grads);
+  3. per-client token accuracy on a held-out stream -> eq 2-3 scores;
+  4. deletions (eq 4 + late rule) and milestone cloning on the registry.
+
+Works on one CPU device (tests/examples) and on a production mesh (the
+same step functions are what dryrun.py lowers at 256/512 chips).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, FedCDConfig
+from repro.core.lifecycle import apply_deletions, clone_at_milestone
+from repro.core.registry import ModelRegistry
+from repro.core.scores import (init_scores, normalized_scores,
+                               push_accuracies)
+from repro.data.tokens import lm_batch
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tf
+
+
+@dataclass
+class LLMRoundMetrics:
+    round: int
+    mean_loss: float
+    client_acc: np.ndarray          # (N,) best-model token accuracy
+    live_models: int
+    active_models: int
+    score_std: float
+    wall_s: float
+
+
+def make_acc_step(cfg: ArchConfig, n_clients: int, mesh=None,
+                  dp_axes=("data",)):
+    """Per-client next-token top-1 accuracy (the LM analogue of the
+    paper's validation accuracy)."""
+
+    def step(params, tokens, labels):
+        logits, _, _ = tf.lm_forward(cfg, params, tokens, mesh=mesh,
+                                     dp_axes=dp_axes)
+        pred = jnp.argmax(logits, axis=-1)
+        acc = (pred == labels).mean(axis=-1)          # (B,)
+        B = tokens.shape[0]
+        return acc.reshape(n_clients, B // n_clients).mean(axis=-1)
+
+    return step
+
+
+class FedLLMTrainer:
+    def __init__(self, arch: ArchConfig, fed: FedCDConfig, n_clients: int,
+                 per_client: int, seq: int, n_archetypes: int = 2,
+                 mesh=None, seed: int = 0):
+        self.arch, self.fed = arch, fed
+        self.n_clients, self.per_client, self.seq = n_clients, per_client, seq
+        self.n_archetypes = n_archetypes
+        self.rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        init = tf.init_lm(arch, key)
+        self.registry = ModelRegistry.create(init, fed.max_models)
+        self.state = init_scores(n_clients, fed.max_models, fed.score_window)
+        dp = ("data",) if mesh is None else tuple(
+            a for a in ("pod", "data") if a in mesh.axis_names)
+        self.train_step = jax.jit(steps_mod.make_train_step(
+            arch, mesh, dp, lr=fed.lr, remat=False))
+        self.acc_step = jax.jit(make_acc_step(arch, n_clients, mesh, dp))
+        self.metrics: List[LLMRoundMetrics] = []
+
+    def _batch(self):
+        return lm_batch(self.rng, self.n_clients, self.per_client, self.seq,
+                        self.arch.vocab_size, self.n_archetypes)
+
+    def run_round(self, t: int) -> LLMRoundMetrics:
+        t0 = time.time()
+        fed = self.fed
+        participating = np.zeros(self.n_clients, bool)
+        k = min(fed.devices_per_round, self.n_clients)
+        participating[self.rng.choice(self.n_clients, k, replace=False)] = True
+        c = normalized_scores(self.state)
+
+        tokens, labels = self._batch()
+        losses = []
+        for m in self.registry.live_ids():
+            w = c[:, m] * participating * self.state.active[:, m]
+            if w.sum() <= 0:
+                continue
+            params, met = self.train_step(
+                self.registry.params[m], jnp.asarray(tokens),
+                jnp.asarray(labels), jnp.asarray(w, jnp.float32), None)
+            self.registry.params[m] = params
+            losses.append(float(met["loss"]))
+
+        # validation stream (held-out draw from each client's archetype)
+        vt, vl = self._batch()
+        accs = np.zeros((self.n_clients, fed.max_models))
+        for m in self.registry.live_ids():
+            accs[:, m] = np.asarray(
+                self.acc_step(self.registry.params[m], jnp.asarray(vt),
+                              jnp.asarray(vl)))
+        self.state = push_accuracies(self.state, accs)
+        self.state, _ = apply_deletions(self.state, self.registry, t, fed)
+        if t in fed.milestones:
+            self.state, _ = clone_at_milestone(
+                self.state, self.registry, t, fed, self.rng,
+                clone_params_fn=lambda p: jax.tree.map(jnp.copy, p))
+
+        cn = normalized_scores(self.state)
+        best = np.max(np.where(self.state.active, accs, 0.0), axis=1)
+        stds = [cn[i, self.state.active[i]].std()
+                if self.state.active[i].sum() else 0.0
+                for i in range(self.n_clients)]
+        m = LLMRoundMetrics(
+            round=t, mean_loss=float(np.mean(losses)) if losses else 0.0,
+            client_acc=best, live_models=len(self.registry.live_ids()),
+            active_models=int(self.state.active.sum()),
+            score_std=float(np.mean(stds)), wall_s=time.time() - t0)
+        self.metrics.append(m)
+        return m
+
+    def run(self, rounds: int, log_every: int = 0):
+        for t in range(1, rounds + 1):
+            m = self.run_round(t)
+            if log_every and t % log_every == 0:
+                print(f"[fedcd-llm] round {t:3d} loss={m.mean_loss:.3f} "
+                      f"live={m.live_models} acc={m.client_acc.mean():.3f}",
+                      flush=True)
+        return self.metrics

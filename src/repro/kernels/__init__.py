@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+FedCD's performance-critical layers are (a) transport quantization of
+model payloads (paper §3.4) and (b) the score-weighted aggregation of
+client updates (paper eq 1). Each kernel ships as a package:
+``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py`` (jitted public
+wrapper), ``ref.py`` (pure-jnp oracle used by tests and CPU fallbacks).
+
+Kernels target TPU (VMEM tiling, 128-lane alignment) and are validated on
+CPU via ``interpret=True``.
+"""

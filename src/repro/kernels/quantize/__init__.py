@@ -1,0 +1,1 @@
+from repro.kernels.quantize import kernel, ops, ref

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for blockwise symmetric quantization.
+
+Layout contract (shared with the Pallas kernel):
+  input  x        (R, D)  — callers reshape to 2D; D padded to ``block``
+  output q        (R, D_pad) int8
+  output scales   (R, D_pad // block) float32
+  q = clip(round(x / s), -qmax, qmax),  s = max|x_block| / qmax
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def to_2d(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    shape = x.shape
+    if x.ndim == 0:
+        return x.reshape(1, 1), shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def quantize_ref(x: jax.Array, bits: int = 8, block: int = 128
+                 ) -> Tuple[jax.Array, jax.Array]:
+    x2, _ = to_2d(x)
+    R, D = x2.shape
+    pad = (-D) % block
+    x2 = jnp.pad(x2.astype(jnp.float32), ((0, 0), (0, pad)))
+    nb = x2.shape[1] // block
+    xb = x2.reshape(R, nb, block)
+    qmax = _qmax(bits)
+    s = jnp.max(jnp.abs(xb), axis=2) / qmax                 # (R, nb)
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(xb / s[..., None]), -qmax, qmax)
+    return q.reshape(R, nb * block).astype(jnp.int8), s.astype(jnp.float32)
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, shape, dtype,
+                   block: int = 128) -> jax.Array:
+    R, Dp = q.shape
+    nb = Dp // block
+    x = q.astype(jnp.float32).reshape(R, nb, block) * scales[..., None]
+    x = x.reshape(R, Dp)
+    d_last = shape[-1] if len(shape) else 1
+    x = x[:, :d_last] if len(shape) else x[0, :1]
+    return x.reshape(shape).astype(dtype)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused score-weighted aggregation (paper eq 1).
+
+``out[d] = Σ_i w_i · u_i[d] / denom`` over N client payloads without
+materializing the weighted copies — the N-way multiply-accumulate happens
+in VMEM registers.
+
+Tiling: grid over the payload dim D in tiles of TILE_D (=2048 lanes);
+each program streams all N client rows for its tile (N ≤ a few tens in
+FL rounds, so the (N, TILE_D) f32 tile = N·8 KiB sits comfortably in
+VMEM). A second fused variant consumes int8 payloads + per-block scales,
+dequantizing on the fly — aggregation of *compressed* client uploads,
+the beyond-paper optimization described in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 2048
+BLOCK = 128
+
+
+def _weighted_agg_kernel(u_ref, w_ref, d_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # (N, TILE_D)
+    w = w_ref[...].astype(jnp.float32)          # (N, 1)
+    denom = d_ref[0, 0]
+    o_ref[...] = (jnp.sum(u * w, axis=0, keepdims=True) / denom
+                  ).astype(o_ref.dtype)
+
+
+def _dequant_agg_kernel(q_ref, s_ref, w_ref, d_ref, o_ref, *, block: int):
+    q = q_ref[...].astype(jnp.float32)          # (N, TILE_D)
+    N, td = q.shape
+    nb = td // block
+    x = q.reshape(N, nb, block) * s_ref[...][:, :, None]
+    w = w_ref[...].astype(jnp.float32)          # (N, 1)
+    denom = d_ref[0, 0]
+    acc = jnp.sum(x.reshape(N, td) * w, axis=0, keepdims=True)
+    o_ref[...] = (acc / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_agg_2d(updates: jax.Array, weights: jax.Array,
+                    denom: jax.Array, interpret: bool = True) -> jax.Array:
+    """updates (N, D) with D % TILE_D == 0; weights (N,); denom scalar."""
+    N, D = updates.shape
+    w2 = weights.reshape(N, 1).astype(jnp.float32)
+    d2 = jnp.reshape(denom.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=(D // TILE_D,),
+        in_specs=[
+            pl.BlockSpec((N, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0), memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        interpret=interpret,
+    )(updates, w2, d2)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequant_agg_2d(q: jax.Array, scales: jax.Array, weights: jax.Array,
+                   denom: jax.Array, block: int = BLOCK,
+                   interpret: bool = True) -> jax.Array:
+    """q (N, D) int8, scales (N, D // block) f32 -> (D,) f32 aggregate."""
+    N, D = q.shape
+    w2 = weights.reshape(N, 1).astype(jnp.float32)
+    d2 = jnp.reshape(denom.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        functools.partial(_dequant_agg_kernel, block=block),
+        grid=(D // TILE_D,),
+        in_specs=[
+            pl.BlockSpec((N, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((N, TILE_D // block), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0), memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        interpret=interpret,
+    )(q, scales, w2, d2)[0]

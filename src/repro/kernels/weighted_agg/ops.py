@@ -1,0 +1,38 @@
+"""Public wrappers for the weighted-aggregation kernels (pytree leaves)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_agg import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def weighted_agg(stacked_leaf: jax.Array, weights: jax.Array,
+                 denom: jax.Array) -> jax.Array:
+    """stacked_leaf (N, ...) -> weighted average with original trailing shape."""
+    N = stacked_leaf.shape[0]
+    tail = stacked_leaf.shape[1:]
+    flat = stacked_leaf.reshape(N, -1).astype(jnp.float32)
+    D = flat.shape[1]
+    pad = (-D) % K.TILE_D
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = K.weighted_agg_2d(flat, weights, jnp.asarray(denom),
+                            interpret=not _on_tpu())
+    return out[:D].reshape(tail).astype(stacked_leaf.dtype)
+
+
+def dequant_agg(q: jax.Array, scales: jax.Array, weights: jax.Array,
+                denom: jax.Array, block: int = 128) -> jax.Array:
+    """Aggregate compressed payloads directly. q (N, D), D % block == 0."""
+    N, D = q.shape
+    pad = (-D) % K.TILE_D
+    qp = jnp.pad(q, ((0, 0), (0, pad)))
+    sp = jnp.pad(scales, ((0, 0), (0, (qp.shape[1] // block)
+                                   - scales.shape[1])))
+    out = K.dequant_agg_2d(qp, sp, weights, jnp.asarray(denom),
+                           block=block, interpret=not _on_tpu())
+    return out[:D]

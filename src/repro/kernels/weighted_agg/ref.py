@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for score-weighted aggregation (paper eq 1).
+
+updates (N, D) f32, weights (N,) f32, denom scalar ->
+    out (D,) = sum_i w_i * u_i / denom
+Fused variant with int8 inputs: dequantize per 128-block then accumulate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(updates: jax.Array, weights: jax.Array,
+                     denom: jax.Array) -> jax.Array:
+    acc = jnp.einsum("nd,n->d", updates.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return acc / denom
+
+
+def dequant_agg_ref(q: jax.Array, scales: jax.Array, weights: jax.Array,
+                    denom: jax.Array, block: int = 128) -> jax.Array:
+    """q (N, D) int8, scales (N, D//block) f32 -> (D,) f32."""
+    N, D = q.shape
+    nb = D // block
+    x = q.astype(jnp.float32).reshape(N, nb, block) * scales[..., None]
+    return weighted_agg_ref(x.reshape(N, D), weights, denom)

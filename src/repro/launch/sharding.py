@@ -1,0 +1,170 @@
+"""Sharding rules: params (megatron-style FSDP x TP) and caches (auto).
+
+Baseline policy recorded in EXPERIMENTS.md §Perf; the hillclimb iterates
+on it. Conventions (dp = ('pod','data') axes merged, tp = 'model'):
+
+* column-parallel 2D weights (qkv, mlp-in, ...):  P(dp, tp)
+* row-parallel 2D weights (wo, w_down, ...):      P(tp, dp)
+* expert tensors (E, d, f):                       E over tp (expert par.)
+* embed (V, d):  V over tp (vocab-parallel);  lm_head (d, V): V over tp
+* norms / small vectors / router: replicated
+* stacked layer dims (scan segments) are never sharded
+
+Caches and optimizer states inherit from generic auto rules: batch dim
+over dp when divisible, the widest remaining dim over tp.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig
+from repro.launch.mesh import dp_axes_of, dp_size
+
+ROW_PARALLEL = {"wo", "w_down", "w_out", "w_ff2", "fc2", "ob", "cb", "qb"}
+REPLICATED = {"scale", "bias", "A_log", "D", "dt_bias", "f_bias", "conv_b",
+              "router", "pos", "index"}
+
+
+def _n_stack_dims(path: str) -> int:
+    if "mamba_groups" in path:
+        return 2
+    for tag in ("segments", "mamba_tail", "lora", "enc_blocks", "dec_blocks",
+                "groups", "tail", "shared/", "self/", "cross/"):
+        if path.startswith(tag) or f"/{tag}" in path or path.startswith(
+                tag.rstrip("/")):
+            return 1
+    return 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+ATTN_WEIGHTS = {"wq", "wk", "wv", "wo", "wq_a", "wq_b", "wkv_a", "wk_b",
+                "wv_b"}
+
+
+def param_spec(cfg: ArchConfig, path: str, shape: Tuple[int, ...],
+               dp: Tuple[str, ...], tp: str, tp_size: int,
+               policy: str = "train") -> P:
+    """Sharding spec for one parameter leaf (shape EXCLUDES stack dims)."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if name in REPLICATED or nd <= 1:
+        return P(*([None] * nd))
+    if policy == "decode_2d" and nd == 2 and name not in ATTN_WEIGHTS:
+        # decode: weights never move — 2D tensor-parallel over BOTH axes;
+        # XLA replicates the (tiny) per-token activations instead of
+        # all-gathering hundreds of GB of weights per token (§Perf)
+        dpm = tuple([*dp, tp])
+        if name == "table":
+            return P(dpm, None)
+        if name == "lm_head":
+            return P(None, dpm)
+        if name in ROW_PARALLEL:
+            return P(dpm, None)
+        return P(None, dpm)
+    if name == "table":                      # embedding (V, d): vocab-parallel
+        return P(tp, None)
+    if name == "lm_head":
+        return P(None, tp)
+    if "moe" in path and nd == 3:            # (E, d, f) expert-parallel
+        if name in ("w_gate", "w_up"):
+            return P(tp, dp, None)
+        return P(tp, None, dp)               # w_down (E, f, d)
+    if name == "conv_w":                     # (W, D) depthwise
+        return P(None, tp) if shape[1] % tp_size == 0 else P(None, None)
+    if name == "r" and nd == 4:              # slstm recurrent (4, H, dh, dh)
+        return P(None, None, None, None)
+    if nd == 2:
+        # divisibility is re-validated against actual axis sizes by
+        # param_shardings after this returns
+        if name in ROW_PARALLEL:
+            return P(tp, dp)
+        return P(dp, tp)
+    return P(*([None] * nd))
+
+
+def param_shardings(cfg: ArchConfig, params_shape: Any,
+                    mesh: jax.sharding.Mesh, policy: str = "train") -> Any:
+    """Pytree of NamedSharding matching ``jax.eval_shape(init_lm, ...)``."""
+    dp = dp_axes_of(mesh)
+    dpn = dp_size(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    tpn = mesh.shape.get("model", 1)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        nstack = min(_n_stack_dims(ps), max(leaf.ndim - 1, 0))
+        inner = leaf.shape[nstack:]
+        spec = param_spec(cfg, ps, inner, dp, tp, tpn, policy)
+        # re-validate divisibility against actual sizes
+        parts = list(spec)
+        fixed = []
+        for dim, s in zip(inner, parts):
+            if s is None:
+                fixed.append(None)
+            else:
+                size = (dpn if s == dp else
+                        dpn * tpn if isinstance(s, tuple) and tp in s else
+                        tpn)
+                fixed.append(s if dim % size == 0 else None)
+        full = P(*([None] * nstack + fixed))
+        out.append(NamedSharding(mesh, full))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def auto_shardings(tree_shape: Any, mesh: jax.sharding.Mesh,
+                   skip_leading: int = 1, batch_dim_first: bool = True) -> Any:
+    """Generic rule for caches/states: dp on the first divisible dim
+    (usually batch), tp on the last remaining divisible dim."""
+    dp = dp_axes_of(mesh)
+    dpn = dp_size(mesh)
+    tpn = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        nstack = min(_n_stack_dims(ps), max(leaf.ndim - 1, 0))
+        name = ps.split("/")[-1]
+        nd = leaf.ndim
+        spec = [None] * nd
+        if name in ("pos", "index") or nd - nstack < 1:
+            return NamedSharding(mesh, P(*spec))
+        dims = list(range(nstack, nd))
+        used = set()
+        if batch_dim_first and dims:
+            b = dims[0]
+            if leaf.shape[b] % dpn == 0 and leaf.shape[b] > 1:
+                spec[b] = dp
+                used.add(b)
+        for d in reversed(dims):
+            if d in used:
+                continue
+            if leaf.shape[d] % tpn == 0 and leaf.shape[d] >= tpn:
+                spec[d] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def batch_spec(mesh: jax.sharding.Mesh, batch: int, ndim: int
+               ) -> NamedSharding:
+    """Activation/input sharding: batch over dp when divisible."""
+    dp = dp_axes_of(mesh)
+    lead = dp if batch % dp_size(mesh) == 0 else None
+    return NamedSharding(mesh, P(lead, *([None] * (ndim - 1))))
+
+
+def replicated(mesh: jax.sharding.Mesh, ndim: int = 0) -> NamedSharding:
+    return NamedSharding(mesh, P(*([None] * ndim)))

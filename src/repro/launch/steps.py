@@ -1,0 +1,186 @@
+"""Step builders for training (FedCD mode-B round), prefill, and decode.
+
+``make_train_step`` is the cluster-scale FedCD round (DESIGN.md §3):
+clients are contiguous row-groups of the global batch; eq 1's
+score-weighted aggregation of per-client gradients is realized as a
+score-weighted loss — mathematically identical for E=1 because
+aggregation is linear in client gradients — so the collective XLA emits
+*is* the paper's aggregation (a weighted reduce over the dp axes).
+Multiple global models are a host-level loop over this same compiled step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models.common import softmax_cross_entropy
+from repro.optim import sgd_update
+from repro.sharding_hints import sharding_hints
+
+
+def client_weights_per_row(client_scores: jax.Array, batch: int) -> jax.Array:
+    """Expand per-client FedCD scores c_i to per-row loss weights that sum
+    to 1 (eq 1 numerator/denominator in one step)."""
+    n_clients = client_scores.shape[0]
+    per = batch // n_clients
+    w = jnp.repeat(client_scores, per)                      # (B,)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def _lm_loss(cfg: ArchConfig, params, tokens, labels, row_w, mesh, dp_axes,
+             frames=None, remat=True):
+    if cfg.family == "audio":
+        logits, hidden = ed.encdec_forward(cfg, params, frames, tokens)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        logits, hidden, aux = tf.lm_forward(cfg, params, tokens, mesh=mesh,
+                                            dp_axes=dp_axes, remat=remat)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean(axis=-1)                       # (B,)
+    loss = jnp.sum(nll * row_w)
+    if cfg.mtp and "mtp" in params:
+        # predict t+2: condition on emb(t+1)=labels, target labels shifted
+        mtp_lg = tf.mtp_logits(cfg, params, hidden, labels, mesh, dp_axes)
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        lz = jax.nn.logsumexp(mtp_lg, axis=-1)
+        gd = jnp.take_along_axis(mtp_lg, mtp_labels[..., None], axis=-1)[..., 0]
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        mtp_nll = ((lz - gd) * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+        loss = loss + 0.3 * jnp.sum(mtp_nll * row_w)
+    return loss + aux, (loss, aux)
+
+
+def quantize_grads(grads, bits: int = 8):
+    """Paper §3.4 applied to the aggregation payload: blockwise-int8
+    round-trip of the gradient tree (what crosses the wire in a FedCD
+    round). Traceable (pure jnp), so it lowers inside the step; scalar /
+    tiny leaves pass through."""
+    from repro.kernels.quantize import ref as qref
+
+    def rt(g):
+        if g.ndim == 0 or g.size < 128:
+            return g
+        q, s = qref.quantize_ref(g.reshape(1, -1), bits=bits)
+        flat = qref.dequantize_ref(q, s, (g.size,), jnp.float32)
+        return flat.reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(rt, grads)
+
+
+def make_train_step(cfg: ArchConfig, mesh=None,
+                    dp_axes: Tuple[str, ...] = ("data",),
+                    lr: float = 1e-2, remat: bool = True,
+                    microbatches: int = 1, hints: bool = False,
+                    grad_transport_bits: int = 0) -> Callable:
+    """FedCD mode-B round step.
+
+    step(params, tokens (B,S), labels (B,S), client_scores (n_clients,)
+         [, frames]) -> (params, metrics)
+
+    ``grad_transport_bits=8`` compresses the aggregated update before the
+    parameter update (transport-compressed FedCD round, paper §3.4).
+    """
+
+    def step(params, tokens, labels, client_scores, frames=None):
+        with sharding_hints(mesh if hints else None, dp_axes):
+            return _step_body(params, tokens, labels, client_scores, frames)
+
+    def _step_body(params, tokens, labels, client_scores, frames=None):
+        B = tokens.shape[0]
+        row_w = client_weights_per_row(client_scores, B)
+
+        def loss_fn(p, tok, lab, w, fr):
+            return _lm_loss(cfg, p, tok, lab, w, mesh, dp_axes, frames=fr,
+                            remat=remat)
+
+        if microbatches == 1:
+            grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(
+                params, tokens, labels, row_w, frames)
+        else:
+            mb = B // microbatches
+            def body(carry, xs):
+                g_acc, l_acc, a_acc = carry
+                tok, lab, w, fr = xs
+                g, (l, a) = jax.grad(loss_fn, has_aux=True)(
+                    params, tok, lab, w, fr)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
+                        a_acc + a), None
+            toks = tokens.reshape(microbatches, mb, -1)
+            labs = labels.reshape(microbatches, mb, -1)
+            ws = row_w.reshape(microbatches, mb)
+            frs = (frames.reshape(microbatches, mb, *frames.shape[1:])
+                   if frames is not None else
+                   jnp.zeros((microbatches, 1), jnp.float32))
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())),
+                (toks, labs, ws, frs))
+        if grad_transport_bits:
+            grads = quantize_grads(grads, grad_transport_bits)
+        params, _ = sgd_update(params, grads, {"step": jnp.zeros((), jnp.int32)},
+                               lr)
+        metrics = {"loss": loss, "aux": aux}
+        return params, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ArchConfig, n_clients: int, mesh=None,
+                   dp_axes: Tuple[str, ...] = ("data",)) -> Callable:
+    """Per-client validation loss — feeds the FedCD score update (eq 2)."""
+
+    def step(params, tokens, labels, frames=None):
+        if cfg.family == "audio":
+            logits, _ = ed.encdec_forward(cfg, params, frames, tokens)
+        else:
+            logits, _, _ = tf.lm_forward(cfg, params, tokens, mesh=mesh,
+                                         dp_axes=dp_axes)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = (logz - gold).mean(axis=-1)                   # (B,)
+        B = tokens.shape[0]
+        per_client = nll.reshape(n_clients, B // n_clients).mean(axis=-1)
+        return per_client
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None,
+                      dp_axes: Tuple[str, ...] = ("data",),
+                      hints: bool = False) -> Callable:
+    def step(params, tokens, frames=None):
+        with sharding_hints(mesh if hints else None, dp_axes):
+            if cfg.family == "audio":
+                logits, _ = ed.encdec_forward(cfg, params, frames, tokens)
+            else:
+                logits, _, _ = tf.lm_forward(cfg, params, tokens, mesh=mesh,
+                                             dp_axes=dp_axes)
+            return logits[:, -1, :]        # next-token logits
+    return step
+
+
+def make_serve_step(cfg: ArchConfig, window: int = 0, mesh=None,
+                    dp_axes: Tuple[str, ...] = ("data",),
+                    hints: bool = False) -> Callable:
+    """One-token batched decode against a KV/state cache."""
+
+    def step(params, caches, tokens):
+        with sharding_hints(mesh if hints else None, dp_axes):
+            if cfg.family == "audio":
+                logits, caches = ed.encdec_decode(cfg, params, tokens,
+                                                  caches, window)
+            else:
+                logits, caches = tf.lm_decode(cfg, params, tokens, caches,
+                                              window=window, mesh=mesh,
+                                              dp_axes=dp_axes)
+            return logits[:, -1, :], caches
+
+    return step

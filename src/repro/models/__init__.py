@@ -1,0 +1,1 @@
+"""Model substrate: functional JAX layers for all assigned architectures."""

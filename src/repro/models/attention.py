@@ -1,0 +1,202 @@
+"""GQA attention with qk-norm, sliding windows, and ring-buffer KV caches.
+
+Three execution paths:
+
+* ``naive``   — materializes (S, T) scores; used for short sequences/tests.
+* ``chunked`` — online-softmax over KV blocks (lax.scan), O(S * block)
+  memory; auto-selected for long prefill so 32k contexts lower without an
+  S^2 score tensor. This is the pure-JAX flash-attention formulation; the
+  paper has no attention-level contribution so we deliberately leave the
+  kernel to XLA rather than hand-writing Pallas here (see DESIGN.md §6).
+* ``decode``  — single-query attention against a (ring-buffer) cache.
+
+Cache layout: ``{"k": (B, C, Kv, hd), "v": (B, C, Kv, hd),
+"pos": (C,) absolute position per slot (-1 = empty), "index": ()}``.
+For sliding-window long-context decode, C == window and writes wrap.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.common import (Params, apply_rope, init_rmsnorm,
+                                 normal_init, rmsnorm)
+from repro.sharding_hints import constrain
+
+NEG_INF = -1e30
+CHUNKED_THRESHOLD = 2048
+KV_BLOCK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_attention(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    H, Kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": normal_init(ks[0], (d, H * hd), dtype),
+        "wk": normal_init(ks[1], (d, Kv * hd), dtype),
+        "wv": normal_init(ks[2], (d, Kv * hd), dtype),
+        "wo": normal_init(ks[3], (H * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core math
+# ---------------------------------------------------------------------------
+def _project_qkv(params: Params, cfg: ArchConfig, x: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    # keep heads on the model axis through the reshape (hillclimb iter 1:
+    # without this SPMD replicates attention compute across tp)
+    q = constrain(q, ("dp", None, "tp", None))
+    k = constrain(k, ("dp", None, "tp", None))
+    v = constrain(v, ("dp", None, "tp", None))
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,S,H,hd), k (B,T,Kv,hd) -> scores (B,Kv,G,S,T)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                      preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs (B,Kv,G,S,T), v (B,T,Kv,hd) -> (B,S,H,hd)."""
+    B, Kv, G, S, _ = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Kv * G, v.shape[-1])
+
+
+def _naive_attention(q, k, v, q_positions, kv_positions, window: int) -> jax.Array:
+    scores = _gqa_scores(q, k)
+    causal = kv_positions[None, :] <= q_positions[:, None]
+    mask = causal
+    if window:
+        mask = mask & (kv_positions[None, :] > q_positions[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v).astype(v.dtype)
+
+
+def _chunked_attention(q, k, v, q_positions, kv_positions, window: int,
+                       kv_block: int = KV_BLOCK) -> jax.Array:
+    """Online-softmax over KV blocks. Memory O(S * kv_block) instead of O(S^2)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    pad = (-T) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    n_blocks = k.shape[1] // kv_block
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+
+    def body(carry, inputs):
+        acc, m, denom = carry
+        kb, vb, pb = inputs  # (B, kb, Kv, hd), (B, kb, Kv, hd), (kb,)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb,
+                       preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+        valid = (pb[None, :] <= q_positions[:, None]) & (pb[None, :] >= 0)
+        if window:
+            valid &= pb[None, :] > q_positions[:, None] - window
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        # (hillclimb: a bf16 cast of p before the PV matmul was tried and
+        # REFUTED — the extra convert materializes more traffic than the
+        # bf16 operand saves; see EXPERIMENTS.md §Perf)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vb.astype(jnp.float32))
+        denom = denom * scale + jnp.sum(p, axis=-1)
+        return (acc, m_new, denom), None
+
+    kb = k.reshape(B, n_blocks, kv_block, Kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, kv_block, Kv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(n_blocks, kv_block)
+    acc0 = jnp.zeros((B, Kv, G, S, v.shape[-1]), jnp.float32)
+    m0 = jnp.full((B, Kv, G, S), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, Kv, G, S), jnp.float32)
+    (acc, _, denom), _ = jax.lax.scan(body, (acc0, m0, d0), (kb, vb, pb))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, v.shape[-1]).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+def attention_forward(params: Params, cfg: ArchConfig, x: jax.Array,
+                      positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence (train/prefill) self-attention. x (B,S,d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if S > CHUNKED_THRESHOLD:
+        out = _chunked_attention(q, k, v, positions, positions, cfg.sliding_window)
+    else:
+        out = _naive_attention(q, k, v, positions, positions, cfg.sliding_window)
+    B_, S_, H, hd = out.shape
+    return jnp.einsum("bse,ed->bsd", out.reshape(B_, S_, H * hd), params["wo"])
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                  window: int = 0) -> Params:
+    C = min(max_len, window) if window else max_len
+    Kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((batch, C, Kv, hd), dtype),
+        "v": jnp.zeros((batch, C, Kv, hd), dtype),
+        "pos": jnp.full((C,), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_decode(params: Params, cfg: ArchConfig, x: jax.Array,
+                     cache: Params, window: int = 0) -> Tuple[jax.Array, Params]:
+    """One-token decode. x (B,1,d); cache as from ``init_kv_cache``."""
+    B = x.shape[0]
+    idx = cache["index"]
+    positions = idx[None].astype(jnp.int32)  # (1,)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    C = cache["k"].shape[1]
+    slot = idx % C if window else jnp.minimum(idx, C - 1)
+    knew = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    vnew = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    pnew = cache["pos"].at[slot].set(idx)
+    scores = _gqa_scores(q, knew)  # (B,Kv,G,1,C)
+    valid = (pnew >= 0) & (pnew <= idx)
+    if window:
+        valid &= pnew > idx - window
+    scores = jnp.where(valid[None, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, vnew).astype(x.dtype)
+    H, hd = out.shape[2], out.shape[3]
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, H * hd), params["wo"])
+    new_cache = {"k": knew, "v": vnew, "pos": pnew, "index": idx + 1}
+    return y, new_cache

@@ -1,0 +1,138 @@
+"""Shared building blocks: norms, RoPE, embeddings, SwiGLU MLP, inits.
+
+All modules are pure functions over parameter pytrees (nested dicts of
+jnp arrays). ``init_*`` builds params; ``apply`` functions are traceable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str) -> jnp.dtype:
+    return jnp.dtype(name)
+
+
+def normal_init(key: jax.Array, shape, dtype, stddev: float = 0.02) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension (``rot = fraction*hd``)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """Rotate the leading ``fraction`` of the last dim.
+
+    x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S).
+    """
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta, fraction)
+    rot = inv.shape[0] * 2
+    angles = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]   # (..., S, 1, rot/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    y2 = x1.astype(jnp.float32) * sin + x2.astype(jnp.float32) * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([yr, xp], axis=-1) if rot < hd else yr
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key: jax.Array, vocab: int, dim: int, dtype) -> Params:
+    return {"table": normal_init(key, (vocab, dim), dtype)}
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table.T (fp32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x, params["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff), dtype),
+        "w_up": normal_init(k2, (d_model, d_ff), dtype),
+        "w_down": normal_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(params: Params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (..., V) fp32; labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda a: a.astype(dtype), tree)
+
+
+def tree_size(tree: Any) -> int:
+    return sum(a.size for a in jax.tree.leaves(tree))

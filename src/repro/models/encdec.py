@@ -1,0 +1,192 @@
+"""Whisper-style encoder–decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB (see frontends.py): the encoder consumes
+pre-computed frame embeddings (B, source_len, d_model). Deviation from
+Whisper noted in DESIGN.md: we use RoPE in self-attention instead of
+learned/sinusoidal absolute embeddings so the backbone machinery is shared
+with the decoder-only architectures.
+
+Decode: self-attention KV cache (length = target max_len) + cross-attention
+K/V computed once from the encoder output and carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import attention as attn
+from repro.models.common import (Params, apply_mlp, embed, init_embedding,
+                                 init_mlp, init_rmsnorm, normal_init, rmsnorm,
+                                 unembed)
+
+
+def _init_cross_attention(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    return attn.init_attention(key, cfg, dtype)
+
+
+def _cross_attention(params: Params, cfg: ArchConfig, x: jax.Array,
+                     k: jax.Array, v: jax.Array) -> jax.Array:
+    """q from x (B,S,d); precomputed k/v (B,T,Kv,hd). Bidirectional."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(
+        B, S, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    scores = attn._gqa_scores(q, k)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = attn._gqa_out(probs, v).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, cfg.n_heads * hd),
+                      params["wo"])
+
+
+def _cross_kv(params: Params, cfg: ArchConfig, enc: jax.Array):
+    B, T, _ = enc.shape
+    hd = cfg.resolved_head_dim()
+    k = jnp.einsum("btd,de->bte", enc, params["wk"]).reshape(
+        B, T, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,de->bte", enc, params["wv"]).reshape(
+        B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def _init_enc_block(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"norm1": init_rmsnorm(d, dtype),
+            "attn": attn.init_attention(k1, cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(k2, d, cfg.d_ff, dtype)}
+
+
+def _init_dec_block(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"norm1": init_rmsnorm(d, dtype),
+            "self_attn": attn.init_attention(k1, cfg, dtype),
+            "norm_x": init_rmsnorm(d, dtype),
+            "cross_attn": _init_cross_attention(k3, cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(k2, d, cfg.d_ff, dtype)}
+
+
+def init_encdec(cfg: ArchConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    n_enc = cfg.encdec.n_enc_layers
+
+    def stack(k, n, f):
+        return jax.vmap(f)(jax.random.split(k, n))
+
+    p: Params = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": stack(ks[1], n_enc,
+                            lambda kk: _init_enc_block(kk, cfg, dtype)),
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "dec_blocks": stack(ks[2], cfg.n_layers,
+                            lambda kk: _init_dec_block(kk, cfg, dtype)),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def _bidir_attention(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Encoder self-attention (no causal mask)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = attn._project_qkv(params, cfg, x, positions)
+    scores = attn._gqa_scores(q, k)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = attn._gqa_out(probs, v).astype(x.dtype)
+    H, hd = out.shape[2], out.shape[3]
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), params["wo"])
+
+
+def encode(cfg: ArchConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames (B, source_len, d_model) from the stub frontend."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(carry, bp):
+        h = rmsnorm(bp["norm1"], carry, cfg.norm_eps)
+        carry = carry + _bidir_attention(bp["attn"], cfg, h)
+        h = rmsnorm(bp["norm2"], carry, cfg.norm_eps)
+        return carry + apply_mlp(bp["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward(cfg: ArchConfig, params: Params, frames: jax.Array,
+                   tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced decode over full target. Returns (logits, hidden)."""
+    enc = encode(cfg, params, frames)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, bp):
+        h = rmsnorm(bp["norm1"], carry, cfg.norm_eps)
+        carry = carry + attn.attention_forward(bp["self_attn"], cfg, h,
+                                               positions)
+        h = rmsnorm(bp["norm_x"], carry, cfg.norm_eps)
+        k, v = _cross_kv(bp["cross_attn"], cfg, enc)
+        carry = carry + _cross_attention(bp["cross_attn"], cfg, h, k, v)
+        h = rmsnorm(bp["norm2"], carry, cfg.norm_eps)
+        return carry + apply_mlp(bp["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (unembed(params["embed"], h) if cfg.tie_embeddings
+              else jnp.einsum("...d,dv->...v", h, params["lm_head"],
+                              preferred_element_type=jnp.float32))
+    return logits, x
+
+
+def init_encdec_caches(cfg: ArchConfig, params: Params, frames: jax.Array,
+                       max_len: int, window: int = 0) -> Any:
+    """Build decode caches: self-attn KV + precomputed cross K/V per layer."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = frames.shape[0]
+    enc = encode(cfg, params, frames)
+
+    def per_layer(bp):
+        k, v = _cross_kv(bp["cross_attn"], cfg, enc)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(per_layer)(
+        jax.tree.map(lambda a: a, params["dec_blocks"]))
+    self_cache = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+        attn.init_kv_cache(cfg, B, max_len, dtype, window))
+    return {"self": self_cache, "cross": cross}
+
+
+def encdec_decode(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                  caches: Any, window: int = 0) -> Tuple[jax.Array, Any]:
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(carry, xs):
+        bp, sc, cc = xs
+        h = rmsnorm(bp["norm1"], carry, cfg.norm_eps)
+        a, sc = attn.attention_decode(bp["self_attn"], cfg, h, sc, window)
+        carry = carry + a
+        h = rmsnorm(bp["norm_x"], carry, cfg.norm_eps)
+        carry = carry + _cross_attention(bp["cross_attn"], cfg, h,
+                                         cc["k"], cc["v"])
+        h = rmsnorm(bp["norm2"], carry, cfg.norm_eps)
+        return carry + apply_mlp(bp["mlp"], h), sc
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"],
+                                         caches["self"], caches["cross"]))
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (unembed(params["embed"], h) if cfg.tie_embeddings
+              else jnp.einsum("...d,dv->...v", h, params["lm_head"],
+                              preferred_element_type=jnp.float32))
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,40 @@
+"""STUB modality frontends (the one allowed carve-out, see brief).
+
+``[audio]`` (whisper) and ``[vlm]`` (chameleon) architectures consume
+*pre-computed* frame/patch embeddings. These helpers produce the
+ShapeDtypeStructs for ``input_specs()`` and synthetic embeddings for smoke
+tests — we are NOT implementing a mel+conv codec or a ViT.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+
+def audio_frame_spec(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """Whisper conv frontend output: (B, source_len, d_model)."""
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.encdec.source_len, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+
+
+def synthetic_audio_frames(key: jax.Array, cfg: ArchConfig, batch: int):
+    return jax.random.normal(
+        key, (batch, cfg.encdec.source_len, cfg.d_model),
+        jnp.dtype(cfg.compute_dtype))
+
+
+def vision_tokens(key: jax.Array, cfg: ArchConfig, batch: int, seq: int,
+                  image_fraction: float = 0.25) -> jax.Array:
+    """Chameleon early fusion: VQ image tokens interleaved with text tokens.
+
+    Both live in the same vocab (image codes occupy the upper range), so the
+    stub just samples token ids with the right mixture.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    img_lo = int(cfg.vocab_size * 0.75)
+    text = jax.random.randint(k1, (batch, seq), 0, img_lo)
+    image = jax.random.randint(k2, (batch, seq), img_lo, cfg.vocab_size)
+    is_img = jax.random.bernoulli(k3, image_fraction, (batch, seq))
+    return jnp.where(is_img, image, text).astype(jnp.int32)

@@ -1,0 +1,188 @@
+"""Mamba2 block (SSD — state space duality, arXiv:2405.21060) for zamba2.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split
+into chunks of length ``Q``; intra-chunk terms are dense matmuls (MXU
+friendly) and inter-chunk terms propagate an (H, P, N) state with a
+``lax.scan`` over chunks — O(S) compute, no S^2 tensor.
+
+Decode keeps the recurrent state ``(B, H, P, N)`` and advances it one
+token per step: ``h' = exp(A dt) h + dt * B x``; ``y = C h + D x``.
+
+Sharding: the inner dim (heads) is sharded over the ``model`` axis by the
+launcher's param specs; the scan carries a per-shard state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.common import Params, init_rmsnorm, normal_init, rmsnorm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return s, d_in, n_heads
+
+
+def init_mamba2(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    s, d_in, H = _dims(cfg)
+    G, N = s.n_groups, s.state_dim
+    ks = jax.random.split(key, 5)
+    conv_dim = d_in + 2 * G * N
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": normal_init(ks[0], (cfg.d_model, 2 * d_in + 2 * G * N + H), dtype),
+        "conv_w": normal_init(ks[1], (s.conv_width, conv_dim), dtype, stddev=0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rmsnorm(d_in, dtype),
+        "w_out": normal_init(ks[2], (d_in, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    s, d_in, H = _dims(cfg)
+    G, N = s.n_groups, s.state_dim
+    z, rest = proj[..., :d_in], proj[..., d_in:]
+    xbc, dt = rest[..., :d_in + 2 * G * N], rest[..., d_in + 2 * G * N:]
+    return z, xbc, dt  # dt: (..., H)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. xbc (B,S,D); w (W,D). Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return jax.nn.silu(y + b), new_state
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) f32, A (H,) f32 (negative), Bm/Cm (B,S,G,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N) f32).
+    """
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_ = x.shape[1]
+    nc = S_ // Q
+    rep = H // G
+    # reshape to chunks; move chunk axis first for scan
+    xc = x.reshape(Bsz, nc, Q, H, Pd).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3).transpose(1, 0, 2, 3, 4)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3).transpose(1, 0, 2, 3, 4)
+
+    Af = A.astype(jnp.float32)  # (H,) negative
+
+    def chunk_step(h, inp):
+        xq, dtq, Bq, Cq = inp   # (B,Q,H,P),(B,Q,H),(B,Q,H,N),(B,Q,H,N)
+        dA = dtq * Af           # (B,Q,H)  log-decay per step
+        cum = jnp.cumsum(dA, axis=1)            # (B,Q,H)
+        total = cum[:, -1]                       # (B,H)
+        # intra-chunk (quadratic within chunk, Q x Q):
+        li = cum[:, :, None, :] - cum[:, None, :, :]       # (B,Q,Q,H) i>=j
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask BEFORE exp: exp of the (positive, growing) upper triangle
+        # overflows and where() would still backprop NaN through it
+        li = jnp.where(mask[None, :, :, None], li, -1e30)
+        decay = jnp.exp(li)
+        cb = jnp.einsum("bihn,bjhn->bijh", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))
+        att = cb * decay * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xq.astype(jnp.float32))
+        # contribution of carried state:
+        state_decay = jnp.exp(cum)                          # (B,Q,H)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", Cq.astype(jnp.float32)
+                             * state_decay[..., None], h)
+        # new state:
+        w = jnp.exp(total[:, None] - cum)                   # (B,Q,H)
+        dBx = jnp.einsum("bqhn,bqhp->bhpn",
+                         Bq.astype(jnp.float32) * (dtq * w)[..., None],
+                         xq.astype(jnp.float32))
+        h_new = h * jnp.exp(total)[..., None, None] + dBx
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None else h0
+    h_final, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S_, H, Pd)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def mamba2_forward(params: Params, cfg: ArchConfig, u: jax.Array,
+                   ) -> jax.Array:
+    """Full-sequence forward. u (B,S,d_model)."""
+    s, d_in, H = _dims(cfg)
+    G, N = s.n_groups, s.state_dim
+    proj = jnp.einsum("bsd,de->bse", u, params["w_in"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + G * N].reshape(*xbc.shape[:2], G, N)
+    Cm = xbc[..., d_in + G * N:].reshape(*xbc.shape[:2], G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = x.reshape(*x.shape[:2], H, s.head_dim)
+    A = -jnp.exp(params["A_log"])
+    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    y = y + xh * params["D"][:, None].astype(y.dtype)
+    y = y.reshape(*y.shape[:2], d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"])
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    s, d_in, H = _dims(cfg)
+    G, N = s.n_groups, s.state_dim
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_in + 2 * G * N), dtype),
+    }
+
+
+def mamba2_decode(params: Params, cfg: ArchConfig, u: jax.Array,
+                  cache: Params) -> Tuple[jax.Array, Params]:
+    """One-token decode. u (B,1,d_model); O(1) state update."""
+    s, d_in, H = _dims(cfg)
+    G, N = s.n_groups, s.state_dim
+    proj = jnp.einsum("bsd,de->bse", u, params["w_in"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_new = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 state=cache["conv"])
+    x = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + G * N].reshape(xbc.shape[0], G, N)
+    Cm = xbc[..., d_in + G * N:].reshape(xbc.shape[0], G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    xh = x[:, 0].reshape(x.shape[0], H, s.head_dim).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                 # (B,H)
+    h = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh * dt[..., None], xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + xh * params["D"][:, None]
+    y = y.reshape(y.shape[0], 1, d_in).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"ssm": h, "conv": conv_new}

@@ -1,0 +1,144 @@
+"""DeepSeek-V3 Multi-head Latent Attention (arXiv:2412.19437).
+
+Train/prefill: decompress the KV latent and run standard MHA over
+(nope+rope)-dim keys and v_head_dim values (chunked online-softmax for
+long sequences).
+
+Decode: *absorbed* form — the KV up-projections are folded into the query
+and output paths so the cache holds only the compressed latent
+``c_kv (B, C, kv_lora_rank)`` plus the shared ``k_rope (B, C, rope_dim)``.
+This is MLA's entire point: the cache is ~(512+64) per token instead of
+2 * H * head_dim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.attention import (CHUNKED_THRESHOLD, NEG_INF,
+                                    _chunked_attention, _naive_attention)
+from repro.models.common import (Params, apply_rope, init_rmsnorm,
+                                 normal_init, rmsnorm)
+from repro.sharding_hints import constrain
+
+
+def init_mla(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": normal_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dtype),
+        "wq_b": normal_init(ks[1], (m.q_lora_rank, H * qk), dtype),
+        "wkv_a": normal_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+        "wk_b": normal_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_dim), dtype),
+        "wv_b": normal_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim), dtype),
+        "wo": normal_init(ks[5], (H * m.v_head_dim, d), dtype),
+    }
+
+
+def _queries(params: Params, cfg: ArchConfig, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Return (q_nope (B,S,H,nope), q_rope (B,S,H,rope))."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    cq = rmsnorm(params["q_norm"],
+                 jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", cq, params["wq_b"]).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q_nope = constrain(q_nope, ("dp", None, "tp", None))
+    q_rope = constrain(q_rope, ("dp", None, "tp", None))
+    return q_nope, q_rope
+
+
+def _latents(params: Params, cfg: ArchConfig, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Return (c_kv (B,S,r) normalized, k_rope (B,S,1,rope) roped)."""
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = rmsnorm(params["kv_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]  # single shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(params: Params, cfg: ArchConfig, x: jax.Array,
+                positions: Optional[jax.Array] = None) -> jax.Array:
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, params["wk_b"]).reshape(
+        B, S, H, m.qk_nope_dim)
+    v = jnp.einsum("bsr,re->bse", c_kv, params["wv_b"]).reshape(
+        B, S, H, m.v_head_dim)
+    k_nope = constrain(k_nope, ("dp", None, "tp", None))
+    v = constrain(v, ("dp", None, "tp", None))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    attn = _chunked_attention if S > CHUNKED_THRESHOLD else _naive_attention
+    out = attn(q, k, v, positions, positions, cfg.sliding_window)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * m.v_head_dim),
+                      params["wo"])
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                   window: int = 0) -> Params:
+    m = cfg.mla
+    C = min(max_len, window) if window else max_len
+    return {
+        "c_kv": jnp.zeros((batch, C, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, C, m.qk_rope_dim), dtype),
+        "pos": jnp.full((C,), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
+               window: int = 0) -> Tuple[jax.Array, Params]:
+    """Absorbed one-token decode. x (B,1,d)."""
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    idx = cache["index"]
+    positions = idx[None].astype(jnp.int32)
+    q_nope, q_rope = _queries(params, cfg, x, positions)      # (B,1,H,·)
+    c_kv, k_rope = _latents(params, cfg, x, positions)        # (B,1,r),(B,1,1,rope)
+    C = cache["c_kv"].shape[1]
+    slot = idx % C if window else jnp.minimum(idx, C - 1)
+    ckv_new = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, slot, 0))
+    krope_new = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope[:, :, 0, :], (0, slot, 0))
+    pos_new = cache["pos"].at[slot].set(idx)
+
+    # absorb W_uk into q: q_eff (B,1,H,r)
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
+    scale = 1.0 / jnp.sqrt(float(m.qk_nope_dim + m.qk_rope_dim))
+    s_nope = jnp.einsum("bshr,btr->bhst", q_eff, ckv_new,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshe,bte->bhst", q_rope, krope_new,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale                        # (B,H,1,C)
+    valid = (pos_new >= 0) & (pos_new <= idx)
+    if window:
+        valid &= pos_new > idx - window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhst,btr->bshr", probs,
+                     ckv_new.astype(jnp.float32)).astype(x.dtype)
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", lat, wv_b)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, H * m.v_head_dim),
+                   params["wo"])
+    new_cache = {"c_kv": ckv_new, "k_rope": krope_new, "pos": pos_new,
+                 "index": idx + 1}
+    return y, new_cache

@@ -1,0 +1,45 @@
+"""Small MLP classifier — fast-CPU stand-in for the paper's CNN.
+
+The FedCD algorithm is model-agnostic; benchmarks default to this MLP so
+full 50-round experiments run in minutes on the 1-core container, while
+the 10-layer CNN (models/cnn.py, the paper's architecture) is exercised
+by tests and selectable with ``--model cnn`` in benchmarks/examples.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, normal_init
+
+
+def init_mlp_classifier(key: jax.Array, in_dim: int = 32 * 32 * 3,
+                        hidden: int = 128, n_classes: int = 10,
+                        dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": normal_init(k1, (in_dim, hidden), dtype, stddev=0.03),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": normal_init(k2, (hidden, n_classes), dtype, stddev=0.03),
+        "b2": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def apply_mlp_classifier(params: Params, x: jax.Array) -> jax.Array:
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params: Params, batch: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    x, y = batch
+    logits = apply_mlp_classifier(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_accuracy(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(apply_mlp_classifier(params, x), -1) == y)

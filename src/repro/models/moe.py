@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+TPU-native design (see DESIGN.md §4):
+
+* Routing (softmax top-k, load-balance aux loss) is computed in fp32
+  OUTSIDE the expert region so it is auto-sharded with the rest of the
+  network.
+* The routed-expert FFN runs inside ``jax.shard_map`` manual region over
+  the ``model`` mesh axis (expert parallelism): each model-shard owns
+  ``E_loc = E / model_parallelism`` experts, replicated across the data
+  axis. Tokens stay resident on their data shard — each (data, model)
+  shard dispatches ITS tokens to ITS experts, so the only collective the
+  layer introduces is one psum over ``model`` for the combine. No
+  all-to-all is required, and expert weights are never gathered.
+* Dispatch avoids materializing the (T*k, d) token copy: we scatter token
+  *indices* into the capacity buffer and gather once, bounding the
+  working set to (E_loc * C, d).
+* Tokens beyond per-expert capacity ``C = ceil(T_loc*k*cf/E)`` are
+  dropped (their combine weight is zero) — the standard Switch/GShard
+  discipline.
+
+Without a mesh (unit tests, CPU simulation) the same inner function runs
+with ``E_loc = E`` and no collective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig
+from repro.models.common import Params, init_mlp, apply_mlp, normal_init
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    m, d = cfg.moe, cfg.d_model
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": normal_init(ks[0], (d, m.n_experts), jnp.float32, stddev=0.006),
+        "w_gate": normal_init(ks[1], (m.n_experts, d, m.expert_ff), dtype),
+        "w_up": normal_init(ks[2], (m.n_experts, d, m.expert_ff), dtype),
+        "w_down": normal_init(ks[3], (m.n_experts, m.expert_ff, d), dtype),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[4], d, m.n_shared * m.expert_ff, dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts) + 1
+    return max(8, c + (-c) % 8)
+
+
+def _route(params: Params, cfg: ArchConfig, xf: jax.Array
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Return (ids (T,k) int32, weights (T,k) f32, aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    wts, ids = jax.lax.top_k(probs, m.top_k)
+    wts = wts / jnp.maximum(jnp.sum(wts, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    pe = jnp.mean(probs, axis=0)                       # (E,)
+    onehot = jax.nn.one_hot(ids[:, 0], m.n_experts, dtype=jnp.float32)
+    fe = jnp.mean(onehot, axis=0)
+    aux = m.n_experts * jnp.sum(fe * pe) * m.aux_coef
+    return ids.astype(jnp.int32), wts, aux
+
+
+def _expert_shard(xf: jax.Array, ids: jax.Array, wts: jax.Array,
+                  w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                  *, e0, cap: int, compute_dtype) -> jax.Array:
+    """Process one (data, model) shard. xf (T,d); local experts (E_loc,...)."""
+    T, d = xf.shape
+    E_loc = w_gate.shape[0]
+    k = ids.shape[1]
+    Tk = T * k
+    pair_expert = ids.reshape(Tk)
+    pair_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    pair_w = wts.reshape(Tk)
+
+    local = (pair_expert >= e0) & (pair_expert < e0 + E_loc)
+    le = jnp.where(local, pair_expert - e0, E_loc)      # E_loc = spill bucket
+    order = jnp.argsort(le, stable=True)
+    counts = jnp.bincount(le, length=E_loc + 1)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    rank_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[le[order]]
+    rank = jnp.zeros((Tk,), jnp.int32).at[order].set(rank_sorted)
+
+    valid = local & (rank < cap)
+    slot = jnp.where(valid, le * cap + rank, E_loc * cap)  # sentinel = OOB
+
+    # index buffer: which token sits in each capacity slot
+    tok_buf = jnp.zeros((E_loc * cap,), jnp.int32).at[slot].set(
+        pair_token, mode="drop")
+    w_buf = jnp.zeros((E_loc * cap,), jnp.float32).at[slot].set(
+        pair_w, mode="drop")
+
+    ebuf = jnp.take(xf, tok_buf, axis=0).reshape(E_loc, cap, d)
+    ebuf = ebuf.astype(compute_dtype)
+    g = jnp.einsum("ecd,edf->ecf", ebuf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", ebuf, w_up)
+    h = (jax.nn.silu(g) * u)
+    out = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * cap, d)
+
+    y = jnp.zeros((T, d), jnp.float32).at[tok_buf].add(
+        out.astype(jnp.float32) * w_buf[:, None], mode="drop")
+    return y.astype(xf.dtype)
+
+
+def apply_moe(params: Params, cfg: ArchConfig, x: jax.Array,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              dp_axes: Tuple[str, ...] = ("data",),
+              ep_axis: str = "model") -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN. x (B,S,d) -> (y (B,S,d), aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+
+    dp_total = 1
+    if mesh is not None:
+        for a in dp_axes:
+            if a in mesh.axis_names:
+                dp_total *= mesh.shape[a]
+    if (mesh is None or ep_axis not in mesh.axis_names
+            or (B * S) % dp_total != 0):
+        # single-shard path: also taken when the token count cannot be
+        # split over the dp axes (e.g. long_500k decode with batch 1)
+        ids, wts, aux = _route(params, cfg, xf)
+        cap = capacity(B * S, cfg)
+        y = _expert_shard(xf, ids, wts, params["w_gate"], params["w_up"],
+                          params["w_down"], e0=jnp.int32(0), cap=cap,
+                          compute_dtype=x.dtype)
+    else:
+        ep = mesh.shape[ep_axis]
+        assert m.n_experts % ep == 0, (cfg.name, m.n_experts, ep)
+        dp = dp_total
+        t_loc = max(1, (B * S) // dp)
+        cap = capacity(t_loc, cfg)
+        dspec = tuple(a for a in dp_axes if a in mesh.axis_names)
+
+        def shard_fn(xf_, router, wg, wu, wd):
+            # routing recomputed per shard (hillclimb iter: redundant
+            # compute is ~free, while routing at the region boundary
+            # forced f32 (T,d) all-reduces of the router path's values
+            # and cotangents across the model axis — see §Perf)
+            ids_, wts_, aux_ = _route({"router": router}, cfg, xf_)
+            e0 = jax.lax.axis_index(ep_axis).astype(jnp.int32) * (
+                m.n_experts // ep)
+            y_ = _expert_shard(xf_, ids_, wts_, wg, wu, wd, e0=e0, cap=cap,
+                               compute_dtype=x.dtype)
+            aux_ = jax.lax.pmean(aux_, dspec)
+            return jax.lax.psum(y_, ep_axis), aux_
+
+        y, aux = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(dspec, None), P(None, None),
+                      P(ep_axis, None, None), P(ep_axis, None, None),
+                      P(ep_axis, None, None)),
+            out_specs=(P(dspec, None), P()),
+        )(xf, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+
+    if m.n_shared:
+        y = y + apply_mlp(params["shared"], xf)
+    return y.reshape(B, S, d), aux

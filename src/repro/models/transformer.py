@@ -1,0 +1,455 @@
+"""Decoder-only LM assembly covering all assigned architecture families.
+
+Layers are grouped into *segments* of identical block kind; each segment
+is a ``lax.scan`` over stacked parameters (small HLO, fast compiles, and
+the production-standard layout for 61–126 layer models). Zamba2's hybrid
+layout (mamba backbone + one shared attention block re-applied at 13
+sites with per-site LoRA) gets a dedicated assembly.
+
+API:
+  init_lm(cfg, key)                          -> params
+  lm_forward(cfg, params, tokens|embeds,...) -> (logits, hidden, aux)
+  init_lm_caches(cfg, batch, max_len, ...)   -> caches
+  lm_decode(cfg, params, tokens, caches,...) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from itertools import groupby
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import config as C
+from repro.config import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as mb
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.common import (Params, embed, init_embedding, init_mlp,
+                                 init_rmsnorm, apply_mlp, normal_init,
+                                 rmsnorm, unembed)
+from repro import sharding_hints as hints
+
+
+# ---------------------------------------------------------------------------
+# Single-block init / apply
+# ---------------------------------------------------------------------------
+def _init_block(key: jax.Array, cfg: ArchConfig, kind: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    if kind == C.ATTN_MLP:
+        return {"norm1": init_rmsnorm(d, dtype),
+                "attn": attn.init_attention(k1, cfg, dtype),
+                "norm2": init_rmsnorm(d, dtype),
+                "mlp": init_mlp(k2, d, cfg.d_ff, dtype)}
+    if kind == C.ATTN_MOE:
+        return {"norm1": init_rmsnorm(d, dtype),
+                "attn": attn.init_attention(k1, cfg, dtype),
+                "norm2": init_rmsnorm(d, dtype),
+                "moe": moe_mod.init_moe(k2, cfg, dtype)}
+    if kind == C.MLA_MLP:
+        ff = cfg.moe.dense_ff or cfg.d_ff
+        return {"norm1": init_rmsnorm(d, dtype),
+                "attn": mla_mod.init_mla(k1, cfg, dtype),
+                "norm2": init_rmsnorm(d, dtype),
+                "mlp": init_mlp(k2, d, ff, dtype)}
+    if kind == C.MLA_MOE:
+        return {"norm1": init_rmsnorm(d, dtype),
+                "attn": mla_mod.init_mla(k1, cfg, dtype),
+                "norm2": init_rmsnorm(d, dtype),
+                "moe": moe_mod.init_moe(k2, cfg, dtype)}
+    if kind == C.MAMBA2:
+        return {"norm": init_rmsnorm(d, dtype),
+                "core": mb.init_mamba2(k1, cfg, dtype)}
+    if kind == C.MLSTM:
+        return {"norm": init_rmsnorm(d, dtype),
+                "core": xl.init_mlstm(k1, cfg, dtype)}
+    if kind == C.SLSTM:
+        return {"norm": init_rmsnorm(d, dtype),
+                "core": xl.init_slstm(k1, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _apply_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
+                 positions: Optional[jax.Array],
+                 mesh: Optional[jax.sharding.Mesh],
+                 dp_axes: Tuple[str, ...]) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (C.ATTN_MLP, C.ATTN_MOE, C.MLA_MLP, C.MLA_MOE):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        if kind in (C.MLA_MLP, C.MLA_MOE):
+            a = mla_mod.mla_forward(params["attn"], cfg, h, positions)
+        else:
+            a = attn.attention_forward(params["attn"], cfg, h, positions)
+        x = x + a
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if kind in (C.ATTN_MOE, C.MLA_MOE):
+            # pin the residual/token layout at the expert-parallel boundary
+            # so SPMD doesn't reshard (f32!) activations into shard_map
+            h = hints.constrain(h, ("dp", None, None))
+            f, aux = moe_mod.apply_moe(params["moe"], cfg, h, mesh, dp_axes)
+            f = hints.constrain(f, ("dp", None, None))
+        else:
+            f = apply_mlp(params["mlp"], h)
+        return x + f, aux
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    if kind == C.MAMBA2:
+        y = mb.mamba2_forward(params["core"], cfg, h)
+    elif kind == C.MLSTM:
+        y = xl.mlstm_forward(params["core"], cfg, h)
+    elif kind == C.SLSTM:
+        y = xl.slstm_forward(params["core"], cfg, h)
+    else:
+        raise ValueError(kind)
+    return x + y, aux
+
+
+def _init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      dtype, window: int) -> Params:
+    if kind in (C.ATTN_MLP, C.ATTN_MOE):
+        return attn.init_kv_cache(cfg, batch, max_len, dtype, window)
+    if kind in (C.MLA_MLP, C.MLA_MOE):
+        return mla_mod.init_mla_cache(cfg, batch, max_len, dtype, window)
+    if kind == C.MAMBA2:
+        return mb.init_mamba2_cache(cfg, batch, dtype)
+    if kind == C.MLSTM:
+        return xl.init_mlstm_cache(cfg, batch, dtype)
+    if kind == C.SLSTM:
+        return xl.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _decode_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
+                  cache: Params, window: int,
+                  mesh: Optional[jax.sharding.Mesh],
+                  dp_axes: Tuple[str, ...]) -> Tuple[jax.Array, Params]:
+    if kind in (C.ATTN_MLP, C.ATTN_MOE, C.MLA_MLP, C.MLA_MOE):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        if kind in (C.MLA_MLP, C.MLA_MOE):
+            a, cache = mla_mod.mla_decode(params["attn"], cfg, h, cache, window)
+        else:
+            a, cache = attn.attention_decode(params["attn"], cfg, h, cache,
+                                             window)
+        x = x + a
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if kind in (C.ATTN_MOE, C.MLA_MOE):
+            f, _ = moe_mod.apply_moe(params["moe"], cfg, h, mesh, dp_axes)
+        else:
+            f = apply_mlp(params["mlp"], h)
+        return x + f, cache
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    if kind == C.MAMBA2:
+        y, cache = mb.mamba2_decode(params["core"], cfg, h, cache)
+    elif kind == C.MLSTM:
+        y, cache = xl.mlstm_decode(params["core"], cfg, h, cache)
+    elif kind == C.SLSTM:
+        y, cache = xl.slstm_decode(params["core"], cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Segments (runs of identical layer kind -> one lax.scan each)
+# ---------------------------------------------------------------------------
+def segments(cfg: ArchConfig) -> List[Tuple[str, int]]:
+    return [(k, len(list(g))) for k, g in groupby(cfg.layout())]
+
+
+def _stack_init(key: jax.Array, n: int, init_one) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style shared attention block
+# ---------------------------------------------------------------------------
+def _init_shared_block(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"w_concat": normal_init(k3, (2 * d, d), dtype),
+            "norm1": init_rmsnorm(d, dtype),
+            "attn": attn.init_attention(k1, cfg, dtype),
+            "norm2": init_rmsnorm(d, dtype),
+            "mlp": init_mlp(k2, d, cfg.d_ff, dtype)}
+
+
+def _init_site_lora(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    r = cfg.shared_attn_lora_rank
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"qa": normal_init(k1, (d, r), dtype), "qb": jnp.zeros((r, H * hd), dtype),
+            "oa": normal_init(k2, (H * hd, r), dtype), "ob": jnp.zeros((r, d), dtype),
+            "ca": normal_init(k3, (2 * d, r), dtype), "cb": jnp.zeros((r, d), dtype)}
+
+
+def _shared_block_params(shared: Params, lora: Params) -> Params:
+    """Materialize per-site weights = shared + LoRA deltas."""
+    p = dict(shared)
+    p = jax.tree.map(lambda a: a, shared)  # shallow copy of pytree
+    p["w_concat"] = shared["w_concat"] + lora["ca"] @ lora["cb"]
+    a = dict(shared["attn"])
+    a["wq"] = shared["attn"]["wq"] + lora["qa"] @ lora["qb"]
+    a["wo"] = shared["attn"]["wo"] + lora["oa"] @ lora["ob"]
+    p["attn"] = a
+    return p
+
+
+def _apply_shared_block(p: Params, cfg: ArchConfig, x: jax.Array,
+                        x0: jax.Array, positions, cache=None, window=0):
+    """Zamba2 shared block: concat(hidden, embeds) -> proj -> attn+mlp."""
+    hcat = jnp.concatenate([x, x0], axis=-1)
+    h = jnp.einsum("bse,ed->bsd", hcat, p["w_concat"])
+    hn = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    if cache is None:
+        a = attn.attention_forward(p["attn"], cfg, hn, positions)
+        new_cache = None
+    else:
+        a, new_cache = attn.attention_decode(p["attn"], cfg, hn, cache, window)
+    h = h + a
+    f = apply_mlp(p["mlp"], rmsnorm(p["norm2"], h, cfg.norm_eps))
+    return x + h + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Top-level LM
+# ---------------------------------------------------------------------------
+def init_lm(cfg: ArchConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model,
+                                         dtype)}
+    if cfg.family == "hybrid":
+        n_every = cfg.shared_attn_every
+        n_sites = cfg.n_layers // n_every
+        n_grouped = n_sites * n_every
+        p["mamba_groups"] = _stack_init(
+            keys[1], n_sites,
+            lambda k: _stack_init(k, n_every,
+                                  lambda kk: _init_block(kk, cfg, C.MAMBA2,
+                                                         dtype)))
+        n_tail = cfg.n_layers - n_grouped
+        if n_tail:
+            p["mamba_tail"] = _stack_init(
+                keys[2], n_tail, lambda k: _init_block(k, cfg, C.MAMBA2, dtype))
+        p["shared"] = _init_shared_block(keys[3], cfg, dtype)
+        if cfg.shared_attn_lora_rank:
+            p["lora"] = _stack_init(
+                keys[4], n_sites, lambda k: _init_site_lora(k, cfg, dtype))
+    else:
+        segs = []
+        for i, (kind, n) in enumerate(segments(cfg)):
+            segs.append(_stack_init(
+                jax.random.fold_in(keys[1], i), n,
+                lambda k, kind=kind: _init_block(k, cfg, kind, dtype)))
+        p["segments"] = segs
+    p["final_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(keys[5], (cfg.d_model, cfg.vocab_size),
+                                   dtype)
+    if cfg.mtp:
+        p["mtp"] = {"proj": normal_init(keys[6], (2 * cfg.d_model, cfg.d_model),
+                                        dtype),
+                    "norm": init_rmsnorm(cfg.d_model, dtype),
+                    "block": _init_block(keys[7], cfg, cfg.layout()[-1], dtype)}
+    return p
+
+
+REMAT_POLICIES = {
+    "full": None,  # recompute everything
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _scan_segment(stacked: Params, cfg: ArchConfig, kind: str, x: jax.Array,
+                  positions, mesh, dp_axes, remat,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    def body(carry, layer_params):
+        carry = hints.constrain(carry, ("dp", None, None))
+        y, aux = _apply_block(layer_params, cfg, kind, carry, positions,
+                              mesh, dp_axes)
+        y = hints.constrain(y, ("dp", None, None))
+        return y, aux
+
+    if remat:
+        policy = REMAT_POLICIES.get(remat if isinstance(remat, str) else
+                                    "full")
+        body = jax.checkpoint(body, policy=policy)
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def _logits(cfg: ArchConfig, params: Params, h: jax.Array) -> jax.Array:
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], h)
+    return jnp.einsum("...d,dv->...v", h, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def lm_forward(cfg: ArchConfig, params: Params,
+               tokens: Optional[jax.Array] = None,
+               embeds: Optional[jax.Array] = None,
+               positions: Optional[jax.Array] = None,
+               mesh: Optional[jax.sharding.Mesh] = None,
+               dp_axes: Tuple[str, ...] = ("data",),
+               remat: bool = False) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (logits fp32, final_hidden, aux_loss)."""
+    x = embed(params["embed"], tokens) if embeds is None else embeds
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        x0 = x
+
+        def site_body(carry, xs):
+            y = carry
+            group, lora = xs
+            def inner(c, lp):
+                c2, _ = _apply_block(lp, cfg, C.MAMBA2, c, positions, mesh,
+                                     dp_axes)
+                return c2, None
+            y, _ = jax.lax.scan(inner, y, group)
+            sp = (_shared_block_params(params["shared"], lora)
+                  if lora is not None else params["shared"])
+            y, _ = _apply_shared_block(sp, cfg, y, x0, positions)
+            return y, None
+
+        lora = params.get("lora")
+        xs = (params["mamba_groups"], lora)
+        if lora is None:
+            def site_body_nolora(carry, group):
+                return site_body(carry, (group, None))
+            x, _ = jax.lax.scan(site_body_nolora, x, params["mamba_groups"])
+        else:
+            x, _ = jax.lax.scan(site_body, x, xs)
+        if "mamba_tail" in params:
+            def inner2(c, lp):
+                c2, _ = _apply_block(lp, cfg, C.MAMBA2, c, positions, mesh,
+                                     dp_axes)
+                return c2, None
+            x, _ = jax.lax.scan(inner2, x, params["mamba_tail"])
+    else:
+        for stacked, (kind, _n) in zip(params["segments"], segments(cfg)):
+            x, a = _scan_segment(stacked, cfg, kind, x, positions, mesh,
+                                 dp_axes, remat)
+            aux = aux + a
+    return _logits(cfg, params, x), x, aux
+
+
+def mtp_logits(cfg: ArchConfig, params: Params, hidden: jax.Array,
+               next_tokens: jax.Array, mesh=None,
+               dp_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+    """DeepSeek MTP depth-1 head: predict token t+2 from (h_t, emb(t+1))."""
+    m = params["mtp"]
+    e = embed(params["embed"], next_tokens).astype(hidden.dtype)
+    h = jnp.concatenate([rmsnorm(m["norm"], hidden, cfg.norm_eps), e], axis=-1)
+    h = jnp.einsum("bse,ed->bsd", h, m["proj"])
+    kind = cfg.layout()[-1]
+    h, _ = _apply_block(m["block"], cfg, kind, h, None, mesh, dp_axes)
+    return _logits(cfg, params, h)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+def _stack_cache(one_fn, n: int):
+    c = one_fn()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), c)
+
+
+def init_lm_caches(cfg: ArchConfig, batch: int, max_len: int,
+                   window: int = 0) -> Any:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "hybrid":
+        n_every = cfg.shared_attn_every
+        n_sites = cfg.n_layers // n_every
+        n_tail = cfg.n_layers - n_sites * n_every
+        caches = {
+            "groups": _stack_cache(
+                lambda: _stack_cache(
+                    lambda: _init_block_cache(cfg, C.MAMBA2, batch, max_len,
+                                              dtype, window), n_every),
+                n_sites),
+            "shared": _stack_cache(
+                lambda: attn.init_kv_cache(cfg, batch, max_len, dtype,
+                                           window or cfg.sliding_window),
+                n_sites),
+        }
+        if n_tail:
+            caches["tail"] = _stack_cache(
+                lambda: _init_block_cache(cfg, C.MAMBA2, batch, max_len,
+                                          dtype, window), n_tail)
+        return caches
+    return [_stack_cache(
+        lambda kind=kind: _init_block_cache(cfg, kind, batch, max_len, dtype,
+                                            window), n)
+        for kind, n in segments(cfg)]
+
+
+def lm_decode(cfg: ArchConfig, params: Params, tokens: jax.Array,
+              caches: Any, window: int = 0,
+              embeds: Optional[jax.Array] = None,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              dp_axes: Tuple[str, ...] = ("data",)) -> Tuple[jax.Array, Any]:
+    """One decode step. tokens (B,1) -> (logits (B,1,V) fp32, caches)."""
+    x = embed(params["embed"], tokens) if embeds is None else embeds
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "hybrid":
+        x0 = x
+        new_caches: Dict[str, Any] = {}
+
+        def site_body(carry, xs):
+            y = carry
+            group, lora, gcache, scache = xs
+            def inner(c, xs2):
+                lp, lc = xs2
+                y2, nc = _decode_block(lp, cfg, C.MAMBA2, c, lc, window,
+                                       mesh, dp_axes)
+                return y2, nc
+            y, ncg = jax.lax.scan(inner, y, (group, gcache))
+            sp = (_shared_block_params(params["shared"], lora)
+                  if lora is not None else params["shared"])
+            y, ncs = _apply_shared_block(sp, cfg, y, x0, None, cache=scache,
+                                         window=window or cfg.sliding_window)
+            return y, (ncg, ncs)
+
+        lora = params.get("lora")
+        if lora is None:
+            x, (ncg, ncs) = jax.lax.scan(
+                lambda c, xs: site_body(c, (xs[0], None, xs[1], xs[2])),
+                x, (params["mamba_groups"], caches["groups"], caches["shared"]))
+        else:
+            x, (ncg, ncs) = jax.lax.scan(
+                site_body, x,
+                (params["mamba_groups"], lora, caches["groups"],
+                 caches["shared"]))
+        new_caches = {"groups": ncg, "shared": ncs}
+        if "tail" in caches:
+            def inner3(c, xs2):
+                lp, lc = xs2
+                y2, nc = _decode_block(lp, cfg, C.MAMBA2, c, lc, window,
+                                       mesh, dp_axes)
+                return y2, nc
+            x, nct = jax.lax.scan(inner3, x, (params["mamba_tail"],
+                                              caches["tail"]))
+            new_caches["tail"] = nct
+        return _logits(cfg, params, x), new_caches
+
+    new_list = []
+    for stacked, cache, (kind, _n) in zip(params["segments"], caches,
+                                          segments(cfg)):
+        def body(carry, xs):
+            lp, lc = xs
+            y, nc = _decode_block(lp, cfg, kind, carry, lc, window, mesh,
+                                  dp_axes)
+            return y, nc
+        x, nc = jax.lax.scan(body, x, (stacked, cache))
+        new_list.append(nc)
+    return _logits(cfg, params, x), new_list

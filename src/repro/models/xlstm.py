@@ -1,0 +1,255 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, sequential scan).
+
+mLSTM uses the stabilized chunkwise formulation (the TPU-native adaptation
+of the paper's CUDA kernels): within a chunk of length Q the gate-decay
+matrix D is dense (MXU matmuls); across chunks a matrix state
+``C (B,H,dk,dv)``, normalizer ``n (B,H,dk)`` and log-scale ``m (B,H)``
+are carried by ``lax.scan``. Decode advances the same state one token at
+a time — O(1) per step, which is what makes xlstm/zamba-style archs
+eligible for the long_500k shape natively.
+
+sLSTM is inherently sequential (recurrent gate mixing); training uses a
+``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.common import (Params, init_layernorm, init_rmsnorm,
+                                 layernorm, normal_init, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_dims(cfg: ArchConfig):
+    di = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def init_mlstm(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    di, H, dh = _mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": normal_init(ks[0], (d, di), dtype),
+        "w_gate": normal_init(ks[1], (d, di), dtype),
+        "conv_w": normal_init(ks[2], (cfg.xlstm.conv_width, di), dtype, stddev=0.1),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": normal_init(ks[3], (di, di), dtype),
+        "wk": normal_init(ks[4], (di, di), dtype),
+        "wv": normal_init(ks[5], (di, di), dtype),
+        "w_i": normal_init(ks[6], (di, H), dtype),
+        "w_f": normal_init(ks[7], (di, H), dtype),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "w_down": normal_init(jax.random.fold_in(key, 99), (di, d), dtype),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+           if state is None else state)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(y + b), xp[:, -(W - 1):]
+
+
+def _mlstm_inner_chunked(q, k, v, logi, logf, chunk, state=None):
+    """q,k,v (B,S,H,dh); logi/logf (B,S,H) fp32. Returns (y, state)."""
+    B, S, H, dh = q.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z3 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, z3) for a in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    S_ = q.shape[1]
+    nc = S_ // Q
+    qc = q.reshape(B, nc, Q, H, dh).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, H, dh).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, dh).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    ic = logi.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    fc = logf.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    scale = 1.0 / jnp.sqrt(float(dh))
+
+    def step(carry, inp):
+        C, n, m = carry            # (B,H,dh,dh), (B,H,dh), (B,H)
+        qq, kk, vv, li, lf = inp
+        cumf = jnp.cumsum(lf, axis=1)                  # (B,Q,H)
+        # intra-chunk log weights a_ij = cumf_i - cumf_j + li_j (j <= i)
+        a = cumf[:, :, None, :] - cumf[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        a = jnp.where(tri[None, :, :, None], a, -1e30)
+        b = cumf + m[:, None, :]                       # carry log-scale (B,Q,H)
+        m_row = jnp.maximum(jnp.max(a, axis=2), b)     # (B,Q,H)
+        m_row = jnp.maximum(m_row, -1e30)
+        dmat = jnp.exp(a - m_row[:, :, None, :])       # (B,Q,Q,H)
+        bsc = jnp.exp(b - m_row)                       # (B,Q,H)
+        s = jnp.einsum("bihd,bjhd->bijh", qq, kk) * scale
+        y_intra = jnp.einsum("bijh,bjhd->bihd", s * dmat, vv)
+        y_inter = jnp.einsum("bihk,bhkv->bihv", qq * bsc[..., None], C) * scale
+        denom_intra = jnp.einsum("bijh,bjhd->bihd", dmat,
+                                 kk)  # Σ_j w_ij k_j
+        qn = jnp.einsum("bihd,bihd->bih", qq, denom_intra) * scale
+        qn = qn + jnp.einsum("bihk,bhk->bih", qq * bsc[..., None], n) * scale
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_row))
+        y = (y_intra + y_inter) / denom[..., None]
+        # state update
+        ftot = cumf[:, -1]                             # (B,H)
+        w_log = ftot[:, None] - cumf + li              # (B,Q,H)
+        m_new = jnp.maximum(ftot + m, jnp.max(w_log, axis=1))
+        wts = jnp.exp(w_log - m_new[:, None])
+        C_new = (C * jnp.exp(ftot + m - m_new)[..., None, None]
+                 + jnp.einsum("bqhk,bqhv->bhkv", kk * wts[..., None], vv))
+        n_new = (n * jnp.exp(ftot + m - m_new)[..., None]
+                 + jnp.einsum("bqhk,bqh->bhk", kk, wts))
+        return (C_new, n_new, m_new), y
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    (C, n, m), yc = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S_, H, dh)[:, :S]
+    return y.astype(v.dtype), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_qkvif(params, cfg, x, conv_state=None):
+    di, H, dh = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, params["w_gate"])
+    c, conv_new = _causal_conv1d(up, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    B, S, _ = x.shape
+    q = jnp.einsum("bse,ef->bsf", c, params["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", c, params["wk"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bse,ef->bsf", up, params["wv"]).reshape(B, S, H, dh)
+    logi = jnp.einsum("bse,eh->bsh", c, params["w_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", c, params["w_f"]).astype(jnp.float32)
+        + params["f_bias"])
+    return q, k, v, logi, logf, z, conv_new
+
+
+def mlstm_forward(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    di, H, dh = _mlstm_dims(cfg)
+    q, k, v, logi, logf, z, _ = _mlstm_qkvif(params, cfg, x)
+    y, _ = _mlstm_inner_chunked(q, k, v, logi, logf, cfg.xlstm.chunk)
+    y = y.reshape(*y.shape[:2], di)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_down"])
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    di, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, di), dtype),
+    }
+
+
+def mlstm_decode(params: Params, cfg: ArchConfig, x: jax.Array,
+                 cache: Params) -> Tuple[jax.Array, Params]:
+    """One-token decode via the same chunked inner with Q=1 chunk."""
+    di, H, dh = _mlstm_dims(cfg)
+    q, k, v, logi, logf, z, conv_new = _mlstm_qkvif(
+        params, cfg, x, conv_state=cache["conv"])
+    state = {"C": cache["C"], "n": cache["n"], "m": cache["m"]}
+    y, st = _mlstm_inner_chunked(q, k, v, logi, logf, 1, state=state)
+    y = y.reshape(*y.shape[:2], di)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_down"])
+    return out, {**st, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    dff = int(cfg.xlstm.proj_factor_slstm * d)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": normal_init(ks[0], (d, 4 * d), dtype),      # z,i,f,o pre-acts
+        "r": normal_init(ks[1], (4, H, dh, dh), dtype, stddev=0.01),
+        "f_bias": jnp.full((H, dh), 3.0, jnp.float32),
+        "norm": init_layernorm(d, dtype),
+        "w_ff1": normal_init(ks[2], (d, dff), dtype),
+        "w_ff2": normal_init(ks[3], (dff, d), dtype),
+    }
+
+
+def _slstm_cell(params, cfg, pre, state):
+    """pre (B,4,H,dh) fp32; state dict of (B,H,dh)."""
+    c, n, m, h = state
+    r = params["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhk,ghkl->bghl", h, r)            # (B,4,H,dh)
+    z_p, i_p, f_p, o_p = [pre[:, g] + rec[:, g] for g in range(4)]
+    f_p = f_p + params["f_bias"]
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    m_new = jnp.maximum(f_p + m, i_p)
+    i = jnp.exp(i_p - m_new)
+    f = jnp.exp(f_p + m - m_new)
+    c_new = f * c + i * z
+    n_new = jnp.maximum(f * n + i, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    pre = jnp.einsum("bsd,de->bse", x, params["w_in"]).astype(jnp.float32)
+    pre = pre.reshape(B, S, 4, H, dh).transpose(1, 0, 2, 3, 4)  # (S,B,4,H,dh)
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32), zeros)
+
+    def step(st, p):
+        st2 = _slstm_cell(params, cfg, p, st)
+        return st2, st2[3]
+
+    _, hs = jax.lax.scan(step, state0, pre)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    h = layernorm(params["norm"], h, cfg.norm_eps)
+    f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, params["w_ff1"]))
+    return jnp.einsum("bsf,fd->bsd", f, params["w_ff2"])
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+            "h": z}
+
+
+def slstm_decode(params: Params, cfg: ArchConfig, x: jax.Array,
+                 cache: Params) -> Tuple[jax.Array, Params]:
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    pre = jnp.einsum("bsd,de->bse", x, params["w_in"]).astype(jnp.float32)
+    pre = pre.reshape(B, 4, H, dh)
+    st = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = _slstm_cell(params, cfg, pre, st)
+    y = h.reshape(B, 1, d).astype(x.dtype)
+    y = layernorm(params["norm"], y, cfg.norm_eps)
+    f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, params["w_ff1"]))
+    out = jnp.einsum("bsf,fd->bsd", f, params["w_ff2"])
+    return out, {"c": c, "n": n, "m": m, "h": h}

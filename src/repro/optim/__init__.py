@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (OptState, adam_init, adam_update,
+                                    clip_by_global_norm, sgd_init, sgd_update,
+                                    make_optimizer, cosine_schedule)

@@ -1,0 +1,97 @@
+"""Minimal pure-JAX optimizers (no optax in the container).
+
+FL clients in the paper run plain local SGD; Adam is provided for
+non-federated training paths. All states are pytrees matching params, so
+sharding specs propagate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Dict[str, Any]
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ optional momentum)
+# ---------------------------------------------------------------------------
+def sgd_init(params: Params, momentum: float = 0.0) -> OptState:
+    if momentum:
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p), params),
+                "step": jnp.zeros((), jnp.int32)}
+    return {"step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params: Params, grads: Params, state: OptState, lr,
+               momentum: float = 0.0) -> Tuple[Params, OptState]:
+    if momentum:
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, mu)
+        return params, {"mu": mu, "step": state["step"] + 1}
+    params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return params, {"step": state["step"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+def adam_init(params: Params) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params: Params, grads: Params, state: OptState, lr,
+                b1: float = 0.9, b2: float = 0.95,
+                eps: float = 1e-8) -> Tuple[Params, OptState]:
+    step = state["step"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    params = jax.tree.map(
+        lambda p, m_, v_: (p.astype(jnp.float32) - lr * (m_ / bc1)
+                           / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+        params, m, v)
+    return params, {"m": m, "v": v, "step": step}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def make_optimizer(name: str, params: Params, momentum: float = 0.0):
+    """Returns (state, update_fn(params, grads, state, lr))."""
+    if name == "sgd":
+        return sgd_init(params, momentum), (
+            lambda p, g, s, lr: sgd_update(p, g, s, lr, momentum))
+    if name == "adam":
+        return adam_init(params), adam_update
+    raise ValueError(name)

@@ -1,0 +1,127 @@
+"""Roofline analysis from the compiled dry-run artifact (no hardware).
+
+Terms (per the brief; TPU v5e constants):
+  compute    = HLO_FLOPs  / (chips · 197e12 FLOP/s)
+  memory     = HLO_bytes  / (chips · 819e9 B/s)
+  collective = Σ collective-op bytes / (chips · 50e9 B/s)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+flops/bytes; we multiply by chip count to get the global figures the
+formulas above divide back down — i.e. the reported seconds are
+per-device times assuming perfect overlap of nothing.
+
+Collective bytes are not in cost_analysis: we parse the optimized HLO
+(``compiled.as_text()``) and sum the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(shapes there are per-device, post-partitioning). This counts the payload
+a device receives per step — the standard first-order ICI model; ring
+factors (2(N-1)/N etc.) are noted per-op in the JSON for refinement.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.config import ArchConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # B/s per chip
+    ici_bw: float = 50e9              # B/s per link
+
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO result type, incl. tuples '(f32[8,4], u32[2])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device output bytes of every collective in optimized HLO."""
+    per_kind: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like: '%name = f32[128,1024]{1,0} all-reduce(...)'
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        per_kind[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "by_kind": per_kind, "counts": counts}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), D = tokens/step."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len if shape.kind ==
+                                         "prefill" else 1))
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def roofline_terms(cost: Dict[str, float], collectives: Dict[str, Any],
+                   chips: int, cfg: Optional[ArchConfig] = None,
+                   shape: Optional[ShapeConfig] = None,
+                   hw: HW = HW()) -> Dict[str, Any]:
+    """cost: compiled.cost_analysis() dict (per-device flops/bytes)."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(collectives["total_bytes"])
+    t_compute = flops_dev / hw.peak_flops
+    t_memory = bytes_dev / hw.hbm_bw
+    t_coll = coll_dev / hw.ici_bw
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    out = {
+        "chips": chips,
+        "hlo_flops_per_chip": flops_dev,
+        "hlo_bytes_per_chip": bytes_dev,
+        "collective_bytes_per_chip": coll_dev,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "collectives": collectives,
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        out["model_flops_global"] = mf
+        hlo_global = flops_dev * chips
+        out["useful_flops_ratio"] = (mf / hlo_global) if hlo_global else 0.0
+        step_time = max(t_compute, t_memory, t_coll)
+        out["mfu_bound"] = (mf / chips / hw.peak_flops / step_time
+                            if step_time else 0.0)
+    return out

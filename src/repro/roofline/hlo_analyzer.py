@@ -1,0 +1,255 @@
+"""Loop-aware HLO accounting from ``compiled.as_text()``.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (verified on the
+CPU backend), so a 61-layer scanned model under-reports FLOPs/collectives
+by ~61x. This analyzer fixes that from the artifact itself:
+
+1. parse the optimized HLO into computations;
+2. build call multiplicities: a while op executes its body
+   ``known_trip_count`` times (emitted in backend_config); fusions/calls
+   inherit the caller's multiplicity; nested loops multiply;
+3. account per-op costs x multiplicity:
+     * dot FLOPs   = 2 * prod(result_dims) * prod(contracted_dims)
+       (contracted sizes resolved from operand shapes);
+     * collective bytes = result bytes per kind (per-device, since SPMD
+       shapes are post-partitioning);
+     * memory bytes = 2 * result bytes of every materializing op
+       (one write + one read downstream — a uniform traffic model,
+       documented in EXPERIMENTS.md §Roofline).
+
+Shapes in SPMD-partitioned modules are per-device, so all outputs here
+are per-chip quantities.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],{}]+?)\s+"
+    r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count\D*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            # computation headers end with '{' and contain no ' = '
+            if line.endswith("{") and " = " not in line:
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = Computation(m.group(1))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode = m.groups()
+            cur.ops.append(Op(name, type_str, opcode, line))
+            cur.shapes[name] = type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _entry_name(text: str, comps: Dict[str, Computation]) -> str:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation not referenced by anyone
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops:
+            referenced.update(_BODY_RE.findall(op.line))
+            referenced.update(_CALLS_RE.findall(op.line))
+    for name in comps:
+        if name not in referenced and "region" not in name:
+            return name
+    return next(iter(comps))
+
+
+def multiplicities(text: str, comps: Dict[str, Computation]
+                   ) -> Dict[str, float]:
+    """Execution count per computation (entry = 1; while bodies x trips)."""
+    mult: Dict[str, float] = defaultdict(float)
+    entry = _entry_name(text, comps)
+    stack = [(entry, 1.0)]
+    seen_pairs = 0
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m
+        seen_pairs += 1
+        if seen_pairs > 100000:
+            break
+        for op in comps[name].ops:
+            if op.opcode == "while":
+                trips = 1.0
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = float(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                if bm:
+                    stack.append((bm.group(1), m * trips))
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if cm:
+                    stack.append((cm.group(1), m * (trips + 1)))
+            else:
+                for cal in _CALLS_RE.findall(op.line):
+                    stack.append((cal, m))
+                bm = _BRANCH_RE.search(op.line)
+                if bm:
+                    for br in bm.group(1).split(","):
+                        stack.append((br.strip().lstrip("%"), m))
+    return dict(mult)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 * prod(result) * prod(contracted lhs dims)."""
+    res_elems = 1
+    for _dt, dims in _shape_dims(op.type_str):
+        for d in dims:
+            res_elems *= d
+        break
+    m = _OPERANDS_RE.search(op.line[op.line.index(op.opcode):])
+    if not m:
+        return 0.0
+    operands = [o.strip().lstrip("%").split(" ")[0].rstrip(",")
+                for o in m.group(1).split(",")]
+    lhs = operands[0] if operands else None
+    lhs_shape = comp.shapes.get(lhs, "") if lhs else ""
+    dims = _shape_dims(lhs_shape)
+    lhs_dims = dims[0][1] if dims else []
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contracted = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contracted *= lhs_dims[i]
+    return 2.0 * res_elems * contracted
+
+
+def _operand_names(op: Op) -> List[str]:
+    start = op.line.index(op.opcode) + len(op.opcode)
+    m = _OPERANDS_RE.search(op.line[start:])
+    if not m:
+        return []
+    return [o.strip().lstrip("%").split(" ")[0].rstrip(",")
+            for o in m.group(1).split(",") if o.strip()]
+
+
+def _traffic_bytes(op: Op, comp: Computation) -> float:
+    """HBM traffic model for one op: write(output) + read(output) = 2x
+    output bytes — EXCEPT in-place updates (dynamic-update-slice and
+    DUS-rooted fusions), whose output aliases an operand buffer: there the
+    real traffic is the non-aliased operands (the update slice)."""
+    out_b = _bytes_of(op.type_str)
+    if op.opcode in ("dynamic-update-slice", "fusion"):
+        names = _operand_names(op)
+        op_bytes = [_bytes_of(comp.shapes.get(n, "")) for n in names]
+        aliased = [b for n, b in zip(names, op_bytes)
+                   if comp.shapes.get(n, "") == op.type_str]
+        if aliased:
+            others = sum(op_bytes) - aliased[0]
+            return 2.0 * min(out_b, others)
+    return 2.0 * out_b
+
+
+def analyze(text: str) -> Dict[str, float]:
+    """Loop-corrected per-chip totals from optimized HLO text."""
+    comps = parse_computations(text)
+    mult = multiplicities(text, comps)
+    # fusion-body computations: their temporaries never touch HBM
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fusion_bodies.update(_CALLS_RE.findall(op.line))
+    flops = 0.0
+    mem_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0.0 for k in COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, comp)
+            elif op.opcode in ("convolution",):
+                flops += m * 2.0 * _bytes_of(op.type_str)  # coarse
+            if op.opcode in COLLECTIVES:
+                b = _bytes_of(op.type_str)
+                coll[op.opcode] += m * b
+                counts[op.opcode] += m
+            if not in_fusion and op.opcode not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional"):
+                mem_bytes += m * _traffic_bytes(op, comp)
+    return {
+        "flops": flops,
+        "memory_bytes": mem_bytes,
+        "collective_bytes": sum(coll.values()),
+        "collective_by_kind": coll,
+        "collective_counts": counts,
+    }

@@ -1,0 +1,67 @@
+"""Sharding-hint context: explicit activation constraints for SPMD.
+
+Baseline lowering lets XLA propagate shardings from the param specs; the
+dry-run showed it loses head-sharding through the (B,S,H*hd)->(B,S,H,hd)
+reshape and falls back to "involuntary full rematerialization"
+(replicated attention compute + giant activation all-reduces). The fix —
+hillclimb iteration 1 — is a handful of ``with_sharding_constraint``
+calls at attention/logits boundaries.
+
+The context is a contextvar set by the step builders (``hints=True``) so
+model code stays signature-stable; ``constrain`` is a no-op outside the
+context, under vmap-style tracing, or when a dim isn't divisible.
+Patterns are tuples over dims: "dp" (batch/data axes), "tp" (model axis),
+None (unsharded).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_hints",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh: Optional[jax.sharding.Mesh],
+                   dp_axes: Sequence[str] = ("data",)):
+    if mesh is None:
+        yield
+        return
+    token = _CTX.set((mesh, tuple(a for a in dp_axes
+                                  if a in mesh.axis_names)))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def active() -> bool:
+    return _CTX.get() is not None
+
+
+def constrain(x: jax.Array, pattern: Tuple[Optional[str], ...]) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != len(pattern):
+        return x
+    mesh, dp = ctx
+    tp = "model" if "model" in mesh.axis_names else None
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    spec = []
+    for dim, p in zip(x.shape, pattern):
+        if p == "dp" and dp and dim % dp_size == 0 and dim >= dp_size:
+            spec.append(dp)
+        elif p == "tp" and tp and dim % mesh.shape[tp] == 0 \
+                and dim >= mesh.shape[tp]:
+            spec.append(tp)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see the default (single) device count — the 512-device flag is
+# dryrun.py-only (set in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

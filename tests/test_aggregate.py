@@ -1,0 +1,59 @@
+"""Unit tests: eq 1 score-weighted aggregation (jnp + Pallas paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregate import participation_weights, weighted_average
+
+
+def _stacked(key, n=5):
+    ks = jax.random.split(key, 3)
+    return {
+        "a": jax.random.normal(ks[0], (n, 7, 9)),
+        "b": {"c": jax.random.normal(ks[1], (n, 13))},
+    }
+
+
+def test_weighted_average_matches_manual():
+    tree = _stacked(jax.random.PRNGKey(0))
+    w = jnp.array([0.5, 0.0, 0.2, 0.3, 0.0])
+    out = weighted_average(tree, w)
+    manual = np.einsum("n...,n->...", np.asarray(tree["a"]), np.asarray(w))
+    manual /= np.sum(np.asarray(w))
+    np.testing.assert_allclose(np.asarray(out["a"]), manual, rtol=1e-5)
+
+
+def test_zero_weight_devices_excluded():
+    tree = _stacked(jax.random.PRNGKey(1), n=3)
+    w = jnp.array([1.0, 0.0, 1.0])
+    out = weighted_average(tree, w)
+    expect = (np.asarray(tree["a"][0]) + np.asarray(tree["a"][2])) / 2
+    np.testing.assert_allclose(np.asarray(out["a"]), expect, rtol=1e-5)
+
+
+def test_kernel_path_matches_jnp_path():
+    tree = _stacked(jax.random.PRNGKey(2), n=6)
+    w = jnp.array([0.1, 0.4, 0.0, 0.2, 0.2, 0.1])
+    ref = weighted_average(tree, w, use_kernel=False)
+    ker = weighted_average(tree, w, use_kernel=True)
+    for r, k in zip(jax.tree.leaves(ref), jax.tree.leaves(ker)):
+        np.testing.assert_allclose(np.asarray(r), np.asarray(k), atol=1e-5)
+
+
+def test_literal_eq1_is_unnormalized_sum():
+    tree = _stacked(jax.random.PRNGKey(3), n=2)
+    w = jnp.array([0.5, 0.5])
+    lit = weighted_average(tree, w, literal_eq1=True)
+    expect = 0.5 * np.asarray(tree["a"][0]) + 0.5 * np.asarray(tree["a"][1])
+    np.testing.assert_allclose(np.asarray(lit["a"]), expect, rtol=1e-5)
+
+
+def test_participation_weights_masking():
+    c = np.array([[0.6, 0.4], [0.3, 0.7], [0.5, 0.5]])
+    participating = np.array([True, False, True])
+    active = np.array([[True, True], [True, True], [False, True]])
+    w = participation_weights(c, 0, participating, active)
+    np.testing.assert_allclose(w, [0.6, 0.0, 0.0])
+    w1 = participation_weights(c, 1, participating, active)
+    np.testing.assert_allclose(w1, [0.4, 0.0, 0.5])

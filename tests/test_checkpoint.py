@@ -1,0 +1,37 @@
+"""Checkpoint IO round-trips params and registry state."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (load_checkpoint, load_registry, save_checkpoint,
+                              save_registry)
+from repro.core.registry import ModelRegistry
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "d": [jnp.zeros((2, 2), jnp.int32)]}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, step=7, extra={"note": "x"})
+    restored, step = load_checkpoint(path, tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_registry_roundtrip(tmp_path):
+    reg = ModelRegistry.create({"w": np.zeros(2)}, m_cap=8)
+    reg.clone(0, 5, {"w": np.ones(2)})
+    reg.kill(0, 9)
+    p = os.path.join(tmp_path, "registry.json")
+    save_registry(p, reg.to_json())
+    state = load_registry(p)
+    assert state["m_cap"] == 8
+    entries = {e["id"]: e for e in state["entries"]}
+    assert entries[0]["alive"] is False and entries[0]["death"] == 9
+    assert entries[1]["parent"] == 0

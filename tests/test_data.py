@@ -1,0 +1,69 @@
+"""Data-pipeline tests: archetype partitioners match the paper's specs."""
+import numpy as np
+import pytest
+
+from repro.data.partition import (HG_KS, hierarchical_devices,
+                                  hierarchical_probs, hypergeometric_devices,
+                                  hypergeometric_probs, stack_devices)
+from repro.data.tokens import lm_batch
+
+
+def test_hierarchical_probs_structure():
+    p = hierarchical_probs(3, bias=0.6)
+    assert p[3] == pytest.approx(0.6)
+    for l in (0, 1, 2, 4):
+        assert p[l] == pytest.approx(0.1)
+    assert p[5:].sum() == 0.0            # other meta-archetype excluded
+    p2 = hierarchical_probs(7, bias=0.7)
+    assert p2[7] == pytest.approx(0.7)
+    assert p2[:5].sum() == 0.0
+
+
+def test_hypergeometric_probs_slide_across_labels():
+    """Paper Fig 3: the HG bump slides from label 0 (K=5) to 9 (K=105)."""
+    modes = [np.argmax(hypergeometric_probs(a)) for a in range(len(HG_KS))]
+    assert modes[0] <= 1 and modes[-1] >= 8
+    assert all(m2 >= m1 for m1, m2 in zip(modes, modes[1:]))
+    for a in range(len(HG_KS)):
+        assert hypergeometric_probs(a).sum() == pytest.approx(1.0)
+
+
+def test_hierarchical_devices_label_bias():
+    devs = hierarchical_devices(seed=0, devices_per_archetype=1,
+                                n_train=2000, n_val=8, n_test=8)
+    d = devs[4]   # archetype 4, meta 0
+    _, y = d.train
+    frac = np.mean(y == 4)
+    assert 0.5 < frac < 0.8              # b ~ U(0.6,0.7)
+    assert np.isin(y, np.arange(5)).all()
+
+
+def test_hypergeometric_devices_have_all_archetypes():
+    devs = hypergeometric_devices(seed=0, devices_per_archetype=2,
+                                  n_train=32, n_val=8, n_test=8)
+    assert len(devs) == 12
+    assert sorted({d.archetype for d in devs}) == list(range(6))
+
+
+def test_stack_devices_shapes():
+    devs = hierarchical_devices(seed=0, devices_per_archetype=1,
+                                n_train=16, n_val=8, n_test=4)
+    data = stack_devices(devs)
+    assert data["train"][0].shape == (10, 16, 32, 32, 3)
+    assert data["val"][1].shape == (10, 8)
+    assert data["test"][0].dtype == np.float32
+
+
+def test_lm_batch_client_grouping_and_shift():
+    from repro.data.tokens import successor_table
+    rng = np.random.default_rng(0)
+    x, y = lm_batch(rng, n_clients=4, per_client=2, seq=16, vocab=64,
+                    n_archetypes=2, bias=1.0)
+    assert x.shape == (8, 16) and y.shape == (8, 16)
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])   # next-token shift
+    # bias=1 -> fully deterministic per-archetype Markov chain
+    p0 = successor_table(64, 0)
+    p1 = successor_table(64, 1)
+    np.testing.assert_array_equal(y[0], p0[x[0]])        # client 0 -> arch 0
+    np.testing.assert_array_equal(y[2], p1[x[2]])        # client 2 -> arch 1
+    assert not np.array_equal(p0, p1)                    # conflicting tasks

@@ -1,0 +1,89 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes per the brief."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import (dequantize_pytree, quantize_pytree,
+                                 roundtrip)
+from repro.kernels.quantize import ops as qops
+from repro.kernels.quantize import ref as qref
+from repro.kernels.weighted_agg import ops as wops
+from repro.kernels.weighted_agg import ref as wref
+
+SHAPES = [(8,), (128,), (3, 130), (256, 512), (300, 777), (2, 3, 65)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_kernel_matches_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(hash(shape) % 997), shape)
+         * 3).astype(dtype)
+    qk, sk = qops.quantize(x)
+    qr, sr = qref.quantize_ref(x)
+    # jitted kernel may fold /qmax into *reciprocal -> ulp scale difference,
+    # which can flip a boundary value by one quantization step
+    dq = np.abs(np.asarray(qk, np.int32) - np.asarray(qr, np.int32))
+    assert dq.max() <= 1 and (dq != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    xk = qops.dequantize(qk, sk, shape, dtype)
+    xr = qref.dequantize_ref(qr, sr, shape, dtype)
+    step = float(np.asarray(sk).max())      # one quantization step
+    np.testing.assert_allclose(np.asarray(xk, np.float32),
+                               np.asarray(xr, np.float32), rtol=1e-3,
+                               atol=1.01 * step)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_roundtrip_error_bound(bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256)) * 5
+    q, s = qref.quantize_ref(x, bits=bits)
+    xr = qref.dequantize_ref(q, s, x.shape, x.dtype)
+    qmax = (1 << (bits - 1)) - 1
+    # error per block bounded by half a quantization step
+    bound = np.asarray(s).max() * 0.5 + 1e-6
+    assert float(jnp.max(jnp.abs(xr - x))) <= bound
+    assert float(jnp.max(jnp.abs(xr - x))) <= float(jnp.max(jnp.abs(x))) / qmax
+
+
+@pytest.mark.parametrize("n,shape", [(3, (17,)), (8, (64, 32)), (2, (1, 5, 7))])
+def test_weighted_agg_kernel_matches_ref(n, shape):
+    key = jax.random.PRNGKey(n)
+    u = jax.random.normal(key, (n,) + shape)
+    w = jax.random.uniform(jax.random.PRNGKey(n + 1), (n,)) + 0.1
+    d = jnp.sum(w)
+    out = wops.weighted_agg(u, w, d)
+    ref = wref.weighted_agg_ref(u.reshape(n, -1), w, d).reshape(shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_dequant_agg_fused_matches_two_step():
+    n, D = 6, 1024
+    u = jax.random.normal(jax.random.PRNGKey(3), (n, D)) * 2
+    w = jax.random.uniform(jax.random.PRNGKey(4), (n,))
+    d = jnp.sum(w)
+    q, s = qref.quantize_ref(u)
+    fused = wops.dequant_agg(q, s, w, d)
+    ref = wref.dequant_agg_ref(q, s, w, d)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), atol=1e-5)
+
+
+def test_pytree_quantize_roundtrip():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": [jnp.ones((5,)), jnp.zeros((2, 2))]}
+    packed = quantize_pytree(tree, bits=8)
+    out = dequantize_pytree(packed)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.05)
+    same = roundtrip(tree, bits=0)
+    assert same is tree                     # bits=0 -> no-op
+
+
+def test_kernel_pytree_path_matches_ref_path():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(9), (40, 300))}
+    a = roundtrip(tree, bits=8, use_kernel=False)
+    b = roundtrip(tree, bits=8, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               atol=1e-6)

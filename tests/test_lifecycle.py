@@ -1,0 +1,101 @@
+"""Unit tests: FedCD cloning + deletion (Algorithm 1, eq 4)."""
+import numpy as np
+
+from repro.config import FedCDConfig
+from repro.core.lifecycle import (apply_deletions, clone_at_milestone,
+                                  eq4_deletion_mask, late_deletion_mask)
+from repro.core.registry import ModelRegistry
+from repro.core.scores import init_scores, normalized_scores, push_accuracies
+
+
+def _state_with(accs):
+    n, m = accs.shape
+    s = init_scores(n, m, ell=1)
+    s.active[:] = accs > 0
+    s.alive[:] = s.active.any(axis=0)
+    s = push_accuracies(s, accs)
+    return s
+
+
+def test_eq4_deletes_far_below_max():
+    # scores (0.5, 0.3, 0.2): σ≈0.125, max-c = (0, .2, .3) — model 0 kept,
+    # models beyond top-2 meeting the criterion are deleted
+    accs = np.array([[0.5, 0.3, 0.2]])
+    s = _state_with(accs)
+    c = normalized_scores(s)
+    mask = eq4_deletion_mask(c, s.active)
+    assert not mask[0, 0]
+    assert not mask[0, 1]          # top-2 invariant keeps it
+    assert mask[0, 2]
+
+
+def test_eq4_skips_two_model_devices():
+    accs = np.array([[0.9, 0.1, 0.0]])
+    s = _state_with(accs)
+    mask = eq4_deletion_mask(normalized_scores(s), s.active)
+    assert not mask.any()          # <3 active models: σ-rule not applied
+
+
+def test_late_rule_drops_low_scorer():
+    accs = np.array([[0.9, 0.2, 0.0]])
+    s = _state_with(accs)
+    c = normalized_scores(s)       # 0.818 / 0.182
+    mask = late_deletion_mask(c, s.active, threshold=0.3)
+    assert mask[0, 1] and not mask[0, 0]
+
+
+def test_late_rule_keeps_balanced_pair():
+    accs = np.array([[0.5, 0.45, 0.0]])
+    s = _state_with(accs)
+    c = normalized_scores(s)       # ~0.53/0.47 both > 0.3
+    mask = late_deletion_mask(c, s.active, threshold=0.3)
+    assert not mask.any()
+
+
+def test_server_gc_kills_unheld_models():
+    cfg = FedCDConfig(n_devices=2, max_models=4)
+    reg = ModelRegistry.create({"w": np.zeros(3)}, m_cap=4)
+    reg.clone(0, 1, {"w": np.ones(3)})
+    s = init_scores(2, 4, ell=1)
+    s.active[:, 1] = False          # nobody holds model 1
+    s.alive[1] = True
+    s2, killed = apply_deletions(s, reg, round_=3, cfg=cfg)
+    assert killed == [1]
+    assert reg.live_ids() == [0]
+    assert 1 not in reg.params      # server storage freed (paper §3.6)
+
+
+def test_milestone_cloning_doubles_and_caps():
+    cfg = FedCDConfig(n_devices=3, max_models=4)
+    reg = ModelRegistry.create({"w": np.arange(3.0)}, m_cap=4)
+    s = init_scores(3, 4, ell=2)
+    s, pairs = clone_at_milestone(s, reg, 5, cfg)
+    assert pairs == [(0, 1)]
+    assert reg.total_created == 2
+    s, pairs = clone_at_milestone(s, reg, 15, cfg)
+    assert reg.total_created == 4
+    # at capacity now — no further clones
+    s, pairs = clone_at_milestone(s, reg, 25, cfg)
+    assert reg.total_created == 4 and pairs == []
+
+
+def test_clone_params_fn_applied():
+    cfg = FedCDConfig(n_devices=1, max_models=4)
+    reg = ModelRegistry.create({"w": np.ones(4)}, m_cap=4)
+    s = init_scores(1, 4, ell=2)
+    s, pairs = clone_at_milestone(s, reg, 5, cfg,
+                                  clone_params_fn=lambda p: {"w": p["w"] * 2})
+    (parent, clone), = pairs
+    assert np.allclose(reg.params[clone]["w"], 2.0)
+    assert np.allclose(reg.params[parent]["w"], 1.0)
+
+
+def test_genealogy_tracks_parents():
+    cfg = FedCDConfig(n_devices=1, max_models=8)
+    reg = ModelRegistry.create({"w": np.zeros(1)}, m_cap=8)
+    s = init_scores(1, 8, ell=2)
+    s, _ = clone_at_milestone(s, reg, 5, cfg)
+    s, _ = clone_at_milestone(s, reg, 15, cfg)
+    g = reg.genealogy()
+    assert g[0] is None and g[1] == 0
+    assert set(g) == {0, 1, 2, 3}

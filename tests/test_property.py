@@ -1,0 +1,86 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import FedCDConfig
+from repro.core.lifecycle import apply_deletions
+from repro.core.registry import ModelRegistry
+from repro.core.scores import (init_scores, normalized_scores,
+                               push_accuracies)
+from repro.kernels.quantize import ref as qref
+
+import jax.numpy as jnp
+
+
+accs_arrays = st.integers(2, 6).flatmap(
+    lambda n: st.integers(2, 5).flatmap(
+        lambda m: st.lists(
+            st.lists(st.floats(0.01, 0.99), min_size=m, max_size=m),
+            min_size=n, max_size=n)))
+
+
+@given(accs_arrays)
+@settings(max_examples=30, deadline=None)
+def test_scores_always_normalized(acc_rows):
+    a = np.array(acc_rows)
+    n, m = a.shape
+    s = init_scores(n, m, ell=2)
+    s.active[:] = True
+    s.alive[:] = True
+    s = push_accuracies(s, a)
+    c = normalized_scores(s)
+    assert np.allclose(c.sum(axis=1), 1.0, atol=1e-9)
+    assert (c >= 0).all() and (c <= 1).all()
+
+
+@given(accs_arrays, st.integers(1, 40))
+@settings(max_examples=30, deadline=None)
+def test_deletion_never_leaves_device_modelless(acc_rows, round_):
+    a = np.array(acc_rows)
+    n, m = a.shape
+    s = init_scores(n, m, ell=2)
+    s.active[:] = True
+    s.alive[:] = True
+    s = push_accuracies(s, a)
+    from repro.core.registry import ModelEntry
+    reg = ModelRegistry(m_cap=m)
+    for i in range(m):
+        reg.entries[i] = ModelEntry(i, None, 0)
+        reg.params[i] = {"w": np.zeros(1)}
+    cfg = FedCDConfig(n_devices=n, max_models=m)
+    s2, _ = apply_deletions(s, reg, round_, cfg)
+    assert (s2.active.sum(axis=1) >= 1).all()
+    # server holds exactly the models someone still uses
+    for mid in range(m):
+        held = s2.active[:, mid].any()
+        assert reg.entries[mid].alive == bool(held)
+
+
+@given(st.integers(1, 200), st.integers(1, 400),
+       st.sampled_from([4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bounded(rows, cols, bits):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.normal(0, 2, (rows, cols)).astype(np.float32))
+    q, s = qref.quantize_ref(x, bits=bits)
+    xr = qref.dequantize_ref(q, s, x.shape, x.dtype)
+    qmax = (1 << (bits - 1)) - 1
+    err = np.abs(np.asarray(xr) - np.asarray(x))
+    # per-block: |err| <= scale/2 (+ tie rounding); scale = blockmax/qmax
+    assert err.max() <= np.asarray(s).max() * 0.500001 + 1e-7
+    assert np.abs(np.asarray(xr)).max() <= np.abs(np.asarray(x)).max() + 1e-6
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_weighted_average_permutation_invariant(ws):
+    import jax
+    from repro.core.aggregate import weighted_average
+    n = len(ws)
+    w = np.array(ws) + 1e-3
+    u = np.random.default_rng(n).normal(0, 1, (n, 5)).astype(np.float32)
+    out = weighted_average({"x": jnp.asarray(u)}, jnp.asarray(w))["x"]
+    perm = np.random.default_rng(1).permutation(n)
+    out_p = weighted_average({"x": jnp.asarray(u[perm])},
+                             jnp.asarray(w[perm]))["x"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p), atol=1e-5)

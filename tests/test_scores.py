@@ -1,0 +1,67 @@
+"""Unit tests: FedCD scoring (paper eq 2-3) and clone seeding."""
+import numpy as np
+import pytest
+
+from repro.core.scores import (init_scores, normalized_scores, push_accuracies,
+                               raw_scores, seed_clone_history)
+
+
+def test_init_single_model_score_one():
+    s = init_scores(4, 8, ell=3)
+    c = normalized_scores(s)
+    assert np.allclose(c[:, 0], 1.0)        # "Initialize all scores c = 1"
+    assert np.allclose(c[:, 1:], 0.0)
+
+
+def test_rolling_window_mean_eq2():
+    s = init_scores(2, 4, ell=3)
+    for acc in (0.2, 0.4, 0.9):
+        a = np.zeros((2, 4)); a[:, 0] = acc
+        s = push_accuracies(s, a)
+    r = raw_scores(s)
+    assert np.allclose(r[:, 0], np.mean([0.2, 0.4, 0.9]))
+    # window drops the oldest entry
+    a = np.zeros((2, 4)); a[:, 0] = 0.1
+    s = push_accuracies(s, a)
+    assert np.allclose(raw_scores(s)[:, 0], np.mean([0.4, 0.9, 0.1]))
+
+
+def test_partial_window_uses_filled_entries_only():
+    s = init_scores(1, 4, ell=3)
+    a = np.zeros((1, 4)); a[:, 0] = 0.5
+    s = push_accuracies(s, a)
+    assert np.allclose(raw_scores(s)[:, 0], 0.5)
+
+
+def test_normalization_eq3_sums_to_one():
+    s = init_scores(3, 4, ell=2)
+    s.active[:, 1] = True
+    s.alive[1] = True
+    accs = np.random.default_rng(0).uniform(0.1, 0.9, (3, 4))
+    s = push_accuracies(s, accs)
+    c = normalized_scores(s)
+    assert np.allclose(c.sum(axis=1), 1.0)
+    assert (c >= 0).all()
+
+
+def test_device_mask_freezes_nonparticipants():
+    s = init_scores(2, 4, ell=2)
+    a = np.zeros((2, 4)); a[:, 0] = 0.7
+    s = push_accuracies(s, a, device_mask=np.array([True, False]))
+    r = raw_scores(s)
+    assert np.allclose(r[0, 0], 0.7)
+    assert np.allclose(r[1, 0], 1.0)        # untouched -> init score
+
+
+def test_clone_seeding_one_minus_parent():
+    s = init_scores(2, 4, ell=3)
+    a = np.zeros((2, 4)); a[:, 0] = 0.8
+    s = push_accuracies(s, a)
+    s = seed_clone_history(s, parent=0, clone=1)
+    c = normalized_scores(s)
+    # parent score was 1.0 normalized (only model) -> clone seeded 1-1=0,
+    # renormalized: parent 0.8/(0.8+0.0), clone 0
+    assert c[0, 1] == pytest.approx((1 - 1.0) / (0.8 + (1 - 1.0) + 1e-12),
+                                    abs=1e-6)
+    assert s.active[:, 1].all()
+    assert s.alive[1]
