@@ -12,14 +12,16 @@ import numpy as np
 from benchmarks import common as C
 
 
-def run(rounds: int = 40, model: str = "mlp", force: bool = False):
-    name = f"fig1_hierarchical_{model}_{rounds}"
+def run(rounds: int = 40, model: str = "mlp", force: bool = False,
+        engine: str = "batched"):
+    suffix = "" if engine == "batched" else f"_{engine}"
+    name = f"fig1_hierarchical_{model}_{rounds}{suffix}"
     cached = None if force else C.load_result(name)
     if cached is None:
         t0 = time.time()
         cfg = C.default_cfg()
         fedcd, fedavg, devs = C.run_pair("hierarchical", rounds, cfg,
-                                         model=model)
+                                         model=model, engine=engine)
         cached = {
             "rounds": rounds,
             "fedcd_per_archetype": C.per_archetype_curves(fedcd.metrics,

@@ -3,6 +3,7 @@ correctness-path timings, NOT TPU perf) vs the jnp oracle, plus payload
 size accounting which IS hardware-independent."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -24,29 +25,52 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(force: bool = False):
-    x = jax.random.normal(jax.random.PRNGKey(0), (512, 4096))
+def run(force: bool = False, quick: bool = False):
+    qshape = (64, 2048) if quick else (512, 4096)
+    N, D = (8, 4096) if quick else (15, 512 * 256)
+    n_models = 4
+
+    x = jax.random.normal(jax.random.PRNGKey(0), qshape)
     lines = []
     us = _time(lambda a: qops.quantize(a)[0], x)
     lines.append(C.csv_line("kernel_quantize_pallas_interp", us,
-                            "shape=512x4096"))
+                            f"shape={qshape[0]}x{qshape[1]}"))
     us = _time(lambda a: qref.quantize_ref(a)[0], x)
-    lines.append(C.csv_line("kernel_quantize_jnp_ref", us, "shape=512x4096"))
+    lines.append(C.csv_line("kernel_quantize_jnp_ref", us,
+                            f"shape={qshape[0]}x{qshape[1]}"))
 
-    u = jax.random.normal(jax.random.PRNGKey(1), (15, 512 * 256))
-    w = jax.random.uniform(jax.random.PRNGKey(2), (15,))
+    u = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    w = jax.random.uniform(jax.random.PRNGKey(2), (N,))
     d = jnp.sum(w)
     us = _time(wops.weighted_agg, u, w, d)
     lines.append(C.csv_line("kernel_weighted_agg_pallas_interp", us,
-                            "N=15,D=131072"))
+                            f"N={N},D={D}"))
     us = _time(lambda a, b, c: wref.weighted_agg_ref(a, b, c), u, w, d)
     lines.append(C.csv_line("kernel_weighted_agg_jnp_ref", us,
-                            "N=15,D=131072"))
+                            f"N={N},D={D}"))
+
+    # multi-model path: the batched engine's per-round aggregation —
+    # all models from one work batch in one fused call vs M single calls
+    wm = np.zeros((n_models, N), np.float32)
+    for j in range(n_models):
+        wm[j, j::n_models] = np.asarray(w)[j::n_models]
+    wm = jnp.asarray(wm)
+    dm = jnp.maximum(jnp.sum(wm, axis=1), 1e-12)
+    us_multi = _time(wops.multi_weighted_agg, u, wm, dm)
+    lines.append(C.csv_line("kernel_multi_weighted_agg_fused", us_multi,
+                            f"M={n_models},B={N},D={D}"))
+    us_loop = _time(
+        lambda a, ws, ds: [wops.weighted_agg(a, ws[j], ds[j])
+                           for j in range(n_models)][-1], u, wm, dm)
+    lines.append(C.csv_line(
+        "kernel_multi_weighted_agg_per_model_loop", us_loop,
+        f"M={n_models},B={N},D={D};fused_speedup="
+        f"{us_loop / max(us_multi, 1e-9):.2f}x"))
 
     q, s = qref.quantize_ref(u)
     us = _time(wops.dequant_agg, q, s, w, d)
     lines.append(C.csv_line("kernel_dequant_agg_fused_interp", us,
-                            "N=15,D=131072"))
+                            f"N={N},D={D}"))
 
     tree = {"w": x}
     f32 = sum(l.size * 4 for l in jax.tree.leaves(tree))
@@ -58,5 +82,9 @@ def run(force: bool = False):
 
 
 if __name__ == "__main__":
-    for ln in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (small shapes)")
+    args = ap.parse_args()
+    for ln in run(quick=args.quick):
         print(ln)

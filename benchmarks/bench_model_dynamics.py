@@ -5,8 +5,16 @@ Fig 7: consensus preferred model per archetype over rounds — devices
 should segregate by meta-archetype after the first milestone.
 Fig 8/9: number of active (device, model) preferences and mean score σ,
 swept over device bias ∈ {0.2 (IID-within-meta), 0.45, 0.65, 0.9}.
+
+``--compare-engines`` instead times the batched round engine against the
+legacy per-model loop on a multi-model population (milestones at rounds
+1 and 2 → 4 live models) and reports the steady-state per-round speedup.
+``--quick`` shrinks it to a CI smoke (10 devices, 2 measured rounds).
 """
 from __future__ import annotations
+
+import argparse
+import time
 
 import numpy as np
 
@@ -60,6 +68,85 @@ def run(rounds: int = 30, model: str = "mlp", force: bool = False):
     return lines
 
 
+def compare_engines(rounds: int = 8, model: str = "mlp",
+                    quick: bool = False):
+    """Time batched vs legacy on identical seeded runs with ≥4 live
+    models (milestones at rounds 1 and 2 double the population twice).
+
+    Warmup rounds (tracing + bucket compilation) are excluded: the
+    steady-state figure is the median per-round wall over the rounds
+    after the last milestone, where both engines run fully compiled.
+    """
+    if quick:
+        rounds = max(rounds, 6)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65,
+                                 devices_per_archetype=1)
+        cfg = C.default_cfg(n_devices=len(devs), devices_per_round=5,
+                            milestones=(1, 2), late_delete_round=rounds + 1)
+    else:
+        rounds = max(rounds, 6)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65)
+        cfg = C.default_cfg(milestones=(1, 2), late_delete_round=rounds + 1)
+    params, loss_fn, acc_fn = C.model_fns(model)
+
+    servers = {}
+    total = {}
+    for engine in ("legacy", "batched"):
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH, engine=engine)
+        t0 = time.time()
+        srv.run(rounds)
+        total[engine] = time.time() - t0
+        servers[engine] = srv
+
+    # both engines walk the same RNG stream -> identical model dynamics,
+    # so per-round timings align round for round
+    live = [m.live_models for m in servers["batched"].metrics]
+    # the population mutates through rounds 1-3 (two milestones + first
+    # deletions), each mutation re-bucketing the work batch; every bucket
+    # is compiled by round 4, so steady state starts at round 5
+    steady = list(range(5, rounds + 1)) or [rounds]
+    med = {e: float(np.median([servers[e].metrics[t - 1].wall_s
+                               for t in steady])) for e in servers}
+    speedup = med["legacy"] / max(med["batched"], 1e-12)
+    lines = [
+        C.csv_line(
+            "engine_round_wall_batched", med["batched"] * 1e6,
+            f"rounds={rounds};live_models={max(live)};"
+            f"devices={cfg.n_devices}"),
+        C.csv_line(
+            "engine_round_wall_legacy", med["legacy"] * 1e6,
+            f"rounds={rounds};live_models={max(live)};"
+            f"devices={cfg.n_devices}"),
+        C.csv_line(
+            "engine_speedup", 0.0,
+            f"batched_over_legacy={speedup:.2f}x;"
+            f"total_legacy_s={total['legacy']:.2f};"
+            f"total_batched_s={total['batched']:.2f}"),
+    ]
+    # smoke check: the engines must agree on the population dynamics
+    legacy_live = [m.live_models for m in servers["legacy"].metrics]
+    if legacy_live != live:
+        raise AssertionError(
+            f"engine divergence: legacy live={legacy_live} batched={live}")
+    return lines
+
+
 if __name__ == "__main__":
-    for ln in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compare-engines", action="store_true",
+                    help="time batched vs legacy round engines")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (small config, few rounds)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.compare_engines:
+        out = compare_engines(args.rounds or (6 if args.quick else 8),
+                              args.model, quick=args.quick)
+    else:
+        out = run(args.rounds or (6 if args.quick else 30), args.model,
+                  args.force or args.quick)
+    for ln in out:
         print(ln)

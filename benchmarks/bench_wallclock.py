@@ -1,6 +1,11 @@
 """Paper Table 1: rounds till convergence + wall-clock ratio, FedCD vs
-FedAvg, on both experimental setups. Reuses the fig1/fig4 runs."""
+FedAvg, on both experimental setups. Reuses the fig1/fig4 runs.
+
+``--engine legacy`` re-runs the table on the legacy per-model round loop
+(engine comparison mode: run once per engine and diff the ratios)."""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -8,13 +13,15 @@ from benchmarks import common as C
 from benchmarks import bench_hierarchical, bench_hypergeometric
 
 
-def run(rounds: int = 40, model: str = "mlp", force: bool = False):
-    bench_hierarchical.run(rounds, model, force)
-    bench_hypergeometric.run(rounds, model, force)
+def run(rounds: int = 40, model: str = "mlp", force: bool = False,
+        engine: str = "batched"):
+    bench_hierarchical.run(rounds, model, force, engine=engine)
+    bench_hypergeometric.run(rounds, model, force, engine=engine)
+    suffix = "" if engine == "batched" else f"_{engine}"
     lines = []
     for setup, mod in (("hierarchical", "fig1_hierarchical"),
                        ("hypergeometric", "fig4_hypergeometric")):
-        r = C.load_result(f"{mod}_{model}_{rounds}")
+        r = C.load_result(f"{mod}_{model}_{rounds}{suffix}")
         # Table 1 semantics: FedCD converges at its own plateau; FedAvg is
         # measured against the SAME accuracy target (it never reaches it,
         # so it hits the cap — the paper's 300-round asterisk)
@@ -26,12 +33,19 @@ def run(rounds: int = 40, model: str = "mlp", force: bool = False):
         avg_wall = r["fedavg_wall_s"] * avg_conv / rounds
         ratio = avg_wall / max(cd_wall, 1e-9)
         lines.append(C.csv_line(
-            f"table1_{setup}", 0.0,
+            f"table1_{setup}{suffix}", 0.0,
             f"rounds_fedcd={cd_conv};rounds_fedavg={avg_conv}{avg_capped};"
             f"wallclock_1_to_{ratio:.3f}"))
     return lines
 
 
 if __name__ == "__main__":
-    for ln in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "legacy"])
+    args = ap.parse_args()
+    for ln in run(args.rounds, args.model, args.force, engine=args.engine):
         print(ln)

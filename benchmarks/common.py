@@ -61,13 +61,14 @@ def default_cfg(**kw) -> FedCDConfig:
 
 
 def run_pair(setup: str, rounds: int, cfg: FedCDConfig, model: str = "mlp",
-             bias: Optional[float] = None):
+             bias: Optional[float] = None, engine: str = "batched"):
     """Run FedCD + FedAvg with identical data/init; return both servers."""
     devs, data = make_data(setup, seed=cfg.seed, bias=bias)
     params, loss_fn, acc_fn = model_fns(model)
-    fedcd = FedCDServer(cfg, params, loss_fn, acc_fn, data, batch_size=BATCH)
+    fedcd = FedCDServer(cfg, params, loss_fn, acc_fn, data, batch_size=BATCH,
+                        engine=engine)
     fedavg = FedAvgServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=BATCH)
+                          batch_size=BATCH, engine=engine)
     fedcd.run(rounds)
     fedavg.run(rounds)
     return fedcd, fedavg, devs

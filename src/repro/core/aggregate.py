@@ -44,6 +44,36 @@ def weighted_average(stacked_updates: Any, weights: jax.Array,
     return jax.tree.map(avg, stacked_updates)
 
 
+def multi_weighted_average(stacked_updates: Any, weights: jax.Array,
+                           literal_eq1: bool = False,
+                           use_kernel: bool = False) -> Any:
+    """Aggregate every live model from one shared work batch (eq 1, fused).
+
+    stacked_updates: pytree with leading pair axis B (trained
+    ``(model, device)`` pairs from the batched engine); weights (M, B)
+    with row m carrying c_m_i for pairs that belong to model m and 0
+    elsewhere (padding pairs are all-zero columns). Returns a pytree with
+    leading model axis M.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    row_sums = jnp.sum(w, axis=1)
+    denoms = (jnp.ones_like(row_sums) if literal_eq1
+              else jnp.maximum(row_sums, 1e-12))
+
+    if use_kernel:
+        from repro.kernels.weighted_agg import ops as wa_ops
+        leaves, treedef = jax.tree_util.tree_flatten(stacked_updates)
+        outs = [wa_ops.multi_weighted_agg(leaf, w, denoms) for leaf in leaves]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def avg(leaf: jax.Array) -> jax.Array:
+        acc = jnp.einsum("b...,mb->m...", leaf.astype(jnp.float32), w)
+        df = denoms.reshape((-1,) + (1,) * (acc.ndim - 1))
+        return (acc / df).astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked_updates)
+
+
 def participation_weights(scores_c: np.ndarray, model_id: int,
                           participating: np.ndarray,
                           active: np.ndarray) -> np.ndarray:

@@ -3,6 +3,10 @@
 Identical client loop and data plumbing as FedCDServer so the comparison
 isolates the algorithm: one global model, uniform averaging over the
 participating devices' updates.
+
+Engines mirror FedCDServer: ``"batched"`` (default) gathers only the
+participating devices into one jitted vmapped train step; ``"legacy"``
+trains all N devices and zero-weights the non-participants away.
 """
 from __future__ import annotations
 
@@ -11,11 +15,15 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FedCDConfig
-from repro.core.aggregate import weighted_average
-from repro.federated.simulation import make_eval, make_local_train, make_perms
+from repro.core.aggregate import multi_weighted_average, weighted_average
+from repro.core.fedcd import ENGINES
+from repro.federated.simulation import (make_eval, make_group_train,
+                                        make_local_train, make_perms,
+                                        pad_work_batch)
 
 
 @dataclass
@@ -30,19 +38,47 @@ class FedAvgRound:
 class FedAvgServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
-                 data: Dict[str, Any], batch_size: int = 64):
+                 data: Dict[str, Any], batch_size: int = 64,
+                 engine: str = "batched"):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.data = data
         self.batch_size = batch_size
         self.n_devices = data["train"][0].shape[0]
         self.params = init_params
-        self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
+        self.engine = engine
+        if engine == "batched":
+            self.group_train = make_group_train(loss_fn, cfg.lr, batch_size)
+        else:
+            self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
         self.evaluate = make_eval(acc_fn)
         self.metrics: List[FedAvgRound] = []
         self._model_bytes = sum(
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(init_params))
+
+    def _train_batched(self, participating: np.ndarray,
+                       perms: np.ndarray) -> None:
+        xs, ys = self.data["train"]
+        d_ids = np.nonzero(participating)[0]
+        b = len(d_ids)
+        m_idx, d_idx, pp = pad_work_batch(
+            [0] * b, list(d_ids), [perms[d] for d in d_ids])
+        stacked = jax.tree.map(lambda a: jnp.asarray(a)[None], self.params)
+        trained = self.group_train(stacked, m_idx, xs, ys, d_idx, pp)
+        w = np.zeros((1, len(m_idx)), np.float32)
+        w[0, :b] = 1.0
+        agg = multi_weighted_average(trained, w)
+        self.params = jax.tree.map(lambda a: np.asarray(a[0]), agg)
+
+    def _train_legacy(self, participating: np.ndarray,
+                      perms: np.ndarray) -> None:
+        xs, ys = self.data["train"]
+        trained = self.local_train(self.params, xs, ys, perms)
+        w = participating.astype(np.float32)
+        self.params = jax.tree.map(np.asarray, weighted_average(trained, w))
 
     def run_round(self, t: int) -> FedAvgRound:
         t0 = time.time()
@@ -50,12 +86,13 @@ class FedAvgServer:
         participating = np.zeros(self.n_devices, bool)
         participating[self.rng.choice(self.n_devices, cfg.devices_per_round,
                                       replace=False)] = True
-        xs, ys = self.data["train"]
+        xs, _ys = self.data["train"]
         perms = make_perms(self.rng, self.n_devices, xs.shape[1],
                            self.batch_size, cfg.local_epochs)
-        trained = self.local_train(self.params, xs, ys, perms)
-        w = participating.astype(np.float32)
-        self.params = jax.tree.map(np.asarray, weighted_average(trained, w))
+        if self.engine == "batched":
+            self._train_batched(participating, perms)
+        else:
+            self._train_legacy(participating, perms)
         tx, ty = self.data["test"]
         vx, vy = self.data["val"]
         m = FedAvgRound(

@@ -6,24 +6,47 @@ score-weighted aggregation per model (eq 1) → evaluate on validation
 data → update scores (eq 2-3) → deletions (eq 4 + late rule) → milestone
 cloning. Metrics needed by every paper figure/table are recorded in
 ``self.metrics``.
+
+Two round engines share the control plane (sampling, scores, lifecycle,
+transport accounting — identical RNG stream):
+
+* ``engine="batched"`` (default): ONE jitted train step vmapped over the
+  gathered ``(participating & holder)`` (model, device) pairs, padded to
+  a static bucket (federated.simulation.bucket_size) so the step
+  retraces only when the bucket changes; score-weighted aggregation for
+  ALL live models in one fused ``multi_weighted_average`` call; one
+  vmapped eval scores every live model on every device, and ``_collect``
+  reads per-device rows out of that matrix. Work is O(pairs) per round.
+* ``engine="legacy"``: the original per-model Python loop — every live
+  model trains ALL N devices (non-holders are zero-weighted away), each
+  model is aggregated and evaluated in its own dispatch. Work is
+  O(models · devices). Kept as the equivalence oracle and benchmark
+  baseline.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FedCDConfig
 from repro.core import quantize as qz
-from repro.core.aggregate import participation_weights, weighted_average
+from repro.core.aggregate import (multi_weighted_average,
+                                  participation_weights, weighted_average)
 from repro.core.lifecycle import apply_deletions, clone_at_milestone
 from repro.core.registry import ModelRegistry
-from repro.core.scores import (ScoreState, init_scores, normalized_scores,
+from repro.core.scores import (init_scores, normalized_scores,
                                push_accuracies)
-from repro.federated.simulation import make_eval, make_local_train, make_perms
+from repro.federated.simulation import (bucket_size, make_eval,
+                                        make_group_eval, make_group_train,
+                                        make_local_train, make_perms,
+                                        pad_work_batch)
+
+ENGINES = ("batched", "legacy")
 
 
 @dataclass
@@ -43,9 +66,11 @@ class FedCDServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 use_agg_kernel: bool = False):
+                 use_agg_kernel: bool = False, engine: str = "batched"):
         """data: stacked device splits from ``partition.stack_devices``:
         {"train": (xs (N,n,...), ys), "val": ..., "test": ...}."""
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.data = data
@@ -55,8 +80,13 @@ class FedCDServer:
         self.registry = ModelRegistry.create(init_params, cfg.max_models)
         self.state = init_scores(cfg.n_devices, cfg.max_models,
                                  cfg.score_window)
-        self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
-        self.evaluate = make_eval(acc_fn)
+        self.engine = engine
+        if engine == "batched":
+            self.group_train = make_group_train(loss_fn, cfg.lr, batch_size)
+            self.group_eval = make_group_eval(acc_fn)
+        else:
+            self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
+            self.evaluate = make_eval(acc_fn)
         self.use_agg_kernel = use_agg_kernel
         self.metrics: List[RoundMetrics] = []
         self._model_bytes = sum(
@@ -75,6 +105,14 @@ class FedCDServer:
     def _maybe_compress(self, params: Any) -> Any:
         return qz.roundtrip(params, self.cfg.quantize_bits)
 
+    def _stack_params(self, model_ids: Sequence[int], pad_to: int) -> Any:
+        """Stack live model params into one pytree with a leading model
+        axis of static length ``pad_to`` (rows past the live count repeat
+        model 0 and are never read by real pairs)."""
+        trees = [self.registry.params[m] for m in model_ids]
+        trees += [trees[0]] * (pad_to - len(trees))
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
     # -- Algorithm 1 -------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
         t0 = time.time()
@@ -83,6 +121,91 @@ class FedCDServer:
         participating[self.rng.choice(self.n_devices, cfg.devices_per_round,
                                       replace=False)] = True
         c = normalized_scores(self.state)
+
+        if self.engine == "batched":
+            transfers, accs = self._train_eval_batched(participating, c)
+        else:
+            transfers, accs = self._train_eval_legacy(participating, c)
+
+        self.state = push_accuracies(self.state, accs)
+        self.state, _ = apply_deletions(self.state, self.registry, t, cfg)
+        if t in cfg.milestones:
+            self.state, _ = clone_at_milestone(
+                self.state, self.registry, t, cfg, self.rng,
+                clone_params_fn=self._maybe_compress)
+            transfers += sum(int(self.state.active[:, m2].sum())
+                             for m2 in self.registry.live_ids())
+
+        metrics = self._collect(t, transfers, time.time() - t0)
+        self.metrics.append(metrics)
+        return metrics
+
+    # -- batched engine: one fused train/agg dispatch per round -----------
+    def _train_eval_batched(self, participating: np.ndarray, c: np.ndarray
+                            ) -> Tuple[int, np.ndarray]:
+        cfg = self.cfg
+        xs, ys = self.data["train"]
+        n_examples = xs.shape[1]
+        transfers = 0
+
+        # gather the (participating & holder) pairs; per-model perms are
+        # drawn in live-id order so the host RNG stream matches legacy
+        agg_models: List[int] = []
+        pair_model: List[int] = []
+        pair_device: List[int] = []
+        pair_perms: List[np.ndarray] = []
+        for m in self.registry.live_ids():
+            holders = self.state.active[:, m] & participating
+            if not holders.any():
+                continue
+            perms = make_perms(self.rng, self.n_devices, n_examples,
+                               self.batch_size, cfg.local_epochs)
+            d_ids = np.nonzero(holders)[0]
+            agg_models.append(m)
+            pair_model.extend([m] * len(d_ids))
+            pair_device.extend(int(d) for d in d_ids)
+            pair_perms.extend(perms[d] for d in d_ids)
+            transfers += 2 * len(d_ids)
+
+        if agg_models:
+            b = len(pair_model)
+            m_pad = bucket_size(len(agg_models), minimum=1)
+            slot = {m: j for j, m in enumerate(agg_models)}
+            m_idx, d_idx, perms = pad_work_batch(
+                [slot[m] for m in pair_model], pair_device, pair_perms)
+            stacked = self._stack_params(agg_models, m_pad)
+            trained = self.group_train(stacked, m_idx, xs, ys, d_idx, perms)
+            # weights (m_pad, b_pad): row j carries c_m_i for model j's
+            # pairs; padding pairs/models stay all-zero columns/rows
+            w = np.zeros((m_pad, len(m_idx)), np.float32)
+            w[m_idx[:b], np.arange(b)] = c[pair_device, pair_model]
+            agg = jax.tree.map(np.asarray, multi_weighted_average(
+                trained, w, use_kernel=self.use_agg_kernel))
+            for j, m in enumerate(agg_models):
+                self.registry.params[m] = self._maybe_compress(
+                    jax.tree.map(lambda a: a[j], agg))
+
+        accs = np.zeros((self.n_devices, cfg.max_models))
+        vx, vy = self.data["val"]
+        mat, live = self._eval_matrix(vx, vy)
+        for j, m in enumerate(live):
+            accs[:, m] = mat[j]
+        return transfers, accs
+
+    def _eval_matrix(self, x: np.ndarray, y: np.ndarray
+                     ) -> Tuple[np.ndarray, List[int]]:
+        """(live, N) accuracy of every live model on every device split,
+        one fused vmapped call."""
+        live = self.registry.live_ids()
+        if not live:
+            return np.zeros((0, self.n_devices)), live
+        stacked = self._stack_params(live, bucket_size(len(live), minimum=1))
+        return np.asarray(self.group_eval(stacked, x, y)), live
+
+    # -- legacy engine: per-model Python loop ------------------------------
+    def _train_eval_legacy(self, participating: np.ndarray, c: np.ndarray
+                           ) -> Tuple[int, np.ndarray]:
+        cfg = self.cfg
         xs, ys = self.data["train"]
         n_examples = xs.shape[1]
         transfers = 0
@@ -107,18 +230,7 @@ class FedCDServer:
         for m in self.registry.live_ids():
             accs[:, m] = np.asarray(self.evaluate(self.registry.params[m],
                                                   vx, vy))
-        self.state = push_accuracies(self.state, accs)
-        self.state, _ = apply_deletions(self.state, self.registry, t, cfg)
-        if t in cfg.milestones:
-            self.state, _ = clone_at_milestone(
-                self.state, self.registry, t, cfg, self.rng,
-                clone_params_fn=self._maybe_compress)
-            transfers += sum(int(self.state.active[:, m2].sum())
-                             for m2 in self.registry.live_ids())
-
-        metrics = self._collect(t, transfers, time.time() - t0)
-        self.metrics.append(metrics)
-        return metrics
+        return transfers, accs
 
     def _collect(self, t: int, transfers: int, wall: float) -> RoundMetrics:
         c = normalized_scores(self.state)
@@ -127,14 +239,26 @@ class FedCDServer:
         vx, vy = self.data["val"]
         test_acc = np.zeros(self.n_devices)
         val_acc = np.zeros(self.n_devices)
-        for m in np.unique(preferred):
-            sel = preferred == m
-            if m not in self.registry.params:
-                continue
-            test_acc[sel] = np.asarray(self.evaluate(
-                self.registry.params[m], tx, ty))[sel]
-            val_acc[sel] = np.asarray(self.evaluate(
-                self.registry.params[m], vx, vy))[sel]
+        if self.engine == "batched":
+            # reuse the fused (live, N) accuracy matrices: device i reads
+            # row slot[preferred[i]] instead of a per-model re-evaluation
+            test_mat, live = self._eval_matrix(tx, ty)
+            val_mat, _ = self._eval_matrix(vx, vy)
+            slot = {m: j for j, m in enumerate(live)}
+            for i in range(self.n_devices):
+                j = slot.get(int(preferred[i]))
+                if j is not None:
+                    test_acc[i] = test_mat[j, i]
+                    val_acc[i] = val_mat[j, i]
+        else:
+            for m in np.unique(preferred):
+                sel = preferred == m
+                if m not in self.registry.params:
+                    continue
+                test_acc[sel] = np.asarray(self.evaluate(
+                    self.registry.params[m], tx, ty))[sel]
+                val_acc[sel] = np.asarray(self.evaluate(
+                    self.registry.params[m], vx, vy))[sel]
         stds = []
         for i in range(self.n_devices):
             ci = c[i, self.state.active[i]]

@@ -40,6 +40,79 @@ def make_eval(acc_fn: Callable) -> Callable:
     return jax.jit(jax.vmap(acc_fn, in_axes=(None, 0, 0)))
 
 
+def bucket_size(n: int, minimum: int = 8) -> int:
+    """Static bucket for the batched engine's work buffers: round ``n``
+    up to an eighth-octave step (multiples of 2^k/8 within each
+    power-of-two octave). The jitted group step sees at most 8 distinct
+    shapes per octave instead of retracing every round; padding waste
+    stays < 14% once ``n > 8 * minimum`` (smaller octaves clamp the
+    step to ``minimum``, so e.g. n=9 pads to 16)."""
+    if n <= minimum:
+        return minimum
+    octave = 1 << (n - 1).bit_length()          # next power of two ≥ n
+    step = max(octave // 8, minimum)
+    return -(-n // step) * step
+
+
+def pad_work_batch(model_idx: "list[int]", device_idx: "list[int]",
+                   perm_rows: "list[np.ndarray]", minimum: int = 8
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad gathered (model, device, perm) pair lists to one static
+    bucket for the group train step. Padding pairs point at model 0 /
+    device 0 with all-zero perms; callers mask them out of aggregation
+    with zero weight columns."""
+    b = len(model_idx)
+    b_pad = bucket_size(b, minimum)
+    m_idx = np.zeros(b_pad, np.int32)
+    m_idx[:b] = model_idx
+    d_idx = np.zeros(b_pad, np.int32)
+    d_idx[:b] = device_idx
+    perms = np.zeros((b_pad,) + perm_rows[0].shape, np.int32)
+    perms[:b] = np.stack(perm_rows)
+    return m_idx, d_idx, perms
+
+
+def make_group_train(loss_fn: Callable, lr: float, batch_size: int
+                     ) -> Callable:
+    """Batched multi-model local training over a gathered work batch.
+
+    Returns jitted fn(stacked_params, model_idx (B,), xs (N,n,...),
+    ys (N,n), device_idx (B,), perms (B,T,b)) -> trained params with
+    leading pair axis B.
+
+    ``stacked_params`` is a pytree with a leading model axis (M, ...);
+    pair ``b`` trains model ``model_idx[b]`` on device ``device_idx[b]``'s
+    data. Only ``(participating & holder)`` pairs are materialized by the
+    caller (padding pairs are masked out at aggregation), so the engine
+    does O(pairs) work instead of the legacy O(models · devices).
+    Minibatches are gathered per step (``xs[d, idx]``) so the (B, n, ...)
+    gathered dataset is never materialized.
+    """
+
+    def one_pair(stacked_params, m_idx, xs, ys, d_idx, perm):
+        params = jax.tree.map(lambda a: a[m_idx], stacked_params)
+
+        def step(p, idx):
+            batch = (xs[d_idx, idx], ys[d_idx, idx])
+            g = jax.grad(loss_fn)(p, batch)
+            p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+            return p, None
+
+        params, _ = jax.lax.scan(step, params, perm)
+        return params
+
+    return jax.jit(jax.vmap(one_pair,
+                            in_axes=(None, 0, None, None, 0, 0)))
+
+
+def make_group_eval(acc_fn: Callable) -> Callable:
+    """Returns jitted fn(stacked_params (M, ...), xs (N,n,...), ys (N,n))
+    -> (M, N) accuracy of every model on every device's split, in one
+    fused call (the batched engine's evaluation matrix)."""
+    per_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    return jax.jit(jax.vmap(per_model, in_axes=(0, None, None)))
+
+
 def make_perms(rng: np.random.Generator, n_devices: int, n_examples: int,
                batch_size: int, epochs: int) -> np.ndarray:
     """(N, epochs*steps, batch) minibatch index matrices."""

@@ -32,6 +32,16 @@ def _weighted_agg_kernel(u_ref, w_ref, d_ref, o_ref):
                   ).astype(o_ref.dtype)
 
 
+def _multi_weighted_agg_kernel(u_ref, w_ref, d_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # (B, TILE_D)
+    w = w_ref[...].astype(jnp.float32)          # (1, B) — this model's row
+    denom = d_ref[0, 0]
+    acc = jax.lax.dot_general(
+        w, u, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (1, TILE_D) on the MXU
+    o_ref[...] = (acc / denom).astype(o_ref.dtype)
+
+
 def _dequant_agg_kernel(q_ref, s_ref, w_ref, d_ref, o_ref, *, block: int):
     q = q_ref[...].astype(jnp.float32)          # (N, TILE_D)
     N, td = q.shape
@@ -62,6 +72,34 @@ def weighted_agg_2d(updates: jax.Array, weights: jax.Array,
         out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
         interpret=interpret,
     )(updates, w2, d2)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def multi_weighted_agg_2d(updates: jax.Array, weights: jax.Array,
+                          denoms: jax.Array, interpret: bool = True
+                          ) -> jax.Array:
+    """updates (B, D) with D % TILE_D == 0; weights (M, B); denoms (M,).
+
+    Grid over (model, payload tile): each program streams the full work
+    batch for its tile and multiply-accumulates one model's row — all M
+    aggregates come out of one fused call instead of M kernel launches.
+    """
+    B, D = updates.shape
+    M = weights.shape[0]
+    w2 = weights.astype(jnp.float32)
+    d2 = denoms.astype(jnp.float32).reshape(M, 1)
+    return pl.pallas_call(
+        _multi_weighted_agg_kernel,
+        grid=(M, D // TILE_D),
+        in_specs=[
+            pl.BlockSpec((B, TILE_D), lambda i, j: (0, j)),
+            pl.BlockSpec((1, B), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0), memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, D), jnp.float32),
+        interpret=interpret,
+    )(updates, w2, d2)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -25,6 +25,22 @@ def weighted_agg(stacked_leaf: jax.Array, weights: jax.Array,
     return out[:D].reshape(tail).astype(stacked_leaf.dtype)
 
 
+def multi_weighted_agg(stacked_leaf: jax.Array, weights: jax.Array,
+                       denoms: jax.Array) -> jax.Array:
+    """stacked_leaf (B, ...), weights (M, B), denoms (M,) -> (M, ...)
+    per-model weighted averages of one shared work batch."""
+    B = stacked_leaf.shape[0]
+    M = weights.shape[0]
+    tail = stacked_leaf.shape[1:]
+    flat = stacked_leaf.reshape(B, -1).astype(jnp.float32)
+    D = flat.shape[1]
+    pad = (-D) % K.TILE_D
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = K.multi_weighted_agg_2d(flat, weights, jnp.asarray(denoms),
+                                  interpret=not _on_tpu())
+    return out[:, :D].reshape((M,) + tail).astype(stacked_leaf.dtype)
+
+
 def dequant_agg(q: jax.Array, scales: jax.Array, weights: jax.Array,
                 denom: jax.Array, block: int = 128) -> jax.Array:
     """Aggregate compressed payloads directly. q (N, D), D % block == 0."""

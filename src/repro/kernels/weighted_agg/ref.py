@@ -17,6 +17,19 @@ def weighted_agg_ref(updates: jax.Array, weights: jax.Array,
     return acc / denom
 
 
+def multi_weighted_agg_ref(updates: jax.Array, weights: jax.Array,
+                           denoms: jax.Array) -> jax.Array:
+    """Multi-model aggregation over one shared work batch.
+
+    updates (B, D) f32 — trained pair payloads; weights (M, B) f32 with
+    row m holding pair weights for model m (0 where the pair belongs to a
+    different model or is padding); denoms (M,) -> out (M, D).
+    """
+    acc = jnp.einsum("bd,mb->md", updates.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return acc / denoms[:, None]
+
+
 def dequant_agg_ref(q: jax.Array, scales: jax.Array, weights: jax.Array,
                     denom: jax.Array, block: int = 128) -> jax.Array:
     """q (N, D) int8, scales (N, D//block) f32 -> (D,) f32."""

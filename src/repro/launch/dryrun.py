@@ -137,6 +137,8 @@ def run_case(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # pre-0.5 jax: one dict per program
+            cost = cost[0] if cost else {}
         # loop-aware accounting from the optimized HLO (cost_analysis
         # counts while bodies once — see roofline/hlo_analyzer.py)
         acc = hlo_analyze(compiled.as_text())

@@ -11,19 +11,26 @@ from typing import Tuple
 import jax
 
 
+def _make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]
+               ) -> jax.sharding.Mesh:
+    # axis_types / AxisType only exist on newer jax; Auto is the default
+    # behaviour there, so omitting the kwarg is equivalent on older jax.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (cpu) devices exist — for tests."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -162,6 +162,32 @@ def multiplicities(text: str, comps: Dict[str, Computation]
     return dict(mult)
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas only — shapes like
+    ``f32[32,64]{1,0}`` printed inline (newer HLO dumps) contain commas."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [o for o in out if o]
+
+
+def _operand_name(operand: str) -> str:
+    """Last token of one operand entry — drops an inline type prefix."""
+    return operand.split(" ")[-1].lstrip("%")
+
+
 def _dot_flops(op: Op, comp: Computation) -> float:
     """2 * prod(result) * prod(contracted lhs dims)."""
     res_elems = 1
@@ -169,11 +195,10 @@ def _dot_flops(op: Op, comp: Computation) -> float:
         for d in dims:
             res_elems *= d
         break
-    m = _OPERANDS_RE.search(op.line[op.line.index(op.opcode):])
+    m = _OPERANDS_RE.search(op.line[op.line.index(op.opcode + "("):])
     if not m:
         return 0.0
-    operands = [o.strip().lstrip("%").split(" ")[0].rstrip(",")
-                for o in m.group(1).split(",")]
+    operands = [_operand_name(o) for o in _split_operands(m.group(1))]
     lhs = operands[0] if operands else None
     lhs_shape = comp.shapes.get(lhs, "") if lhs else ""
     dims = _shape_dims(lhs_shape)
@@ -189,12 +214,14 @@ def _dot_flops(op: Op, comp: Computation) -> float:
 
 
 def _operand_names(op: Op) -> List[str]:
-    start = op.line.index(op.opcode) + len(op.opcode)
+    try:
+        start = op.line.index(op.opcode + "(") + len(op.opcode)
+    except ValueError:
+        return []
     m = _OPERANDS_RE.search(op.line[start:])
     if not m:
         return []
-    return [o.strip().lstrip("%").split(" ")[0].rstrip(",")
-            for o in m.group(1).split(",") if o.strip()]
+    return [_operand_name(o) for o in _split_operands(m.group(1))]
 
 
 def _traffic_bytes(op: Op, comp: Computation) -> float:

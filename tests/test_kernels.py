@@ -59,6 +59,33 @@ def test_weighted_agg_kernel_matches_ref(n, shape):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
 
+@pytest.mark.parametrize("m,b,shape", [(1, 4, (33,)), (3, 8, (64, 32)),
+                                       (5, 17, (2, 5, 7))])
+def test_multi_weighted_agg_kernel_matches_ref(m, b, shape):
+    u = jax.random.normal(jax.random.PRNGKey(b), (b,) + shape)
+    w = jax.random.uniform(jax.random.PRNGKey(b + 1), (m, b))
+    # zero out some columns like the batched engine's padding pairs
+    w = w * (jax.random.uniform(jax.random.PRNGKey(b + 2), (1, b)) > 0.2)
+    d = jnp.maximum(jnp.sum(w, axis=1), 1e-12)
+    out = wops.multi_weighted_agg(u, w, d)
+    ref = wref.multi_weighted_agg_ref(u.reshape(b, -1), w, d)
+    np.testing.assert_allclose(np.asarray(out).reshape(m, -1),
+                               np.asarray(ref), atol=1e-5)
+
+
+def test_multi_weighted_agg_rows_match_single_model_kernel():
+    """Each row of the multi-model aggregate equals a single-model call."""
+    b, D = 6, 130
+    u = jax.random.normal(jax.random.PRNGKey(0), (b, D))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (3, b))
+    d = jnp.sum(w, axis=1)
+    multi = wops.multi_weighted_agg(u, w, d)
+    for j in range(3):
+        single = wops.weighted_agg(u, w[j], d[j])
+        np.testing.assert_allclose(np.asarray(multi[j]), np.asarray(single),
+                                   atol=1e-5)
+
+
 def test_dequant_agg_fused_matches_two_step():
     n, D = 6, 1024
     u = jax.random.normal(jax.random.PRNGKey(3), (n, D)) * 2

@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the dev extra: pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import FedCDConfig
 from repro.core.lifecycle import apply_deletions
