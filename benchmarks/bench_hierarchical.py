@@ -13,8 +13,11 @@ from benchmarks import common as C
 
 
 def run(rounds: int = 40, model: str = "mlp", force: bool = False,
-        engine: str = "batched"):
-    suffix = "" if engine == "batched" else f"_{engine}"
+        engine: str = "fused"):
+    # cache key always embeds the engine: PR 1 cached the batched engine
+    # under a bare suffix, so an empty suffix would serve stale batched
+    # results as fused on machines holding old caches
+    suffix = f"_{engine}"
     name = f"fig1_hierarchical_{model}_{rounds}{suffix}"
     cached = None if force else C.load_result(name)
     if cached is None:

@@ -14,8 +14,8 @@ from benchmarks import common as C
 
 
 def run(rounds: int = 40, model: str = "mlp", force: bool = False,
-        engine: str = "batched"):
-    suffix = "" if engine == "batched" else f"_{engine}"
+        engine: str = "fused"):
+    suffix = f"_{engine}"   # always engine-keyed (see bench_hierarchical)
     name = f"fig4_hypergeometric_{model}_{rounds}{suffix}"
     cached = None if force else C.load_result(name)
     if cached is None:

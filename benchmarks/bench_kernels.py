@@ -73,7 +73,7 @@ def run(force: bool = False, quick: bool = False):
                             f"N={N},D={D}"))
 
     tree = {"w": x}
-    f32 = sum(l.size * 4 for l in jax.tree.leaves(tree))
+    f32 = sum(leaf.size * 4 for leaf in jax.tree.leaves(tree))
     lines.append(C.csv_line(
         "quantize_payload_int8", 0.0,
         f"bytes={compressed_bytes(tree, 8)};f32_bytes={f32};"

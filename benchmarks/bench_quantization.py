@@ -5,8 +5,6 @@ has no significant accuracy effect.
 """
 from __future__ import annotations
 
-import time
-
 from benchmarks import common as C
 from repro.core.fedcd import FedCDServer
 

@@ -1,8 +1,9 @@
 """Paper Table 1: rounds till convergence + wall-clock ratio, FedCD vs
 FedAvg, on both experimental setups. Reuses the fig1/fig4 runs.
 
-``--engine legacy`` re-runs the table on the legacy per-model round loop
-(engine comparison mode: run once per engine and diff the ratios)."""
+``--engine batched|legacy`` re-runs the table on an older round engine
+(engine comparison mode: run once per engine and diff the ratios);
+the default is the fused device-resident engine."""
 from __future__ import annotations
 
 import argparse
@@ -14,10 +15,10 @@ from benchmarks import bench_hierarchical, bench_hypergeometric
 
 
 def run(rounds: int = 40, model: str = "mlp", force: bool = False,
-        engine: str = "batched"):
+        engine: str = "fused"):
     bench_hierarchical.run(rounds, model, force, engine=engine)
     bench_hypergeometric.run(rounds, model, force, engine=engine)
-    suffix = "" if engine == "batched" else f"_{engine}"
+    suffix = f"_{engine}"   # always engine-keyed (see bench_hierarchical)
     lines = []
     for setup, mod in (("hierarchical", "fig1_hierarchical"),
                        ("hypergeometric", "fig4_hypergeometric")):
@@ -44,8 +45,8 @@ if __name__ == "__main__":
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
     ap.add_argument("--force", action="store_true")
-    ap.add_argument("--engine", default="batched",
-                    choices=["batched", "legacy"])
+    ap.add_argument("--engine", default="fused",
+                    choices=["fused", "batched", "legacy"])
     args = ap.parse_args()
     for ln in run(args.rounds, args.model, args.force, engine=args.engine):
         print(ln)

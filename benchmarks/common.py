@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -22,7 +21,7 @@ from repro.core.fedavg import FedAvgServer
 from repro.core.fedcd import FedCDServer
 from repro.data.partition import (hierarchical_devices,
                                   hypergeometric_devices, stack_devices)
-from repro.models.cnn import apply_cnn, cnn_accuracy, cnn_loss, init_cnn
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 from repro.models.mlp import (init_mlp_classifier, mlp_accuracy, mlp_loss)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -61,7 +60,7 @@ def default_cfg(**kw) -> FedCDConfig:
 
 
 def run_pair(setup: str, rounds: int, cfg: FedCDConfig, model: str = "mlp",
-             bias: Optional[float] = None, engine: str = "batched"):
+             bias: Optional[float] = None, engine: str = "fused"):
     """Run FedCD + FedAvg with identical data/init; return both servers."""
     devs, data = make_data(setup, seed=cfg.seed, bias=bias)
     params, loss_fn, acc_fn = model_fns(model)

@@ -4,12 +4,34 @@ Prints ``name,us_per_call,derived`` CSV. Results cached under
 experiments/paper/ (delete or pass --force to re-run).
 
   python -m benchmarks.run [--fast] [--force] [--model mlp|cnn]
+                           [--only a,b] [--json-out BENCH_x.json]
+
+``--json-out`` additionally writes every CSV row (plus run metadata) to
+a JSON artifact, so CI can upload it and the perf trajectory can be
+tracked against the committed baseline (benchmarks/BASELINE.json).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
+import subprocess
 import sys
 import time
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def parse_csv_line(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
@@ -20,6 +42,8 @@ def main() -> None:
     ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--json-out", default=None,
+                    help="write results to this JSON artifact path")
     args = ap.parse_args()
 
     from benchmarks import (bench_comm, bench_hierarchical,
@@ -43,10 +67,12 @@ def main() -> None:
                                                        args.force),
         "dynamics": lambda: bench_model_dynamics.run(dyn_rounds, args.model,
                                                      args.force),
+        "engines": lambda: bench_model_dynamics.compare_engines(
+            8 if args.fast else 20, args.model, quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),
-        "kernels": lambda: bench_kernels.run(args.force),
+        "kernels": lambda: bench_kernels.run(args.force, quick=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -55,16 +81,32 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
+    results = []
     for name, fn in benches.items():
         try:
             t1 = time.time()
             for line in fn():
                 print(line, flush=True)
+                results.append(dict(parse_csv_line(line), bench=name))
             print(f"# {name} done in {time.time() - t1:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
     print(f"# total {time.time() - t0:.1f}s failures={failures}")
+    if args.json_out:
+        payload = {
+            "git": _git_rev(),
+            "created_unix": time.time(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "args": {"fast": args.fast, "model": args.model,
+                     "only": args.only},
+            "failures": failures,
+            "results": results,
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json_out} ({len(results)} rows)")
     if failures:
         sys.exit(1)
 

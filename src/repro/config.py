@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer kinds used by models/transformer.py layouts
@@ -206,19 +206,23 @@ class ArchConfig:
                 total += attn_params() + mlp_params(ff)
                 active += attn_params() + mlp_params(ff)
             elif kind == MAMBA2:
-                total += mamba_params(); active += mamba_params()
+                total += mamba_params()
+                active += mamba_params()
             elif kind in (SLSTM, MLSTM):
-                total += xlstm_params(kind); active += xlstm_params(kind)
+                total += xlstm_params(kind)
+                active += xlstm_params(kind)
         if self.shared_attn_every:
             # one shared attention+mlp block (counted once) + per-site LoRA
             sb = attn_params() + mlp_params(self.d_ff) + 2 * d * d  # concat in-proj
             n_sites = self.n_layers // self.shared_attn_every
             lora = n_sites * self.shared_attn_lora_rank * 2 * d * 4
-            total += sb + lora; active += sb + lora / max(n_sites, 1)
+            total += sb + lora
+            active += sb + lora / max(n_sites, 1)
         if self.encdec.n_enc_layers:
             enc = self.encdec.n_enc_layers * (attn_params() + mlp_params(self.d_ff))
             cross = self.n_layers * attn_params()
-            total += enc + cross; active += enc + cross
+            total += enc + cross
+            active += enc + cross
         return {"total": total, "active": active}
 
 

@@ -1,12 +1,12 @@
 """Architecture registry + reduced (smoke) variants + input specs."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import (INPUT_SHAPES, ArchConfig, ShapeConfig, override)
+from repro.config import ArchConfig, ShapeConfig, override
 
 ARCH_REGISTRY: Dict[str, ArchConfig] = {}
 

@@ -10,10 +10,16 @@ Two backends:
   * Pallas path: fused weighted accumulation over flattened updates
     (kernels/weighted_agg) — the server hot-spot for CNN-scale mode-A
     aggregation; validated against this module in tests.
+
+Both are traceable and compose under jit/vmap: the fused round engine
+calls ``multi_weighted_average`` inside its single round dispatch with a
+bucketed (A, B) weight matrix over the models that trained this round,
+then scatters the aggregated rows into its stacked parameter bank
+(DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

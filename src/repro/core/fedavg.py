@@ -4,9 +4,15 @@ Identical client loop and data plumbing as FedCDServer so the comparison
 isolates the algorithm: one global model, uniform averaging over the
 participating devices' updates.
 
-Engines mirror FedCDServer: ``"batched"`` (default) gathers only the
-participating devices into one jitted vmapped train step; ``"legacy"``
-trains all N devices and zero-weights the non-participants away.
+Engines mirror FedCDServer: ``"fused"`` (default) keeps the global model
+device-resident and runs train → aggregate → val+test evaluation as one
+jitted, donated dispatch per round; ``"batched"`` (PR 1) gathers only the
+participating devices into one jitted vmapped train step but hops through
+the host for aggregation and evaluates in separate dispatches;
+``"legacy"`` trains all N devices and zero-weights the non-participants
+away. All engines draw the same sampling stream (participation, then one
+shared ``make_perms``) as FedCDServer, so FedCD-vs-FedAvg comparisons see
+identical per-round cohorts.
 """
 from __future__ import annotations
 
@@ -21,9 +27,9 @@ import numpy as np
 from repro.config import FedCDConfig
 from repro.core.aggregate import multi_weighted_average, weighted_average
 from repro.core.fedcd import ENGINES
-from repro.federated.simulation import (make_eval, make_group_train,
-                                        make_local_train, make_perms,
-                                        pad_work_batch)
+from repro.federated.simulation import (draw_round_sample, make_eval,
+                                        make_fused_round, make_group_train,
+                                        make_local_train, pad_work_batch)
 
 
 @dataclass
@@ -39,7 +45,7 @@ class FedAvgServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 engine: str = "batched"):
+                 engine: str = "fused"):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
         self.cfg = cfg
@@ -47,17 +53,58 @@ class FedAvgServer:
         self.data = data
         self.batch_size = batch_size
         self.n_devices = data["train"][0].shape[0]
-        self.params = init_params
         self.engine = engine
-        if engine == "batched":
-            self.group_train = make_group_train(loss_fn, cfg.lr, batch_size)
+        self._stacked = None
+        if engine == "fused":
+            self._fused_step = make_fused_round(loss_fn, acc_fn, cfg.lr)
+            self._stacked = jax.tree.map(
+                lambda a: jnp.asarray(a)[None], init_params)
+            self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
+                         for k, (x, y) in data.items()}
         else:
-            self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
-        self.evaluate = make_eval(acc_fn)
+            self._params = init_params
+            if engine == "batched":
+                self.group_train = make_group_train(loss_fn, cfg.lr,
+                                                    batch_size)
+            else:
+                self.local_train = make_local_train(loss_fn, cfg.lr,
+                                                    batch_size)
+            self.evaluate = make_eval(acc_fn)
         self.metrics: List[FedAvgRound] = []
         self._model_bytes = sum(
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(init_params))
+
+    @property
+    def params(self) -> Any:
+        """The global model (row 0 of the device bank in fused mode)."""
+        if self._stacked is not None:
+            return jax.tree.map(lambda a: a[0], self._stacked)
+        return self._params
+
+    @params.setter
+    def params(self, value: Any) -> None:
+        if self._stacked is not None:
+            self._stacked = jax.tree.map(
+                lambda a: jnp.asarray(a)[None], value)
+        else:
+            self._params = value
+
+    def _round_fused(self, participating: np.ndarray, perms: np.ndarray
+                     ) -> "tuple[np.ndarray, np.ndarray]":
+        d_ids = np.nonzero(participating)[0]
+        b = len(d_ids)
+        m_idx, d_idx, pp = pad_work_batch(
+            [0] * b, list(d_ids), [perms[d] for d in d_ids])
+        w = np.zeros((1, len(m_idx)), np.float32)
+        w[0, :b] = 1.0
+        # evaluate the global model on every device's val + test split in
+        # the same dispatch (one-row eval matrices)
+        self._stacked, val_mat, test_mat = self._fused_step(
+            self._stacked, m_idx, d_idx, pp, w, np.zeros(1, np.int32),
+            np.zeros(1, np.int32), np.zeros(1, np.int32),
+            *self._dev["train"], *self._dev["val"], *self._dev["test"])
+        return np.asarray(test_mat)[0], np.asarray(val_mat)[0]
 
     def _train_batched(self, participating: np.ndarray,
                        perms: np.ndarray) -> None:
@@ -83,22 +130,23 @@ class FedAvgServer:
     def run_round(self, t: int) -> FedAvgRound:
         t0 = time.time()
         cfg = self.cfg
-        participating = np.zeros(self.n_devices, bool)
-        participating[self.rng.choice(self.n_devices, cfg.devices_per_round,
-                                      replace=False)] = True
-        xs, _ys = self.data["train"]
-        perms = make_perms(self.rng, self.n_devices, xs.shape[1],
-                           self.batch_size, cfg.local_epochs)
-        if self.engine == "batched":
-            self._train_batched(participating, perms)
+        participating, perms = draw_round_sample(
+            self.rng, self.n_devices, cfg.devices_per_round,
+            self.data["train"][0].shape[1], self.batch_size,
+            cfg.local_epochs)
+        if self.engine == "fused":
+            test_acc, val_acc = self._round_fused(participating, perms)
         else:
-            self._train_legacy(participating, perms)
-        tx, ty = self.data["test"]
-        vx, vy = self.data["val"]
+            if self.engine == "batched":
+                self._train_batched(participating, perms)
+            else:
+                self._train_legacy(participating, perms)
+            tx, ty = self.data["test"]
+            vx, vy = self.data["val"]
+            test_acc = np.asarray(self.evaluate(self.params, tx, ty))
+            val_acc = np.asarray(self.evaluate(self.params, vx, vy))
         m = FedAvgRound(
-            round=t,
-            test_acc=np.asarray(self.evaluate(self.params, tx, ty)),
-            val_acc=np.asarray(self.evaluate(self.params, vx, vy)),
+            round=t, test_acc=test_acc, val_acc=val_acc,
             comm_bytes=2 * int(participating.sum()) * self._model_bytes,
             wall_s=time.time() - t0)
         self.metrics.append(m)

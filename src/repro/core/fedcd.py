@@ -7,21 +7,30 @@ data → update scores (eq 2-3) → deletions (eq 4 + late rule) → milestone
 cloning. Metrics needed by every paper figure/table are recorded in
 ``self.metrics``.
 
-Two round engines share the control plane (sampling, scores, lifecycle,
-transport accounting — identical RNG stream):
+Three round engines share the control plane (sampling, scores,
+lifecycle, transport accounting — identical RNG streams, see DESIGN.md
+§7):
 
-* ``engine="batched"`` (default): ONE jitted train step vmapped over the
-  gathered ``(participating & holder)`` (model, device) pairs, padded to
-  a static bucket (federated.simulation.bucket_size) so the step
-  retraces only when the bucket changes; score-weighted aggregation for
-  ALL live models in one fused ``multi_weighted_average`` call; one
-  vmapped eval scores every live model on every device, and ``_collect``
-  reads per-device rows out of that matrix. Work is O(pairs) per round.
+* ``engine="fused"`` (default): the device-resident data plane. Model
+  params live in the registry's stacked (m_cap, ...) device bank; the
+  WHOLE round — train over gathered ``(participating & holder)`` pairs,
+  fused score-weighted aggregation, the on-device quantize roundtrip,
+  and val+test evaluation of the active (device, model) pairs — is ONE
+  jitted dispatch with the bank donated in and out. ``push_accuracies``
+  and ``_collect`` both read the step's eval pairs, so the round emits
+  each eval matrix exactly once; next-round participation and perms are
+  drawn while the step is in flight (async host/device overlap). Work
+  is O(pairs) train + O(active pairs) eval per round.
+* ``engine="batched"``: the PR 1 engine — one jitted train step vmapped
+  over the gathered pairs, fused multi-model aggregation, but dense
+  (live, N) eval matrices dispatched three times per round (val for
+  scores, then val+test again in ``_collect``) and a host hop around
+  aggregation and quantization. Kept as the fused engine's benchmark
+  baseline.
 * ``engine="legacy"``: the original per-model Python loop — every live
   model trains ALL N devices (non-holders are zero-weighted away), each
-  model is aggregated and evaluated in its own dispatch. Work is
-  O(models · devices). Kept as the equivalence oracle and benchmark
-  baseline.
+  model aggregated and evaluated in its own dispatch. Work is
+  O(models · devices). Kept as the equivalence oracle.
 """
 from __future__ import annotations
 
@@ -41,12 +50,15 @@ from repro.core.lifecycle import apply_deletions, clone_at_milestone
 from repro.core.registry import ModelRegistry
 from repro.core.scores import (init_scores, normalized_scores,
                                push_accuracies)
-from repro.federated.simulation import (bucket_size, make_eval,
-                                        make_group_eval, make_group_train,
-                                        make_local_train, make_perms,
-                                        pad_work_batch)
+from repro.federated.simulation import (bucket_size, draw_round_sample,
+                                        make_eval, make_fused_eval,
+                                        make_fused_round, make_group_eval,
+                                        make_group_train, make_local_train,
+                                        pad_live_rows, pad_work_batch)
 
-ENGINES = ("batched", "legacy")
+ENGINES = ("fused", "batched", "legacy")
+
+LIFECYCLE_STREAM = 0xFEDCD   # keys the clone-noise RNG off the sampling one
 
 
 @dataclass
@@ -66,22 +78,39 @@ class FedCDServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 use_agg_kernel: bool = False, engine: str = "batched"):
+                 use_agg_kernel: bool = False, engine: str = "fused"):
         """data: stacked device splits from ``partition.stack_devices``:
         {"train": (xs (N,n,...), ys), "val": ..., "test": ...}."""
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
         self.cfg = cfg
+        # Two host RNG streams (DESIGN.md §7): ``rng`` drives round
+        # sampling (participation + perms) ONLY, so the fused engine can
+        # draw round t+1's sample while step t is in flight without
+        # reordering anything; ``life_rng`` drives clone-score noise.
         self.rng = np.random.default_rng(cfg.seed)
+        self.life_rng = np.random.default_rng([cfg.seed, LIFECYCLE_STREAM])
         self.data = data
         self.batch_size = batch_size
         self.n_devices = data["train"][0].shape[0]
         assert self.n_devices == cfg.n_devices, (self.n_devices, cfg.n_devices)
-        self.registry = ModelRegistry.create(init_params, cfg.max_models)
+        # only the fused engine stores params device-resident: the
+        # legacy/batched baselines keep PR 1's host dict storage so the
+        # engine benchmark compares against them as shipped
+        self.registry = ModelRegistry.create(init_params, cfg.max_models,
+                                             stacked=(engine == "fused"))
         self.state = init_scores(cfg.n_devices, cfg.max_models,
                                  cfg.score_window)
         self.engine = engine
-        if engine == "batched":
+        if engine == "fused":
+            self._fused_step = make_fused_round(
+                loss_fn, acc_fn, cfg.lr, cfg.quantize_bits, use_agg_kernel)
+            self._fused_eval = make_fused_eval(acc_fn)
+            # device-resident copies of every split: uploaded once, then
+            # passed by reference into each round step
+            self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
+                         for k, (x, y) in data.items()}
+        elif engine == "batched":
             self.group_train = make_group_train(loss_fn, cfg.lr, batch_size)
             self.group_eval = make_group_eval(acc_fn)
         else:
@@ -92,15 +121,30 @@ class FedCDServer:
         self._model_bytes = sum(
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(init_params))
+        # compressed transport size depends only on leaf shapes, which all
+        # models share — precompute so accounting never dereferences a
+        # (possibly extinct) live model's params
+        self._compressed_bytes = (
+            qz.compressed_bytes(init_params, cfg.quantize_bits)
+            if cfg.quantize_bits else self._model_bytes)
+        self._prefetch: Tuple[int, Tuple[np.ndarray, np.ndarray]] = None
+        # fused engine eval-row caches: a model's params change ONLY when
+        # it aggregates a training round or is born, so its (N,) val/test
+        # accuracy rows are reused bit-identically until then — with low
+        # participation most live models skip most rounds, so eval work
+        # per round is O(models that changed), not O(live)
+        self._val_cache: Dict[int, np.ndarray] = {}
+        self._test_cache: Dict[int, np.ndarray] = {}
+        self._needs_eval_refresh = False
+        # predicted test-eval rows for the next fused step: the models
+        # devices prefer now (preferences are sticky, so the prediction
+        # is exact in steady state; misses fall back to one small eval
+        # dispatch in _collect)
+        self._pred_rows: List[int] = [0]
 
     # -- transport accounting (paper §3.6) --------------------------------
     def _transport_bytes(self, n_transfers: int) -> int:
-        if self.cfg.quantize_bits:
-            per = qz.compressed_bytes(self.registry.params[
-                self.registry.live_ids()[0]], self.cfg.quantize_bits)
-        else:
-            per = self._model_bytes
-        return n_transfers * per
+        return n_transfers * self._compressed_bytes
 
     def _maybe_compress(self, params: Any) -> Any:
         return qz.roundtrip(params, self.cfg.quantize_bits)
@@ -113,68 +157,177 @@ class FedCDServer:
         trees += [trees[0]] * (pad_to - len(trees))
         return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
 
+    # -- round sampling ----------------------------------------------------
+    def _draw_sample(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One round's participation mask + minibatch perms (shared by all
+        models — every engine consumes the sampling stream identically)."""
+        return draw_round_sample(self.rng, self.n_devices,
+                                 self.cfg.devices_per_round,
+                                 self.data["train"][0].shape[1],
+                                 self.batch_size, self.cfg.local_epochs)
+
+    def _round_sample(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        if self._prefetch is not None and self._prefetch[0] == t:
+            sample = self._prefetch[1]
+            self._prefetch = None
+            return sample
+        return self._draw_sample()
+
     # -- Algorithm 1 -------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
         t0 = time.time()
         cfg = self.cfg
-        participating = np.zeros(self.n_devices, bool)
-        participating[self.rng.choice(self.n_devices, cfg.devices_per_round,
-                                      replace=False)] = True
+        participating, perms = self._round_sample(t)
         c = normalized_scores(self.state)
 
-        if self.engine == "batched":
-            transfers, accs = self._train_eval_batched(participating, c)
+        if self.engine == "fused":
+            transfers, accs = self._train_eval_fused(t, participating,
+                                                     perms, c)
+        elif self.engine == "batched":
+            transfers, accs = self._train_eval_batched(participating,
+                                                       perms, c)
         else:
-            transfers, accs = self._train_eval_legacy(participating, c)
+            transfers, accs = self._train_eval_legacy(participating,
+                                                      perms, c)
 
         self.state = push_accuracies(self.state, accs)
         self.state, _ = apply_deletions(self.state, self.registry, t, cfg)
         if t in cfg.milestones:
-            self.state, _ = clone_at_milestone(
-                self.state, self.registry, t, cfg, self.rng,
+            self.state, cloned = clone_at_milestone(
+                self.state, self.registry, t, cfg, self.life_rng,
                 clone_params_fn=self._maybe_compress)
             transfers += sum(int(self.state.active[:, m2].sum())
                              for m2 in self.registry.live_ids())
+            if self.engine == "fused" and cloned:
+                if cfg.quantize_bits:
+                    # clones are quantize roundtrips of their parents —
+                    # cached eval rows don't transfer; re-eval the
+                    # population once in _collect
+                    self._needs_eval_refresh = True
+                else:
+                    # a clone's params are bit-identical to its parent's
+                    for parent, clone in cloned:
+                        if parent in self._val_cache:
+                            self._val_cache[clone] = self._val_cache[parent]
+                        if parent in self._test_cache:
+                            self._test_cache[clone] = \
+                                self._test_cache[parent]
 
         metrics = self._collect(t, transfers, time.time() - t0)
         self.metrics.append(metrics)
         return metrics
 
-    # -- batched engine: one fused train/agg dispatch per round -----------
-    def _train_eval_batched(self, participating: np.ndarray, c: np.ndarray
-                            ) -> Tuple[int, np.ndarray]:
-        cfg = self.cfg
-        xs, ys = self.data["train"]
-        n_examples = xs.shape[1]
-        transfers = 0
-
-        # gather the (participating & holder) pairs; per-model perms are
-        # drawn in live-id order so the host RNG stream matches legacy
+    # -- shared pair gathering --------------------------------------------
+    def _gather_pairs(self, participating: np.ndarray, c: np.ndarray
+                      ) -> Tuple[List[int], List[int], List[int], int]:
+        """(participating & holder) pairs in live-model-id order, plus the
+        transport count (2 transfers per holder: up + down)."""
         agg_models: List[int] = []
         pair_model: List[int] = []
         pair_device: List[int] = []
-        pair_perms: List[np.ndarray] = []
+        transfers = 0
         for m in self.registry.live_ids():
             holders = self.state.active[:, m] & participating
             if not holders.any():
                 continue
-            perms = make_perms(self.rng, self.n_devices, n_examples,
-                               self.batch_size, cfg.local_epochs)
             d_ids = np.nonzero(holders)[0]
             agg_models.append(m)
             pair_model.extend([m] * len(d_ids))
             pair_device.extend(int(d) for d in d_ids)
-            pair_perms.extend(perms[d] for d in d_ids)
             transfers += 2 * len(d_ids)
+        return agg_models, pair_model, pair_device, transfers
+
+    # -- fused engine: the whole round in one dispatch --------------------
+    def _train_eval_fused(self, t: int, participating: np.ndarray,
+                          perms: np.ndarray, c: np.ndarray
+                          ) -> Tuple[int, np.ndarray]:
+        cfg = self.cfg
+        bank = self.registry.params
+        agg_models, pair_model, pair_device, transfers = self._gather_pairs(
+            participating, c)
+        live = self.registry.live_ids()
+
+        live_set = set(live)
+        agg_set = set(agg_models)
+        # only rows whose params change this round (trained) or were
+        # never scored need evaluating; everything else reuses its
+        # cached row bit-identically
+        val_stale = [m for m in live
+                     if m in agg_set or m not in self._val_cache]
+        test_needed = [m for m in self._pred_rows if m in live_set]
+        test_stale = [m for m in test_needed
+                      if m in agg_set or m not in self._test_cache]
+
+        val_mat = test_mat = None
+        if pair_model:
+            b = len(pair_model)
+            m_idx, d_idx, pperms = pad_work_batch(
+                pair_model, pair_device, [perms[d] for d in pair_device])
+            # bucketed aggregation rows: row j weights the pairs of
+            # agg_models[j]; padding rows repeat row 0 so their scatter
+            # writes are idempotent
+            agg_rows = pad_live_rows(agg_models)
+            slot = {m: j for j, m in enumerate(agg_models)}
+            w = np.zeros((len(agg_rows), len(m_idx)), np.float32)
+            w[[slot[m] for m in pair_model], np.arange(b)] = \
+                c[pair_device, pair_model]
+            w[len(agg_models):] = w[0]
+            new_stacked, val_mat, test_mat = self._fused_step(
+                bank.tree, m_idx, d_idx, pperms, w, agg_rows,
+                pad_live_rows(val_stale or live[:1]),
+                pad_live_rows(test_stale or live[:1]),
+                *self._dev["train"], *self._dev["val"], *self._dev["test"])
+            bank.swap(new_stacked)
+        else:
+            if val_stale:
+                val_mat = self._fused_eval(
+                    bank.tree, pad_live_rows(val_stale), *self._dev["val"])
+            if test_stale:
+                test_mat = self._fused_eval(
+                    bank.tree, pad_live_rows(test_stale), *self._dev["test"])
+
+        # overlap: draw round t+1's participation + perms while the step
+        # above is still executing on the device (ROADMAP: async sampling)
+        self._prefetch = (t + 1, self._draw_sample())
+
+        if val_stale and val_mat is not None:
+            val_mat = np.asarray(val_mat)[:len(val_stale)]
+            for j, m in enumerate(val_stale):
+                self._val_cache[m] = val_mat[j]
+        if test_stale and test_mat is not None:
+            test_mat = np.asarray(test_mat)[:len(test_stale)]
+            for j, m in enumerate(test_stale):
+                self._test_cache[m] = test_mat[j]
+        # a trained model's old test row is stale: drop it unless it was
+        # just re-evaluated (a later preference shift re-scores it via
+        # _collect's fallback dispatch)
+        for m in agg_models:
+            if m not in test_stale:
+                self._test_cache.pop(m, None)
+
+        accs = np.zeros((self.n_devices, cfg.max_models))
+        for m in live:
+            accs[:, m] = self._val_cache[m]
+        return transfers, accs
+
+    # -- batched engine: one fused train/agg dispatch per round -----------
+    def _train_eval_batched(self, participating: np.ndarray,
+                            perms: np.ndarray, c: np.ndarray
+                            ) -> Tuple[int, np.ndarray]:
+        cfg = self.cfg
+        xs, ys = self.data["train"]
+        agg_models, pair_model, pair_device, transfers = self._gather_pairs(
+            participating, c)
 
         if agg_models:
             b = len(pair_model)
             m_pad = bucket_size(len(agg_models), minimum=1)
             slot = {m: j for j, m in enumerate(agg_models)}
-            m_idx, d_idx, perms = pad_work_batch(
-                [slot[m] for m in pair_model], pair_device, pair_perms)
+            m_idx, d_idx, pperms = pad_work_batch(
+                [slot[m] for m in pair_model], pair_device,
+                [perms[d] for d in pair_device])
             stacked = self._stack_params(agg_models, m_pad)
-            trained = self.group_train(stacked, m_idx, xs, ys, d_idx, perms)
+            trained = self.group_train(stacked, m_idx, xs, ys, d_idx, pperms)
             # weights (m_pad, b_pad): row j carries c_m_i for model j's
             # pairs; padding pairs/models stay all-zero columns/rows
             w = np.zeros((m_pad, len(m_idx)), np.float32)
@@ -203,19 +356,17 @@ class FedCDServer:
         return np.asarray(self.group_eval(stacked, x, y)), live
 
     # -- legacy engine: per-model Python loop ------------------------------
-    def _train_eval_legacy(self, participating: np.ndarray, c: np.ndarray
+    def _train_eval_legacy(self, participating: np.ndarray,
+                           perms: np.ndarray, c: np.ndarray
                            ) -> Tuple[int, np.ndarray]:
         cfg = self.cfg
         xs, ys = self.data["train"]
-        n_examples = xs.shape[1]
         transfers = 0
 
         for m in self.registry.live_ids():
             holders = self.state.active[:, m] & participating
             if not holders.any():
                 continue
-            perms = make_perms(self.rng, self.n_devices, n_examples,
-                               self.batch_size, cfg.local_epochs)
             trained = self.local_train(self.registry.params[m], xs, ys, perms)
             w = participation_weights(c, m, participating, self.state.active)
             new_params = weighted_average(trained, w,
@@ -232,6 +383,24 @@ class FedCDServer:
                                                   vx, vy))
         return transfers, accs
 
+    # -- metrics -----------------------------------------------------------
+    def _refresh_eval_caches(self) -> None:
+        """Quantized cloning made every clone's params differ from its
+        parent's: re-score the whole live population once and rebuild
+        both row caches (rare — milestone rounds only)."""
+        live = self.registry.live_ids()
+        if not live:
+            self._val_cache, self._test_cache = {}, {}
+            return
+        rows = pad_live_rows(live)
+        bank = self.registry.params
+        val = np.asarray(self._fused_eval(
+            bank.tree, rows, *self._dev["val"]))[:len(live)]
+        test = np.asarray(self._fused_eval(
+            bank.tree, rows, *self._dev["test"]))[:len(live)]
+        self._val_cache = {m: val[j] for j, m in enumerate(live)}
+        self._test_cache = {m: test[j] for j, m in enumerate(live)}
+
     def _collect(self, t: int, transfers: int, wall: float) -> RoundMetrics:
         c = normalized_scores(self.state)
         preferred = np.argmax(np.where(self.state.active, c, -1.0), axis=1)
@@ -239,7 +408,35 @@ class FedCDServer:
         vx, vy = self.data["val"]
         test_acc = np.zeros(self.n_devices)
         val_acc = np.zeros(self.n_devices)
-        if self.engine == "batched":
+        if self.engine == "fused":
+            # read the cached eval rows (same-round clones inherited
+            # their parent's rows; quantized cloning rebuilt the caches)
+            if self._needs_eval_refresh:
+                self._refresh_eval_caches()
+                self._needs_eval_refresh = False
+            entries = self.registry.entries
+            wanted = [int(m) for m in preferred]
+            usable = [m if (m in entries and entries[m].alive
+                            and m in self._val_cache) else None
+                      for m in wanted]
+            missing = sorted({m for m in usable
+                              if m is not None
+                              and m not in self._test_cache})
+            if missing:
+                # test-row prediction missed (a preference shifted to a
+                # model that didn't train): one small dense eval
+                extra = np.asarray(self._fused_eval(
+                    self.registry.stacked, pad_live_rows(missing),
+                    *self._dev["test"]))[:len(missing)]
+                for j, m in enumerate(missing):
+                    self._test_cache[m] = extra[j]
+            for i, m in enumerate(usable):
+                if m is not None:
+                    test_acc[i] = self._test_cache[m][i]
+                    val_acc[i] = self._val_cache[m][i]
+            # predict next round's test rows: what devices prefer now
+            self._pred_rows = sorted({m for m in usable if m is not None})
+        elif self.engine == "batched":
             # reuse the fused (live, N) accuracy matrices: device i reads
             # row slot[preferred[i]] instead of a per-model re-evaluation
             test_mat, live = self._eval_matrix(tx, ty)

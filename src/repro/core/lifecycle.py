@@ -12,7 +12,10 @@ Deletion semantics implemented:
   in the paper's Figures 7-9. Recorded as a reproduction note.
 * After round ``late_delete_round`` (=20): a device with exactly two
   active models drops the lower-scoring one if its score ≤ 0.3.
-* Server GC: a model held by no device is deleted from the server.
+* Server GC: a model held by no device is deleted from the server. With
+  the stacked (device-resident) registry this is a liveness-mask flip —
+  the dead model's row stays allocated but is never trained, aggregated,
+  or evaluated again (DESIGN.md §2); in dict mode the params are freed.
 
 Cloning at milestones: every live model is cloned; the clone's per-device
 score is seeded to ``1 - c_parent`` (+ optional noise) to force
@@ -94,7 +97,10 @@ def clone_at_milestone(state: ScoreState, registry: ModelRegistry,
 
     ``clone_params_fn`` maps parent params -> clone params (identity by
     default; quantize-then-dequantize when transport compression is on).
-    Returns (state, [(parent, clone), ...]).
+    On a stacked registry the clone is an in-place row write. ``rng``
+    drives the clone-score noise — the servers pass a dedicated
+    lifecycle stream here so the fused engine's sampling prefetch cannot
+    reorder it (DESIGN.md §7). Returns (state, [(parent, clone), ...]).
     """
     s = state.copy()
     pairs: List[Tuple[int, int]] = []

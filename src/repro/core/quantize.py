@@ -9,6 +9,11 @@ along the last axis, q = round(x / s), s = max|x| / qmax.
 FedCD server when ``quantize_bits > 0``; per-leaf work is delegated to the
 Pallas kernel (interpret mode on CPU) or the jnp reference (identical
 numerics — asserted in tests).
+
+Everything here is pure jnp (or Pallas) and traceable: the fused round
+engine calls ``roundtrip`` INSIDE its jitted round step, vmapped over the
+stacked model axis, so quantized transport costs no host hop (DESIGN.md
+§2). The legacy/batched engines call the same function eagerly per model.
 """
 from __future__ import annotations
 
@@ -61,8 +66,10 @@ def quantize_pytree(tree: Any, bits: int = 8,
     qs, scales, shapes, dtypes = [], [], [], []
     for leaf in leaves:
         q, s = quantize_leaf(leaf, bits, use_kernel=use_kernel)
-        qs.append(q); scales.append(s)
-        shapes.append(leaf.shape); dtypes.append(leaf.dtype)
+        qs.append(q)
+        scales.append(s)
+        shapes.append(leaf.shape)
+        dtypes.append(leaf.dtype)
     return {"q": qs, "scales": scales, "shapes": shapes, "dtypes": dtypes,
             "treedef": treedef, "bits": bits}
 

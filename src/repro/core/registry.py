@@ -1,14 +1,76 @@
 """Server-side model registry: genealogy and liveness of global models.
 
 The registry is the control plane of the FedCD population. Model ids are
-stable for the lifetime of a run (the paper counts deleted models in M);
-params of dead models are dropped eagerly to bound server storage
-(paper §3.6).
+stable for the lifetime of a run (the paper counts deleted models in M).
+
+Two parameter storage modes (DESIGN.md §2):
+
+* **dict** (default for the bare constructor): ``params`` is a plain
+  ``{model_id: pytree}`` host-side dict; params of dead models are
+  dropped eagerly to bound server storage (paper §3.6). Used by the
+  mode-B LM path, where ``max_models x params`` preallocation would be
+  prohibitive.
+* **stacked** (``ModelRegistry.create(..., stacked=True)`` — the mode-A
+  simulation server): params live in ONE device-resident pytree with a
+  static leading ``max_models`` axis (``StackedParamBank``). Liveness is
+  a host-side mask over rows; clone/delete are in-place row writes /
+  mask flips, and the fused round engine reads and donates the whole
+  bank in a single dispatch with no per-round host restack. Storage is
+  statically ``m_cap`` rows — dead rows are masked, not freed.
+
+The dict-style element access (``reg.params[m]``, ``m in reg.params``)
+works identically in both modes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class StackedParamBank:
+    """Device-resident parameter bank: one stacked pytree with a leading
+    (m_cap,) model axis. Rows are written in place with ``.at[m].set``;
+    the fused engine replaces the whole tree via :meth:`swap` after its
+    donated round step."""
+
+    def __init__(self, m_cap: int, template: Any):
+        self.m_cap = m_cap
+        self.tree = jax.tree.map(
+            lambda a: jnp.zeros((m_cap,) + jnp.shape(a),
+                                jnp.asarray(a).dtype), template)
+        self._present: set = set()
+
+    def __contains__(self, m: int) -> bool:
+        return m in self._present
+
+    def __getitem__(self, m: int) -> Any:
+        if m not in self._present:
+            raise KeyError(m)
+        return jax.tree.map(lambda a: a[m], self.tree)
+
+    def __setitem__(self, m: int, row: Any) -> None:
+        if not (0 <= m < self.m_cap):
+            raise IndexError(m)
+        self.tree = jax.tree.map(
+            lambda a, r: a.at[m].set(jnp.asarray(r, a.dtype)),
+            self.tree, row)
+        self._present.add(m)
+
+    def pop(self, m: int, default: Any = None) -> Any:
+        """Mark row ``m`` absent. The row's storage is static (masked,
+        not freed) — liveness is the registry's concern."""
+        self._present.discard(m)
+        return default
+
+    def swap(self, new_tree: Any) -> None:
+        """Adopt ``new_tree`` as the bank (the fused step's output; the
+        previous tree was donated into that step and is dead). Row
+        presence is unchanged — a fused step only rewrites rows of
+        models that already exist."""
+        self.tree = new_tree
 
 
 @dataclass
@@ -24,14 +86,23 @@ class ModelEntry:
 class ModelRegistry:
     m_cap: int
     entries: Dict[int, ModelEntry] = field(default_factory=dict)
-    params: Dict[int, Any] = field(default_factory=dict)
+    params: Any = field(default_factory=dict)
 
     @classmethod
-    def create(cls, initial_params: Any, m_cap: int = 16) -> "ModelRegistry":
+    def create(cls, initial_params: Any, m_cap: int = 16,
+               stacked: bool = False) -> "ModelRegistry":
         reg = cls(m_cap=m_cap)
+        if stacked:
+            reg.params = StackedParamBank(m_cap, initial_params)
         reg.entries[0] = ModelEntry(0, None, 0)
         reg.params[0] = initial_params
         return reg
+
+    @property
+    def stacked(self) -> Optional[Any]:
+        """The device-resident (m_cap, ...) pytree, or None in dict mode."""
+        return self.params.tree if isinstance(self.params,
+                                              StackedParamBank) else None
 
     @property
     def total_created(self) -> int:

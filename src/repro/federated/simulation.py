@@ -3,15 +3,29 @@
 Every device trains a copy of a global model on its own data for E epochs
 of minibatch SGD (the paper's client loop), all devices in one vmapped,
 jitted call. Used by both FedCD and the FedAvg baseline.
+
+Three generations of round data plane live here (DESIGN.md §2):
+
+* ``make_local_train`` / ``make_eval`` — the legacy per-model loop's
+  building blocks (every model trains all N devices).
+* ``make_group_train`` / ``make_group_eval`` — the PR 1 batched engine:
+  one jitted step over gathered (model, device) pairs, dense (M, N)
+  eval matrices.
+* ``make_fused_round`` / ``make_fused_eval`` — the fused device-resident
+  engine: ONE jitted dispatch per round covering train, score-weighted
+  multi-model aggregation, the on-device quantize roundtrip, and one
+  val + one test (live, N) evaluation matrix, with the stacked
+  parameter bank donated in and out.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.aggregate import multi_weighted_average
 
 
 def make_local_train(loss_fn: Callable, lr: float, batch_size: int
@@ -45,11 +59,13 @@ def bucket_size(n: int, minimum: int = 8) -> int:
     up to an eighth-octave step (multiples of 2^k/8 within each
     power-of-two octave). The jitted group step sees at most 8 distinct
     shapes per octave instead of retracing every round; padding waste
-    stays < 14% once ``n > 8 * minimum`` (smaller octaves clamp the
-    step to ``minimum``, so e.g. n=9 pads to 16)."""
+    ``(bucket - n) / bucket`` stays < 20% once ``n > 8 * minimum``
+    (worst case just past a power of two, e.g. n=65 -> 80; smaller
+    octaves clamp the step to ``minimum``, so e.g. n=9 pads to 16).
+    Property-tested in tests/test_property.py."""
     if n <= minimum:
         return minimum
-    octave = 1 << (n - 1).bit_length()          # next power of two ≥ n
+    octave = 1 << (n - 1).bit_length()          # next power of two >= n
     step = max(octave // 8, minimum)
     return -(-n // step) * step
 
@@ -72,22 +88,22 @@ def pad_work_batch(model_idx: "list[int]", device_idx: "list[int]",
     return m_idx, d_idx, perms
 
 
-def make_group_train(loss_fn: Callable, lr: float, batch_size: int
-                     ) -> Callable:
-    """Batched multi-model local training over a gathered work batch.
+def pad_live_rows(live: "list[int]") -> np.ndarray:
+    """Pad the live-model row-index list to one static bucket (padding
+    rows repeat the first live row; callers slice the first ``len(live)``
+    matrix rows). ``minimum=1``: populations are small and each live
+    count is a distinct steady state worth its own executable."""
+    pad = bucket_size(len(live), minimum=1)
+    idx = np.full(pad, live[0] if live else 0, np.int32)
+    idx[:len(live)] = live
+    return idx
 
-    Returns jitted fn(stacked_params, model_idx (B,), xs (N,n,...),
-    ys (N,n), device_idx (B,), perms (B,T,b)) -> trained params with
-    leading pair axis B.
 
-    ``stacked_params`` is a pytree with a leading model axis (M, ...);
-    pair ``b`` trains model ``model_idx[b]`` on device ``device_idx[b]``'s
-    data. Only ``(participating & holder)`` pairs are materialized by the
-    caller (padding pairs are masked out at aggregation), so the engine
-    does O(pairs) work instead of the legacy O(models · devices).
-    Minibatches are gathered per step (``xs[d, idx]``) so the (B, n, ...)
-    gathered dataset is never materialized.
-    """
+def _pair_train(loss_fn: Callable, lr: float) -> Callable:
+    """Unjitted single-(model, device)-pair local training: gathers the
+    pair's model row out of the stacked params and runs E epochs of
+    minibatch SGD with per-step data gathers (the (B, n, ...) gathered
+    dataset is never materialized)."""
 
     def one_pair(stacked_params, m_idx, xs, ys, d_idx, perm):
         params = jax.tree.map(lambda a: a[m_idx], stacked_params)
@@ -101,7 +117,24 @@ def make_group_train(loss_fn: Callable, lr: float, batch_size: int
         params, _ = jax.lax.scan(step, params, perm)
         return params
 
-    return jax.jit(jax.vmap(one_pair,
+    return one_pair
+
+
+def make_group_train(loss_fn: Callable, lr: float, batch_size: int
+                     ) -> Callable:
+    """Batched multi-model local training over a gathered work batch.
+
+    Returns jitted fn(stacked_params, model_idx (B,), xs (N,n,...),
+    ys (N,n), device_idx (B,), perms (B,T,b)) -> trained params with
+    leading pair axis B.
+
+    ``stacked_params`` is a pytree with a leading model axis (M, ...);
+    pair ``b`` trains model ``model_idx[b]`` on device ``device_idx[b]``'s
+    data. Only ``(participating & holder)`` pairs are materialized by the
+    caller (padding pairs are masked out at aggregation), so the engine
+    does O(pairs) work instead of the legacy O(models · devices).
+    """
+    return jax.jit(jax.vmap(_pair_train(loss_fn, lr),
                             in_axes=(None, 0, None, None, 0, 0)))
 
 
@@ -113,16 +146,118 @@ def make_group_eval(acc_fn: Callable) -> Callable:
     return jax.jit(jax.vmap(per_model, in_axes=(0, None, None)))
 
 
+def make_fused_round(loss_fn: Callable, acc_fn: Callable, lr: float,
+                     quantize_bits: int = 0,
+                     use_agg_kernel: bool = False) -> Callable:
+    """The fused engine's whole round as ONE jitted dispatch.
+
+    Returns fn(stacked (m_cap, ...) [donated], m_idx (B,), d_idx (B,),
+    perms (B,T,b), w (A, B), agg_rows (A,), live_idx (L,),
+    test_idx (R,), xs, ys, vx, vy, tx, ty) ->
+    (new_stacked (m_cap, ...), val_mat (L, N), test_mat (R, N)).
+
+    Semantics, in order (paper Algorithm 1 lines 5-12):
+      1. train the gathered (participating & holder) pairs (O(pairs));
+      2. score-weighted aggregation of the models that trained this
+         round in one ``multi_weighted_average`` over the bucketed
+         (A, B) weight matrix (row j weights the pairs of model
+         ``agg_rows[j]``; padding rows repeat row 0, making their
+         scatter idempotent);
+      3. when transport quantization is on, the quantize→dequantize
+         roundtrip runs on device (kernels/quantize ref numerics),
+         vmapped over the A aggregated rows only, instead of the
+         legacy host loop;
+      4. the updated rows are scattered into the donated bank with one
+         ``.at[agg_rows].set`` (no host roundtrip), so the bank is
+         updated in place;
+      5. the gathered live rows are evaluated on every device's val
+         split (the full (live, N) matrix — every active pair's score
+         history needs it), and the rows in ``test_idx`` on every
+         device's test split. ``push_accuracies`` and ``_collect`` both
+         read these, closing PR 1's double val-matrix dispatch; the
+         test rows are the caller's *predicted* preferred models (last
+         round's — sticky in steady state), so test work is O(preferred
+         models · N) instead of PR 1's full O(live · N) matrix, of
+         which only N entries were ever read. Mispredictions fall back
+         to a small ``make_fused_eval`` dispatch in ``_collect``. The
+         dense model-major matrix is deliberate: one weight-shared GEMM
+         per model beats an active-pair gather formulation by ~8x
+         measured FLOP efficiency on CPU (the weight row is reused
+         across all N devices' examples).
+
+    Retraces only when the (B, L, R) buckets change (``bucket_size``).
+    """
+    one_pair = _pair_train(loss_fn, lr)
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))   # one row, all N
+
+    def round_step(stacked, m_idx, d_idx, perms, w, agg_rows,
+                   live_idx, test_idx, xs, ys, vx, vy, tx, ty):
+        trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+        agg = multi_weighted_average(trained, w, use_kernel=use_agg_kernel)
+        if quantize_bits:
+            from repro.core import quantize as qz
+            agg = jax.vmap(lambda t: qz.roundtrip(t, quantize_bits))(agg)
+        new_stacked = jax.tree.map(
+            lambda old, new: old.at[agg_rows].set(new.astype(old.dtype)),
+            stacked, agg)
+        vrows = jax.tree.map(lambda a: a[live_idx], new_stacked)
+        trows = jax.tree.map(lambda a: a[test_idx], new_stacked)
+        val = jax.vmap(eval_model, in_axes=(0, None, None))(vrows, vx, vy)
+        test = jax.vmap(eval_model, in_axes=(0, None, None))(trows, tx, ty)
+        return new_stacked, val, test
+
+    return jax.jit(round_step, donate_argnums=(0,))
+
+
+def make_fused_eval(acc_fn: Callable) -> Callable:
+    """Returns jitted fn(stacked (m_cap, ...), live_idx (L,), xs, ys)
+    -> (L, N): the fused engine's standalone eval-matrix dispatch, for
+    rounds with no training pairs and for the quantized-cloning refresh
+    in ``_collect`` (clone rows differ from their parents' then)."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+
+    def mat(stacked, live_idx, xs, ys):
+        rows = jax.tree.map(lambda a: a[live_idx], stacked)
+        return jax.vmap(eval_model, in_axes=(0, None, None))(rows, xs, ys)
+
+    return jax.jit(mat)
+
+
 def make_perms(rng: np.random.Generator, n_devices: int, n_examples: int,
                batch_size: int, epochs: int) -> np.ndarray:
-    """(N, epochs*steps, batch) minibatch index matrices."""
+    """(N, epochs*steps, batch) minibatch index matrices.
+
+    Vectorized: one ``rng.permuted`` call draws all N*epochs independent
+    row permutations at once instead of the former per-device/per-epoch
+    ``rng.permutation`` Python loop (PR 2). NOTE this is an intentional
+    host-RNG-stream change: seeded runs shuffle differently than PR 1
+    (``permuted`` consumes the BitGenerator differently from sequential
+    ``permutation`` calls). All round engines share this stream, so
+    engine equivalence is unaffected; see DESIGN.md §7.
+    """
     steps = max(n_examples // batch_size, 1)
-    out = np.empty((n_devices, epochs * steps, batch_size), np.int32)
-    for d in range(n_devices):
-        rows = []
-        for _ in range(epochs):
-            perm = rng.permutation(n_examples)
-            for s in range(steps):
-                rows.append(perm[s * batch_size:(s + 1) * batch_size])
-        out[d] = np.stack(rows)
-    return out
+    flat = np.broadcast_to(np.arange(n_examples, dtype=np.int32),
+                           (n_devices * epochs, n_examples))
+    perms = rng.permuted(flat, axis=1)
+    perms = perms.reshape(n_devices, epochs, n_examples)
+    return perms[:, :, :steps * batch_size].reshape(
+        n_devices, epochs * steps, batch_size)
+
+
+def draw_round_sample(rng: np.random.Generator, n_devices: int,
+                      devices_per_round: int, n_examples: int,
+                      batch_size: int, epochs: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """One round's participation mask + shared minibatch perms.
+
+    The ONE place the sampling stream is consumed: FedCDServer and
+    FedAvgServer both call exactly this with identically-seeded
+    generators, so FedCD-vs-FedAvg comparisons train identical
+    per-round cohorts and the stream walk stays engine-independent
+    (DESIGN.md §7)."""
+    participating = np.zeros(n_devices, bool)
+    participating[rng.choice(n_devices, devices_per_round,
+                             replace=False)] = True
+    perms = make_perms(rng, n_devices, n_examples, batch_size, epochs)
+    return participating, perms

@@ -14,7 +14,6 @@ the beyond-paper optimization described in DESIGN.md §6.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,7 @@ from repro.launch.sharding import (auto_shardings, batch_spec,
                                    param_shardings, replicated)
 from repro.models import encdec as ed
 from repro.models import transformer as tf
-from repro.roofline.analysis import model_flops, roofline_terms
+from repro.roofline.analysis import roofline_terms
 from repro.roofline.hlo_analyzer import analyze as hlo_analyze
 
 
@@ -137,7 +137,9 @@ def run_case(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):   # pre-0.5 jax: one dict per program
+        # pre-0.5 jax: one dict per program, with nesting observed to
+        # vary ([dict] vs [[dict]]) — unwrap until the dict
+        while isinstance(cost, (list, tuple)):
             cost = cost[0] if cost else {}
         # loop-aware accounting from the optimized HLO (cost_analysis
         # counts while bodies once — see roofline/hlo_analyzer.py)

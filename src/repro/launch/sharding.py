@@ -15,10 +15,9 @@ over dp when divisible, the widest remaining dim over tp.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -155,7 +154,7 @@ def auto_shardings(tree_shape: Any, mesh: jax.sharding.Mesh,
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_shape)
     return jax.tree_util.tree_unflatten(
-        treedef, [spec_for(p, l) for p, l in flat])
+        treedef, [spec_for(path, leaf) for path, leaf in flat])
 
 
 def batch_spec(mesh: jax.sharding.Mesh, batch: int, ndim: int

@@ -10,16 +10,14 @@ Multiple global models are a host-level loop over this same compiled step.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ArchConfig, ShapeConfig
+from repro.config import ArchConfig
 from repro.models import encdec as ed
 from repro.models import transformer as tf
-from repro.models.common import softmax_cross_entropy
 from repro.optim import sgd_update
 from repro.sharding_hints import sharding_hints
 
@@ -108,10 +106,10 @@ def make_train_step(cfg: ArchConfig, mesh=None,
             def body(carry, xs):
                 g_acc, l_acc, a_acc = carry
                 tok, lab, w, fr = xs
-                g, (l, a) = jax.grad(loss_fn, has_aux=True)(
+                g, (loss_mb, a) = jax.grad(loss_fn, has_aux=True)(
                     params, tok, lab, w, fr)
-                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
-                        a_acc + a), None
+                return (jax.tree.map(jnp.add, g_acc, g),
+                        l_acc + loss_mb, a_acc + a), None
             toks = tokens.reshape(microbatches, mb, -1)
             labs = labels.reshape(microbatches, mb, -1)
             ws = row_w.reshape(microbatches, mb)

@@ -15,10 +15,8 @@ import argparse
 import json
 import os
 
-import numpy as np
-
 from repro.checkpoint import save_checkpoint, save_registry
-from repro.config import FedCDConfig, override
+from repro.config import FedCDConfig
 from repro.configs import get_arch, reduced
 from repro.federated.llm import FedLLMTrainer
 

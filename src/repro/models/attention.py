@@ -16,7 +16,7 @@ For sliding-window long-context decode, C == window and writes wrap.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

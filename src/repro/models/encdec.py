@@ -11,7 +11,7 @@ K/V computed once from the encoder output and carried in the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ with ``E_loc = E`` and no collective.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -14,7 +14,6 @@ API:
 """
 from __future__ import annotations
 
-import functools
 from itertools import groupby
 from typing import Any, Dict, List, Optional, Tuple
 

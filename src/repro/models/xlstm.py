@@ -14,7 +14,7 @@ sLSTM is inherently sequential (recurrent gate mixing); training uses a
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

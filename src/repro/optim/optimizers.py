@@ -6,7 +6,7 @@ sharding specs propagate.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +55,8 @@ def sgd_update(params: Params, grads: Params, state: OptState, lr,
 # Adam
 # ---------------------------------------------------------------------------
 def adam_init(params: Params) -> OptState:
-    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def z(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
             "step": jnp.zeros((), jnp.int32)}
 

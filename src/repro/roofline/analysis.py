@@ -23,8 +23,6 @@ import re
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
-import numpy as np
-
 from repro.config import ArchConfig, ShapeConfig
 
 

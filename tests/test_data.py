@@ -11,8 +11,8 @@ from repro.data.tokens import lm_batch
 def test_hierarchical_probs_structure():
     p = hierarchical_probs(3, bias=0.6)
     assert p[3] == pytest.approx(0.6)
-    for l in (0, 1, 2, 4):
-        assert p[l] == pytest.approx(0.1)
+    for lbl in (0, 1, 2, 4):
+        assert p[lbl] == pytest.approx(0.1)
     assert p[5:].sum() == 0.0            # other meta-archetype excluded
     p2 = hierarchical_probs(7, bias=0.7)
     assert p2[7] == pytest.approx(0.7)

@@ -4,7 +4,6 @@ full round loop trains."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import ArchConfig
 from repro.launch import steps as S

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import ArchConfig, SSMConfig, XLSTMConfig, override
+from repro.config import ArchConfig, override
 from repro.models import attention as A
 from repro.models import mamba2 as MB
 from repro.models import xlstm as XL

@@ -2,10 +2,9 @@
 programs (incl. scan trip counts, grad 3x, remat 4x) and the term math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.roofline.analysis import HW, model_flops, roofline_terms
+from repro.roofline.analysis import model_flops, roofline_terms
 from repro.roofline.hlo_analyzer import analyze
 
 

@@ -16,19 +16,22 @@ def test_init_single_model_score_one():
 def test_rolling_window_mean_eq2():
     s = init_scores(2, 4, ell=3)
     for acc in (0.2, 0.4, 0.9):
-        a = np.zeros((2, 4)); a[:, 0] = acc
+        a = np.zeros((2, 4))
+        a[:, 0] = acc
         s = push_accuracies(s, a)
     r = raw_scores(s)
     assert np.allclose(r[:, 0], np.mean([0.2, 0.4, 0.9]))
     # window drops the oldest entry
-    a = np.zeros((2, 4)); a[:, 0] = 0.1
+    a = np.zeros((2, 4))
+    a[:, 0] = 0.1
     s = push_accuracies(s, a)
     assert np.allclose(raw_scores(s)[:, 0], np.mean([0.4, 0.9, 0.1]))
 
 
 def test_partial_window_uses_filled_entries_only():
     s = init_scores(1, 4, ell=3)
-    a = np.zeros((1, 4)); a[:, 0] = 0.5
+    a = np.zeros((1, 4))
+    a[:, 0] = 0.5
     s = push_accuracies(s, a)
     assert np.allclose(raw_scores(s)[:, 0], 0.5)
 
@@ -46,7 +49,8 @@ def test_normalization_eq3_sums_to_one():
 
 def test_device_mask_freezes_nonparticipants():
     s = init_scores(2, 4, ell=2)
-    a = np.zeros((2, 4)); a[:, 0] = 0.7
+    a = np.zeros((2, 4))
+    a[:, 0] = 0.7
     s = push_accuracies(s, a, device_mask=np.array([True, False]))
     r = raw_scores(s)
     assert np.allclose(r[0, 0], 0.7)
@@ -55,7 +59,8 @@ def test_device_mask_freezes_nonparticipants():
 
 def test_clone_seeding_one_minus_parent():
     s = init_scores(2, 4, ell=3)
-    a = np.zeros((2, 4)); a[:, 0] = 0.8
+    a = np.zeros((2, 4))
+    a[:, 0] = 0.8
     s = push_accuracies(s, a)
     s = seed_clone_history(s, parent=0, clone=1)
     c = normalized_scores(s)
