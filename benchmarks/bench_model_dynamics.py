@@ -18,7 +18,29 @@ both with int8 transport quantization (paper §3.4) and without.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --mesh S wants S simulated devices; the XLA flag only takes effect
+# before jax first initializes, so inject it when this module IS the
+# program (python -m benchmarks.bench_model_dynamics --mesh 4). Under
+# benchmarks.run, jax is already up — set XLA_FLAGS in the environment
+# instead (CI's sharded leg does).
+def _mesh_argv(argv):
+    for k, a in enumerate(argv):
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+        if a == "--mesh" and k + 1 < len(argv):
+            return argv[k + 1]
+    return None
+
+
+_n = _mesh_argv(sys.argv)
+if _n is not None and _n.isdigit() and "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}").strip()
 
 import numpy as np
 
@@ -144,10 +166,92 @@ def compare_engines(rounds: int = 20, model: str = "mlp",
     return lines
 
 
+def compare_mesh(rounds: int = 16, model: str = "mlp", shards: int = 4,
+                 quick: bool = False):
+    """Time the mesh-sharded fused engine against single-device fused at
+    equal population (DESIGN.md §9).
+
+    The scenario targets the sharding regime: four early milestones grow
+    the population to 8+ live models (each resident on its row shard)
+    with deletions pushed past the horizon, so every round carries a
+    multi-shard work batch. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or the
+    ``--mesh N`` CLI shortcut, which sets it before jax initializes) to
+    get N simulated devices; ``shards`` is clamped to the devices that
+    actually exist, and ``shards=1`` measures pure shard_map overhead
+    (the no-slower-than-fused check)."""
+    import jax
+
+    from repro.launch.mesh import make_model_mesh
+
+    m_cap = 16
+    avail = jax.device_count()
+    want = shards
+    shards = min(shards, avail)
+    while m_cap % shards:        # bank rows must divide over the mesh
+        shards -= 1
+    if shards != want:
+        print(f"# --mesh {want} clamped to {shards} "
+              f"({avail} local devices, max_models={m_cap})")
+    params, loss_fn, acc_fn = C.model_fns(model)
+    if quick:
+        rounds = max(rounds, 8)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65,
+                                 devices_per_archetype=1)
+        base = dict(n_devices=len(devs), devices_per_round=4,
+                    local_epochs=1)
+    else:
+        rounds = max(rounds, 12)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65)
+        base = dict(devices_per_round=6, local_epochs=1)
+    cfg = C.default_cfg(quantize_bits=8, max_models=m_cap,
+                        milestones=(1, 2, 3, 4),
+                        late_delete_round=rounds + 5, **base)
+
+    servers = {}
+    total = {}
+    for tag, mesh in (("single", None),
+                      (f"shard{shards}", make_model_mesh(shards))):
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH, engine="fused", mesh=mesh)
+        t0 = time.time()
+        srv.run(rounds)
+        total[tag] = time.time() - t0
+        servers[tag] = srv
+
+    live = [m.live_models for m in servers["single"].metrics]
+    steady = list(range(rounds // 2 + 1, rounds + 1))
+    med = {t: float(np.median([servers[t].metrics[r - 1].wall_s
+                               for r in steady])) for t in servers}
+    tag = f"shard{shards}"
+    speedup = med["single"] / max(med[tag], 1e-12)
+    lines = []
+    for t in ("single", tag):
+        lines.append(C.csv_line(
+            f"mesh_round_wall_{t}", med[t] * 1e6,
+            f"rounds={rounds};steady_live={live[-1]};"
+            f"devices={cfg.n_devices};jax_devices={avail}"))
+    lines.append(C.csv_line(
+        "mesh_speedup", 0.0,
+        f"sharded_over_single={speedup:.2f}x;shards={shards};"
+        f"steady_live={live[-1]};total_single_s={total['single']:.2f};"
+        f"total_sharded_s={total[tag]:.2f}"))
+    # the sharded engine must be a pure layout refactor: identical
+    # population dynamics on the same seed
+    other = [m.live_models for m in servers[tag].metrics]
+    if other != live:
+        raise AssertionError(
+            f"mesh divergence: sharded live={other} single={live}")
+    return lines
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare-engines", action="store_true",
                     help="time batched vs legacy round engines")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="with --compare-engines: also time the mesh-"
+                         "sharded fused engine on N simulated devices")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small config, few rounds)")
     ap.add_argument("--rounds", type=int, default=None)
@@ -157,6 +261,13 @@ if __name__ == "__main__":
     if args.compare_engines:
         out = compare_engines(args.rounds or (8 if args.quick else 20),
                               args.model, quick=args.quick)
+        if args.mesh:
+            out += compare_mesh(args.rounds or (8 if args.quick else 16),
+                                args.model, shards=args.mesh,
+                                quick=args.quick)
+    elif args.mesh:
+        out = compare_mesh(args.rounds or (8 if args.quick else 16),
+                           args.model, shards=args.mesh, quick=args.quick)
     else:
         out = run(args.rounds or (6 if args.quick else 30), args.model,
                   args.force or args.quick)

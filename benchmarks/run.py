@@ -42,6 +42,10 @@ def main() -> None:
     ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="add the mesh-sharded engine bench at N shards "
+                         "(needs XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N set before python starts)")
     ap.add_argument("--json-out", default=None,
                     help="write results to this JSON artifact path")
     args = ap.parse_args()
@@ -69,6 +73,9 @@ def main() -> None:
                                                      args.force),
         "engines": lambda: bench_model_dynamics.compare_engines(
             8 if args.fast else 20, args.model, quick=args.fast),
+        "mesh": lambda: bench_model_dynamics.compare_mesh(
+            8 if args.fast else 16, args.model,
+            shards=args.mesh or 4, quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),
@@ -77,6 +84,10 @@ def main() -> None:
     if args.only:
         keep = set(args.only.split(","))
         benches = {k: v for k, v in benches.items() if k in keep}
+    elif args.mesh is None:
+        # the mesh bench only joins the default sweep when shards are
+        # requested (it clamps to 1 shard on a single-device host)
+        benches.pop("mesh")
 
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -27,9 +27,12 @@ import numpy as np
 from repro.config import FedCDConfig
 from repro.core.aggregate import multi_weighted_average, weighted_average
 from repro.core.fedcd import ENGINES
-from repro.federated.simulation import (draw_round_sample, make_eval,
-                                        make_fused_round, make_group_train,
-                                        make_local_train, pad_work_batch)
+from repro.federated.simulation import (bucket_size, draw_round_sample,
+                                        make_eval, make_fused_round,
+                                        make_group_train, make_local_train,
+                                        make_sharded_fedavg_round,
+                                        pad_work_batch)
+from repro.launch.mesh import model_axis_size
 
 
 @dataclass
@@ -45,18 +48,31 @@ class FedAvgServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 engine: str = "fused"):
+                 engine: str = "fused", mesh: Any = None):
+        """``mesh``: a 1-D ``model``-axis mesh shards the fused round's
+        work-PAIR axis (FedAvg has one global model, so the parallel
+        dimension is the participating devices; eq 1 completes with one
+        psum — DESIGN.md §9). Requires ``engine="fused"``."""
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
+        if mesh is not None and engine != "fused":
+            raise ValueError(
+                f"mesh sharding requires engine='fused', got {engine!r}")
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.data = data
         self.batch_size = batch_size
         self.n_devices = data["train"][0].shape[0]
         self.engine = engine
+        self.mesh = mesh
+        self._n_shards = model_axis_size(mesh) if mesh is not None else 0
         self._stacked = None
         if engine == "fused":
-            self._fused_step = make_fused_round(loss_fn, acc_fn, cfg.lr)
+            if mesh is not None:
+                self._fused_step = make_sharded_fedavg_round(
+                    loss_fn, acc_fn, cfg.lr, mesh)
+            else:
+                self._fused_step = make_fused_round(loss_fn, acc_fn, cfg.lr)
             self._stacked = jax.tree.map(
                 lambda a: jnp.asarray(a)[None], init_params)
             self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
@@ -94,6 +110,8 @@ class FedAvgServer:
                      ) -> "tuple[np.ndarray, np.ndarray]":
         d_ids = np.nonzero(participating)[0]
         b = len(d_ids)
+        if self.mesh is not None:
+            return self._round_sharded(d_ids, perms)
         m_idx, d_idx, pp = pad_work_batch(
             [0] * b, list(d_ids), [perms[d] for d in d_ids])
         w = np.zeros((1, len(m_idx)), np.float32)
@@ -103,6 +121,34 @@ class FedAvgServer:
         self._stacked, val_mat, test_mat = self._fused_step(
             self._stacked, m_idx, d_idx, pp, w, np.zeros(1, np.int32),
             np.zeros(1, np.int32), np.zeros(1, np.int32),
+            *self._dev["train"], *self._dev["val"], *self._dev["test"])
+        return np.asarray(test_mat)[0], np.asarray(val_mat)[0]
+
+    def _round_sharded(self, d_ids: np.ndarray, perms: np.ndarray
+                       ) -> "tuple[np.ndarray, np.ndarray]":
+        """Shard-aware pair gathering: the participating devices are
+        dealt round-robin over the mesh's model axis and each shard's
+        block is padded to one shared bucket (zero-weight padding pairs,
+        mirroring ``pad_work_batch``); the step psums the partial
+        weighted sums back into one replicated global model."""
+        S = self._n_shards
+        chunks = [d_ids[s::S] for s in range(S)]
+        # per-shard bucket floor scales down with the shard count (the
+        # global work splits S ways), mirroring the FedCD sharded path
+        width = bucket_size(max(len(ch) for ch in chunks),
+                            minimum=max(8 // S, 2))
+        m_idx = np.zeros(S * width, np.int32)
+        d_idx = np.zeros(S * width, np.int32)
+        pp = np.zeros((S * width,) + perms[0].shape, np.int32)
+        w = np.zeros(S * width, np.float32)
+        for s, ch in enumerate(chunks):
+            base = s * width
+            d_idx[base:base + len(ch)] = ch
+            w[base:base + len(ch)] = 1.0
+            for j, d in enumerate(ch):
+                pp[base + j] = perms[d]
+        self._stacked, val_mat, test_mat = self._fused_step(
+            self._stacked, m_idx, d_idx, pp, w,
             *self._dev["train"], *self._dev["val"], *self._dev["test"])
         return np.asarray(test_mat)[0], np.asarray(val_mat)[0]
 

@@ -31,6 +31,14 @@ lifecycle, transport accounting — identical RNG streams, see DESIGN.md
   model trains ALL N devices (non-holders are zero-weighted away), each
   model aggregated and evaluated in its own dispatch. Work is
   O(models · devices). Kept as the equivalence oracle.
+
+``engine="fused"`` with ``mesh=`` (a 1-D ``model``-axis mesh) selects
+the SHARDED fused data plane (DESIGN.md §9): the bank's row axis is
+laid out over the mesh, work pairs bucket per owning shard, and each
+mesh slice trains/aggregates/scatters only its resident rows — the
+host control plane is unchanged and
+``tests/test_sharded_equivalence.py`` pins it to the single-device
+engine.
 """
 from __future__ import annotations
 
@@ -54,7 +62,12 @@ from repro.federated.simulation import (bucket_size, draw_round_sample,
                                         make_eval, make_fused_eval,
                                         make_fused_round, make_group_eval,
                                         make_group_train, make_local_train,
-                                        pad_live_rows, pad_work_batch)
+                                        make_sharded_eval,
+                                        make_sharded_round, pad_live_rows,
+                                        pad_work_batch, shard_rows,
+                                        shard_work_batch)
+from repro.launch.mesh import model_axis_size
+from repro.launch.sharding import bank_rows_per_shard, bank_shardings
 
 ENGINES = ("fused", "batched", "legacy")
 
@@ -78,11 +91,22 @@ class FedCDServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 use_agg_kernel: bool = False, engine: str = "fused"):
+                 use_agg_kernel: bool = False, engine: str = "fused",
+                 mesh: Any = None):
         """data: stacked device splits from ``partition.stack_devices``:
-        {"train": (xs (N,n,...), ys), "val": ..., "test": ...}."""
+        {"train": (xs (N,n,...), ys), "val": ..., "test": ...}.
+
+        ``mesh``: a 1-D ``model``-axis mesh (``launch.mesh.
+        make_model_mesh``) selects the SHARDED fused data plane: the
+        stacked bank's row axis and the gathered work pairs are laid out
+        over the mesh and each shard trains only its resident rows
+        (DESIGN.md §9). Requires ``engine="fused"`` and
+        ``max_models`` divisible by the mesh's model-axis size."""
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
+        if mesh is not None and engine != "fused":
+            raise ValueError(
+                f"mesh sharding requires engine='fused', got {engine!r}")
         self.cfg = cfg
         # Two host RNG streams (DESIGN.md §7): ``rng`` drives round
         # sampling (participation + perms) ONLY, so the fused engine can
@@ -94,18 +118,32 @@ class FedCDServer:
         self.batch_size = batch_size
         self.n_devices = data["train"][0].shape[0]
         assert self.n_devices == cfg.n_devices, (self.n_devices, cfg.n_devices)
+        self.mesh = mesh
+        self._n_shards = model_axis_size(mesh) if mesh is not None else 0
+        self._rows_per_shard = (bank_rows_per_shard(cfg.max_models, mesh)
+                                if mesh is not None else 0)
         # only the fused engine stores params device-resident: the
         # legacy/batched baselines keep PR 1's host dict storage so the
         # engine benchmark compares against them as shipped
-        self.registry = ModelRegistry.create(init_params, cfg.max_models,
-                                             stacked=(engine == "fused"))
+        self.registry = ModelRegistry.create(
+            init_params, cfg.max_models, stacked=(engine == "fused"),
+            shardings=(bank_shardings(mesh, init_params)
+                       if mesh is not None else None),
+            n_shards=max(self._n_shards, 1))
         self.state = init_scores(cfg.n_devices, cfg.max_models,
                                  cfg.score_window)
         self.engine = engine
         if engine == "fused":
-            self._fused_step = make_fused_round(
-                loss_fn, acc_fn, cfg.lr, cfg.quantize_bits, use_agg_kernel)
-            self._fused_eval = make_fused_eval(acc_fn)
+            if mesh is not None:
+                self._fused_step = make_sharded_round(
+                    loss_fn, acc_fn, cfg.lr, mesh, cfg.quantize_bits,
+                    use_agg_kernel)
+                self._fused_eval = make_sharded_eval(acc_fn, mesh)
+            else:
+                self._fused_step = make_fused_round(
+                    loss_fn, acc_fn, cfg.lr, cfg.quantize_bits,
+                    use_agg_kernel)
+                self._fused_eval = make_fused_eval(acc_fn)
             # device-resident copies of every split: uploaded once, then
             # passed by reference into each round step
             self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
@@ -181,8 +219,9 @@ class FedCDServer:
         c = normalized_scores(self.state)
 
         if self.engine == "fused":
-            transfers, accs = self._train_eval_fused(t, participating,
-                                                     perms, c)
+            step = (self._train_eval_sharded if self.mesh is not None
+                    else self._train_eval_fused)
+            transfers, accs = step(t, participating, perms, c)
         elif self.engine == "batched":
             transfers, accs = self._train_eval_batched(participating,
                                                        perms, c)
@@ -310,6 +349,128 @@ class FedCDServer:
             accs[:, m] = self._val_cache[m]
         return transfers, accs
 
+    # -- sharded fused engine: per-shard buckets over the model mesh ------
+    def _shard_agg_plan(self, agg_rows: List[int], pair_groups,
+                        pair_model: List[int], pair_device: List[int],
+                        c: np.ndarray, b_pad: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-shard aggregation schedule for the sharded round step:
+        LOCAL agg row indices (S*A,), the (S*A, B) weight blocks (row
+        ``s*A+j`` weights shard s's pairs of its j-th agg row), and the
+        keep mask guarding the scatter. Empty shards get all-padding
+        rows with keep=False (they rewrite existing values); non-empty
+        shards' padding rows repeat their first agg row AND weight row so
+        duplicate scatter indices stay idempotent. ``agg_rows`` are BANK
+        rows (``row_of``-mapped); ``pair_model`` stays in model ids for
+        the score lookup."""
+        S = self._n_shards
+        row_of = self.registry.params.row_of
+        agg_idx, agg_groups, a_pad = shard_rows(
+            agg_rows, self._rows_per_shard, S)
+        keep = np.zeros(S * a_pad, bool)
+        w = np.zeros((S * a_pad, b_pad), np.float32)
+        for s, group in enumerate(agg_groups):
+            if not group:
+                continue
+            base = s * a_pad
+            keep[base:base + a_pad] = True
+            slot = {r: j for j, r in enumerate(group)}
+            for col, k in enumerate(pair_groups[s]):
+                m, d = pair_model[k], pair_device[k]
+                w[base + slot[row_of[m]], col] = c[d, m]
+            w[base + len(group):base + a_pad] = w[base]
+        return agg_idx, keep, w
+
+    def _shard_row_slots(self, bank_rows: List[int]
+                         ) -> Tuple[np.ndarray, Dict[int, int]]:
+        """Shard-bucketed eval schedule: the (S*L,) LOCAL row-index array
+        for the step plus the map from bank row to its slot in the
+        row-sharded output matrix."""
+        idx, groups, width = shard_rows(bank_rows, self._rows_per_shard,
+                                        self._n_shards)
+        pos = {r: s * width + j
+               for s, g in enumerate(groups) for j, r in enumerate(g)}
+        return idx, pos
+
+    def _train_eval_sharded(self, t: int, participating: np.ndarray,
+                            perms: np.ndarray, c: np.ndarray
+                            ) -> Tuple[int, np.ndarray]:
+        """The fused round over the model mesh: identical control flow to
+        ``_train_eval_fused``, but every work list is bucketed per
+        owning shard (``shard_work_batch`` / ``shard_rows``) and the
+        step is the ``make_sharded_round`` shard_map dispatch. Reading
+        the row-sharded eval matrices back (``np.asarray``) is the only
+        all-gather; the bank itself never leaves the mesh."""
+        cfg = self.cfg
+        bank = self.registry.params
+        S, rps = self._n_shards, self._rows_per_shard
+        row_of = bank.row_of
+        agg_models, pair_model, pair_device, transfers = self._gather_pairs(
+            participating, c)
+        live = self.registry.live_ids()
+
+        live_set = set(live)
+        agg_set = set(agg_models)
+        val_stale = [m for m in live
+                     if m in agg_set or m not in self._val_cache]
+        test_needed = [m for m in self._pred_rows if m in live_set]
+        test_stale = [m for m in test_needed
+                      if m in agg_set or m not in self._test_cache]
+
+        def rows(models):
+            return [row_of[m] for m in models]
+
+        val_mat = test_mat = None
+        vpos = tpos = None
+        if pair_model:
+            # per-shard bucket floor scales down with the shard count:
+            # the global work is split S ways, and an 8-pair floor per
+            # shard would mostly train padding at realistic (C≈0.1)
+            # participation
+            m_idx, d_idx, pperms, pair_groups, b_pad = shard_work_batch(
+                rows(pair_model), pair_device,
+                [perms[d] for d in pair_device], rps, S,
+                minimum=max(8 // S, 2))
+            agg_idx, keep, w = self._shard_agg_plan(
+                rows(agg_models), pair_groups, pair_model, pair_device,
+                c, b_pad)
+            vidx, vpos = self._shard_row_slots(rows(val_stale or live[:1]))
+            tidx, tpos = self._shard_row_slots(rows(test_stale or live[:1]))
+            new_stacked, val_mat, test_mat = self._fused_step(
+                bank.tree, m_idx, d_idx, pperms, w, agg_idx, keep,
+                vidx, tidx,
+                *self._dev["train"], *self._dev["val"], *self._dev["test"])
+            bank.swap(new_stacked)
+        else:
+            if val_stale:
+                vidx, vpos = self._shard_row_slots(rows(val_stale))
+                val_mat = self._fused_eval(bank.tree, vidx,
+                                           *self._dev["val"])
+            if test_stale:
+                tidx, tpos = self._shard_row_slots(rows(test_stale))
+                test_mat = self._fused_eval(bank.tree, tidx,
+                                            *self._dev["test"])
+
+        # overlap: draw round t+1's sample while the step is in flight
+        self._prefetch = (t + 1, self._draw_sample())
+
+        if val_stale and val_mat is not None:
+            vm = np.asarray(val_mat)          # the eval all-gather boundary
+            for m in val_stale:
+                self._val_cache[m] = vm[vpos[row_of[m]]]
+        if test_stale and test_mat is not None:
+            tm = np.asarray(test_mat)
+            for m in test_stale:
+                self._test_cache[m] = tm[tpos[row_of[m]]]
+        for m in agg_models:
+            if m not in test_stale:
+                self._test_cache.pop(m, None)
+
+        accs = np.zeros((self.n_devices, cfg.max_models))
+        for m in live:
+            accs[:, m] = self._val_cache[m]
+        return transfers, accs
+
     # -- batched engine: one fused train/agg dispatch per round -----------
     def _train_eval_batched(self, participating: np.ndarray,
                             perms: np.ndarray, c: np.ndarray
@@ -384,6 +545,22 @@ class FedCDServer:
         return transfers, accs
 
     # -- metrics -----------------------------------------------------------
+    def _eval_rows(self, rows: List[int], split: str) -> np.ndarray:
+        """(len(rows), N) accuracy of the given bank rows on one split,
+        in ``rows`` order — the fused engines' standalone eval dispatch
+        (shard-aware: a sharded server buckets the rows per owning shard
+        and reassembles from the row-sharded output)."""
+        if self.mesh is None:
+            mat = np.asarray(self._fused_eval(
+                self.registry.stacked, pad_live_rows(rows),
+                *self._dev[split]))
+            return mat[:len(rows)]
+        row_of = self.registry.params.row_of
+        idx, pos = self._shard_row_slots([row_of[m] for m in rows])
+        mat = np.asarray(self._fused_eval(self.registry.stacked, idx,
+                                          *self._dev[split]))
+        return mat[[pos[row_of[m]] for m in rows]]
+
     def _refresh_eval_caches(self) -> None:
         """Quantized cloning made every clone's params differ from its
         parent's: re-score the whole live population once and rebuild
@@ -392,12 +569,8 @@ class FedCDServer:
         if not live:
             self._val_cache, self._test_cache = {}, {}
             return
-        rows = pad_live_rows(live)
-        bank = self.registry.params
-        val = np.asarray(self._fused_eval(
-            bank.tree, rows, *self._dev["val"]))[:len(live)]
-        test = np.asarray(self._fused_eval(
-            bank.tree, rows, *self._dev["test"]))[:len(live)]
+        val = self._eval_rows(live, "val")
+        test = self._eval_rows(live, "test")
         self._val_cache = {m: val[j] for j, m in enumerate(live)}
         self._test_cache = {m: test[j] for j, m in enumerate(live)}
 
@@ -425,9 +598,7 @@ class FedCDServer:
             if missing:
                 # test-row prediction missed (a preference shifted to a
                 # model that didn't train): one small dense eval
-                extra = np.asarray(self._fused_eval(
-                    self.registry.stacked, pad_live_rows(missing),
-                    *self._dev["test"]))[:len(missing)]
+                extra = self._eval_rows(missing, "test")
                 for j, m in enumerate(missing):
                     self._test_cache[m] = extra[j]
             for i, m in enumerate(usable):

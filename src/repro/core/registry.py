@@ -16,7 +16,11 @@ Two parameter storage modes (DESIGN.md §2):
   a host-side mask over rows; clone/delete are in-place row writes /
   mask flips, and the fused round engine reads and donates the whole
   bank in a single dispatch with no per-round host restack. Storage is
-  statically ``m_cap`` rows — dead rows are masked, not freed.
+  statically ``m_cap`` rows — dead rows are masked, not freed. With
+  bank ``shardings`` (the mesh-sharded engine, DESIGN.md §9) the row
+  axis is laid out over the launch mesh's ``model`` axis and new rows
+  are PLACED on the least-loaded shard (model id and bank row are
+  decoupled by ``StackedParamBank.row_of``).
 
 The dict-style element access (``reg.params[m]``, ``m in reg.params``)
 works identically in both modes.
@@ -34,14 +38,63 @@ class StackedParamBank:
     """Device-resident parameter bank: one stacked pytree with a leading
     (m_cap,) model axis. Rows are written in place with ``.at[m].set``;
     the fused engine replaces the whole tree via :meth:`swap` after its
-    donated round step."""
+    donated round step.
 
-    def __init__(self, m_cap: int, template: Any):
+    With ``shardings`` (a pytree of ``NamedSharding`` from
+    ``launch.sharding.bank_shardings``) the bank is laid out over the
+    launch mesh's ``model`` axis: each shard owns a contiguous block of
+    ``rows_per_shard`` rows and the sharded round engine only ever
+    touches its resident block (DESIGN.md §9). Host-side row writes
+    (clone params landing in a fresh slot) are re-pinned to the bank
+    sharding afterwards, so a clone's row is materialized on the shard
+    that owns it no matter where the parent's row lives.
+
+    **Row placement**: model id (control plane — stable, genealogy) and
+    bank row (data plane — layout) are decoupled by the ``row_of`` map.
+    A model's first write allocates its row on the shard with the
+    fewest PRESENT rows (ties to the lower shard), so clone populations
+    spread evenly over the mesh instead of clustering on the shards
+    owning the low sequential ids — the per-shard work bucket pads to
+    the densest shard, and every shard burns the padding as real
+    compute, so placement balance is round-throughput balance. Rows are
+    never recycled (ids are never reused and ``m_cap`` bounds models
+    EVER created, matching the paper's M); with one shard the policy
+    degenerates to the identity map, which is why the single-device
+    fused engine can keep indexing the bank by model id directly."""
+
+    def __init__(self, m_cap: int, template: Any, shardings: Any = None,
+                 n_shards: int = 1):
         self.m_cap = m_cap
+        self.shardings = shardings
+        self.n_shards = n_shards
+        self.rows_per_shard = m_cap // max(n_shards, 1)
         self.tree = jax.tree.map(
             lambda a: jnp.zeros((m_cap,) + jnp.shape(a),
                                 jnp.asarray(a).dtype), template)
+        if shardings is not None:
+            self.tree = jax.device_put(self.tree, shardings)
         self._present: set = set()
+        self.row_of: Dict[int, int] = {}
+        self._used_rows: set = set()
+
+    def _alloc_row(self, m: int) -> int:
+        """Least-loaded-shard placement (see class docstring)."""
+        rps = self.rows_per_shard
+        best = None
+        for s in range(self.n_shards):
+            block = range(s * rps, (s + 1) * rps)
+            used = sum(1 for r in block if r in self._used_rows)
+            if used == rps:
+                continue                       # shard full
+            present = sum(1 for mm in self._present
+                          if self.row_of[mm] // rps == s)
+            if best is None or (present, used, s) < best[0]:
+                best = ((present, used, s), s)
+        if best is None:
+            raise IndexError(f"bank is full (m_cap={self.m_cap}): {m}")
+        s = best[1]
+        return min(r for r in range(s * rps, (s + 1) * rps)
+                   if r not in self._used_rows)
 
     def __contains__(self, m: int) -> bool:
         return m in self._present
@@ -49,15 +102,26 @@ class StackedParamBank:
     def __getitem__(self, m: int) -> Any:
         if m not in self._present:
             raise KeyError(m)
-        return jax.tree.map(lambda a: a[m], self.tree)
+        r = self.row_of[m]
+        return jax.tree.map(lambda a: a[r], self.tree)
 
     def __setitem__(self, m: int, row: Any) -> None:
         if not (0 <= m < self.m_cap):
             raise IndexError(m)
-        self.tree = jax.tree.map(
-            lambda a, r: a.at[m].set(jnp.asarray(r, a.dtype)),
-            self.tree, row)
+        r = self.row_of.get(m)
+        if r is None:
+            r = self._alloc_row(m)
+            self.row_of[m] = r
+            self._used_rows.add(r)
         self._present.add(m)
+        self.tree = jax.tree.map(
+            lambda a, v: a.at[r].set(jnp.asarray(v, a.dtype)),
+            self.tree, row)
+        if self.shardings is not None:
+            # route the write to the owning shard: the eager scatter's
+            # output layout is whatever GSPMD picked — re-pin it so the
+            # next donated round step sees the canonical row sharding
+            self.tree = jax.device_put(self.tree, self.shardings)
 
     def pop(self, m: int, default: Any = None) -> Any:
         """Mark row ``m`` absent. The row's storage is static (masked,
@@ -90,10 +154,12 @@ class ModelRegistry:
 
     @classmethod
     def create(cls, initial_params: Any, m_cap: int = 16,
-               stacked: bool = False) -> "ModelRegistry":
+               stacked: bool = False, shardings: Any = None,
+               n_shards: int = 1) -> "ModelRegistry":
         reg = cls(m_cap=m_cap)
         if stacked:
-            reg.params = StackedParamBank(m_cap, initial_params)
+            reg.params = StackedParamBank(m_cap, initial_params, shardings,
+                                          n_shards)
         reg.entries[0] = ModelEntry(0, None, 0)
         reg.params[0] = initial_params
         return reg

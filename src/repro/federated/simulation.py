@@ -16,14 +16,23 @@ Three generations of round data plane live here (DESIGN.md §2):
   multi-model aggregation, the on-device quantize roundtrip, and one
   val + one test (live, N) evaluation matrix, with the stacked
   parameter bank donated in and out.
+* ``make_sharded_round`` / ``make_sharded_eval`` — the PR 3 mesh-sharded
+  fused engine: the bank's ``max_models`` row axis is laid out over the
+  launch mesh's ``model`` axis and the round runs as a ``shard_map``
+  body per shard, each shard training/aggregating/scattering ONLY its
+  resident rows from a per-shard work-pair bucket (``shard_work_batch``
+  / ``shard_rows``). Only the small (rows, N) eval matrices cross the
+  shard boundary back to the host control plane (DESIGN.md §9).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregate import multi_weighted_average
 
@@ -222,6 +231,192 @@ def make_fused_eval(acc_fn: Callable) -> Callable:
         return jax.vmap(eval_model, in_axes=(0, None, None))(rows, xs, ys)
 
     return jax.jit(mat)
+
+
+# -- mesh-sharded fused engine (DESIGN.md §9) -------------------------------
+
+def shard_rows(rows: "list[int]", rows_per_shard: int, n_shards: int
+               ) -> Tuple[np.ndarray, List[List[int]], int]:
+    """Partition global bank-row ids by owning shard (row ``m`` lives on
+    shard ``m // rows_per_shard``) and pad every shard's list to ONE
+    shared bucket ``L = bucket_size(max per-shard count, minimum=1)``.
+
+    Returns ``(idx, groups, L)``: ``idx`` is the (S*L,) int32 array of
+    LOCAL row indices consumed by the shard_map body (shard s reads
+    ``idx[s*L:(s+1)*L]``), ``groups[s]`` lists shard s's global ids in
+    bucket order — the matrix row of global id ``groups[s][j]`` in a
+    sharded (S*L, N) eval output is ``s*L + j``. Padding entries repeat
+    the shard's first real local row (or local row 0 on an empty shard);
+    callers discard their output rows. The per-shard partition is a
+    disjoint cover of ``rows`` with the documented <20% padding-waste
+    bound per shard once the densest shard holds > 8 rows
+    (property-tested in tests/test_property.py)."""
+    groups: List[List[int]] = [[] for _ in range(n_shards)]
+    for r in rows:
+        groups[r // rows_per_shard].append(r)
+    width = bucket_size(max((len(g) for g in groups), default=0),
+                        minimum=1)
+    idx = np.zeros(n_shards * width, np.int32)
+    for s, g in enumerate(groups):
+        base = s * width
+        fill = g[0] - s * rows_per_shard if g else 0
+        idx[base:base + width] = fill
+        idx[base:base + len(g)] = [r - s * rows_per_shard for r in g]
+    return idx, groups, width
+
+
+def shard_work_batch(pair_model: "list[int]", pair_device: "list[int]",
+                     perm_rows: "list[np.ndarray]", rows_per_shard: int,
+                     n_shards: int, minimum: int = 8
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                List[List[int]], int]:
+    """Bucket the gathered (model, device) pairs per OWNING shard so each
+    mesh slice trains only its resident rows: pair k goes to shard
+    ``pair_model[k] // rows_per_shard`` and its model index is made
+    shard-LOCAL. Every shard's pair list is padded to one shared bucket
+    ``B`` (the sharded analogue of ``pad_work_batch``; padding pairs
+    point at local row 0 / device 0 with all-zero perms and are masked
+    out of aggregation by zero weight columns).
+
+    Returns ``(m_idx (S*B,), d_idx (S*B,), perms (S*B, T, b),
+    pair_groups, B)`` where ``pair_groups[s]`` lists the original pair
+    positions assigned to shard s in bucket-column order (column ``j``
+    of shard s's weight block is pair ``pair_groups[s][j]``)."""
+    groups: List[List[int]] = [[] for _ in range(n_shards)]
+    for k, m in enumerate(pair_model):
+        groups[m // rows_per_shard].append(k)
+    width = bucket_size(max(len(g) for g in groups), minimum)
+    m_idx = np.zeros(n_shards * width, np.int32)
+    d_idx = np.zeros(n_shards * width, np.int32)
+    perms = np.zeros((n_shards * width,) + perm_rows[0].shape, np.int32)
+    for s, g in enumerate(groups):
+        base = s * width
+        for j, k in enumerate(g):
+            m_idx[base + j] = pair_model[k] - s * rows_per_shard
+            d_idx[base + j] = pair_device[k]
+            perms[base + j] = perm_rows[k]
+    return m_idx, d_idx, perms, groups, width
+
+
+def make_sharded_round(loss_fn: Callable, acc_fn: Callable, lr: float,
+                       mesh: jax.sharding.Mesh, quantize_bits: int = 0,
+                       use_agg_kernel: bool = False) -> Callable:
+    """``make_fused_round`` sharded over the mesh's ``model`` axis.
+
+    Returns fn(stacked (m_cap, ...) [donated, row-sharded], m_idx (S*B,),
+    d_idx (S*B,), perms (S*B, T, b), w (S*A, B), agg_rows (S*A,),
+    agg_keep (S*A,) bool, live_idx (S*L,), test_idx (S*R,), xs, ys, vx,
+    vy, tx, ty) -> (new_stacked, val_mat (S*L, N), test_mat (S*R, N)).
+
+    Each shard runs the full fused-round body on its OWN block: it
+    gathers local model rows for its B pairs, trains them, aggregates
+    its A rows from its (A, B) weight block, quantize-roundtrips, and
+    scatters back into its local bank block — no collective touches the
+    parameters at any point. ``agg_keep`` guards the scatter: a shard
+    with no training work this round (or padding rows on an empty shard)
+    writes its rows' EXISTING values back, so an empty shard dispatches
+    cleanly and padding can never zero a live row. Non-empty shards'
+    padding rows instead repeat the shard's first aggregation row AND
+    its weight row (the single-device idempotent-duplicate trick), so
+    duplicate scatter indices always carry identical values. The only
+    cross-shard traffic in the step is the caller reading back the small
+    row-sharded eval matrices for the host control plane (the
+    all-gather boundary, DESIGN.md §9)."""
+    one_pair = _pair_train(loss_fn, lr)
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    rep = P()
+
+    def body(stacked, m_idx, d_idx, perms, w, agg_rows, agg_keep,
+             live_idx, test_idx, xs, ys, vx, vy, tx, ty):
+        trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+        agg = multi_weighted_average(trained, w, use_kernel=use_agg_kernel)
+        if quantize_bits:
+            from repro.core import quantize as qz
+            agg = jax.vmap(lambda t: qz.roundtrip(t, quantize_bits))(agg)
+
+        def write(old, new):
+            cur = old[agg_rows]
+            keep = agg_keep.reshape((-1,) + (1,) * (cur.ndim - 1))
+            return old.at[agg_rows].set(
+                jnp.where(keep, new.astype(old.dtype), cur))
+
+        new_stacked = jax.tree.map(write, stacked, agg)
+        vrows = jax.tree.map(lambda a: a[live_idx], new_stacked)
+        trows = jax.tree.map(lambda a: a[test_idx], new_stacked)
+        val = jax.vmap(eval_model, in_axes=(0, None, None))(vrows, vx, vy)
+        test = jax.vmap(eval_model, in_axes=(0, None, None))(trows, tx, ty)
+        return new_stacked, val, test
+
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(row, row, row, row, row, row, row, row, row,
+                  rep, rep, rep, rep, rep, rep),
+        out_specs=(row, row, row), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded_eval(acc_fn: Callable, mesh: jax.sharding.Mesh
+                      ) -> Callable:
+    """``make_fused_eval`` over a row-sharded bank: fn(stacked,
+    idx (S*L,) LOCAL row indices from ``shard_rows``, xs, ys) ->
+    (S*L, N) row-sharded accuracy matrix. Each shard evaluates only its
+    resident rows (on the replicated eval splits); the caller's
+    ``np.asarray`` readback is the all-gather boundary."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    rep = P()
+
+    def mat(stacked, idx, xs, ys):
+        rows = jax.tree.map(lambda a: a[idx], stacked)
+        return jax.vmap(eval_model, in_axes=(0, None, None))(rows, xs, ys)
+
+    return jax.jit(shard_map(mat, mesh=mesh,
+                             in_specs=(row, row, rep, rep),
+                             out_specs=row, check_rep=False))
+
+
+def make_sharded_fedavg_round(loss_fn: Callable, acc_fn: Callable,
+                              lr: float, mesh: jax.sharding.Mesh
+                              ) -> Callable:
+    """FedAvg's fused round with the work-PAIR axis sharded over the
+    mesh's ``model`` axis (one global model — there is no model axis to
+    split, so the parallel dimension is the participating-device pairs).
+
+    Returns fn(stacked (1, ...) [donated, replicated], m_idx (S*B,),
+    d_idx (S*B,), perms (S*B, T, b), w (S*B,), xs, ys, vx, vy, tx, ty)
+    -> (new_stacked (1, ...), val (1, N), test (1, N)).
+
+    Each shard trains its B-pair block and reduces a partial weighted
+    sum; one ``psum`` over ``model`` completes eq 1's average, leaving
+    the updated model replicated on every shard (the FedAvg analogue of
+    the FedCD engine's shard-local aggregation)."""
+    one_pair = _pair_train(loss_fn, lr)
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    rep = P()
+
+    def body(stacked, m_idx, d_idx, perms, w, xs, ys, vx, vy, tx, ty):
+        trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+        num = jax.tree.map(
+            lambda t: jnp.einsum("b...,b->...", t.astype(jnp.float32), w),
+            trained)
+        num = jax.lax.psum(num, "model")
+        den = jnp.maximum(jax.lax.psum(jnp.sum(w), "model"), 1e-12)
+        new_stacked = jax.tree.map(
+            lambda n, o: (n / den).astype(o.dtype)[None], num, stacked)
+        model = jax.tree.map(lambda a: a[0], new_stacked)
+        val = eval_model(model, vx, vy)[None]
+        test = eval_model(model, tx, ty)[None]
+        return new_stacked, val, test
+
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, row, row, row, row, rep, rep, rep, rep, rep, rep),
+        out_specs=(rep, rep, rep), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
 
 
 def make_perms(rng: np.random.Generator, n_devices: int, n_examples: int,

@@ -33,6 +33,20 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     return _make_mesh((data, model), ("data", "model"))
 
 
+def make_model_mesh(n_shards: int) -> jax.sharding.Mesh:
+    """1-D mesh over the ``model`` axis — the sharded fused engine's
+    launch mesh (DESIGN.md §9). The stacked parameter bank's leading
+    ``max_models`` row axis and the gathered work-pair axis are both
+    laid out over this axis; ``n_shards`` must not exceed
+    ``jax.device_count()`` (use ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` for simulated CPU devices)."""
+    return _make_mesh((n_shards,), ("model",))
+
+
+def model_axis_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
 def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -157,6 +157,38 @@ def auto_shardings(tree_shape: Any, mesh: jax.sharding.Mesh,
         treedef, [spec_for(path, leaf) for path, leaf in flat])
 
 
+def bank_row_sharding(mesh: jax.sharding.Mesh, ndim: int) -> NamedSharding:
+    """Sharding for one stacked-bank leaf: the leading ``max_models`` row
+    axis over the mesh's ``model`` axis, everything else replicated.
+    ``ndim`` is the leaf's rank WITHOUT the row axis."""
+    return NamedSharding(mesh, P("model", *([None] * ndim)))
+
+
+def bank_shardings(mesh: jax.sharding.Mesh, template: Any) -> Any:
+    """Pytree of NamedSharding for a ``StackedParamBank`` built from
+    ``template`` (one model's params, no row axis): each leaf's
+    ``(m_cap,) + leaf.shape`` array is row-sharded over ``model``
+    (DESIGN.md §9)."""
+    return jax.tree.map(
+        lambda a: bank_row_sharding(mesh, jnp_ndim(a)), template)
+
+
+def jnp_ndim(x: Any) -> int:
+    return getattr(x, "ndim", jax.numpy.ndim(x))
+
+
+def bank_rows_per_shard(m_cap: int, mesh: jax.sharding.Mesh) -> int:
+    """Rows each model-axis shard owns; row ``m`` lives on shard
+    ``m // rows_per_shard`` (contiguous layout, matching jax's
+    partitioning of the leading axis)."""
+    n = mesh.shape.get("model", 1)
+    if m_cap % n != 0:
+        raise ValueError(
+            f"max_models={m_cap} must divide evenly over the mesh's "
+            f"model axis ({n} shards)")
+    return m_cap // n
+
+
 def batch_spec(mesh: jax.sharding.Mesh, batch: int, ndim: int
                ) -> NamedSharding:
     """Activation/input sharding: batch over dp when divisible."""

@@ -141,6 +141,84 @@ def test_pad_live_rows_prefix_preserved(live):
     assert set(idx[len(live):].tolist()) <= set(live) | {live[0]}
 
 
+@given(st.integers(1, 8), st.integers(1, 8),
+       st.data())
+@settings(max_examples=50, deadline=None)
+def test_shard_row_assignment_is_disjoint_cover(n_shards, rows_per_shard,
+                                                data):
+    """The sharded engine's row partition (DESIGN.md §9): for arbitrary
+    (max_models = n_shards * rows_per_shard, live mask), ``shard_rows``
+    must (a) partition the live rows into a DISJOINT COVER with every
+    row on its owning shard, (b) respect the documented <20% per-shard
+    padding-waste bound once the densest shard holds more than 8 rows,
+    and (c) round-trip through the local-index scatter/gather: local
+    index + shard offset reconstructs exactly the input rows, each at a
+    unique matrix slot."""
+    from repro.federated.simulation import shard_rows
+    m_cap = n_shards * rows_per_shard
+    live = data.draw(st.lists(st.integers(0, m_cap - 1), unique=True,
+                              max_size=m_cap))
+    idx, groups, width = shard_rows(live, rows_per_shard, n_shards)
+
+    # (a) disjoint cover on the owning shards
+    flat = [m for g in groups for m in g]
+    assert sorted(flat) == sorted(live)
+    assert len(set(flat)) == len(flat)
+    for s, g in enumerate(groups):
+        for m in g:
+            assert m // rows_per_shard == s
+
+    # (b) one shared bucket, <20% padding waste per shard past the
+    # bucket_size threshold (minimum=1 -> n > 8)
+    from repro.federated.simulation import bucket_size
+    densest = max((len(g) for g in groups), default=0)
+    assert width == bucket_size(densest, minimum=1)
+    if densest > 8:
+        assert (width - densest) / width < 0.2
+
+    # (c) scatter/gather roundtrip: every live row's matrix slot holds
+    # its own local index, and padding slots stay inside the shard
+    assert len(idx) == n_shards * width
+    assert (idx >= 0).all() and (idx < rows_per_shard).all()
+    for s, g in enumerate(groups):
+        for j, m in enumerate(g):
+            assert idx[s * width + j] + s * rows_per_shard == m
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.data())
+@settings(max_examples=40, deadline=None)
+def test_shard_work_batch_partitions_pairs(n_shards, rows_per_shard, data):
+    """Work pairs land on the shard owning their MODEL row, with
+    shard-local model indices and their perm rows carried along
+    unchanged; padding slots are zeroed (masked out by zero weight
+    columns downstream)."""
+    from repro.federated.simulation import shard_work_batch
+    m_cap = n_shards * rows_per_shard
+    n_pairs = data.draw(st.integers(1, 24))
+    rng = np.random.default_rng(n_pairs * 7 + m_cap)
+    pair_model = rng.integers(0, m_cap, n_pairs).tolist()
+    pair_device = rng.integers(0, 5, n_pairs).tolist()
+    perm_rows = [rng.integers(0, 8, (3, 2)).astype(np.int32)
+                 for _ in range(n_pairs)]
+    m_idx, d_idx, perms, pair_groups, width = shard_work_batch(
+        pair_model, pair_device, perm_rows, rows_per_shard, n_shards)
+
+    flat = [k for g in pair_groups for k in g]
+    assert sorted(flat) == list(range(n_pairs))     # disjoint cover
+    assert len(m_idx) == len(d_idx) == len(perms) == n_shards * width
+    assert (m_idx >= 0).all() and (m_idx < rows_per_shard).all()
+    for s, g in enumerate(pair_groups):
+        assert len(g) <= width
+        for j, k in enumerate(g):
+            slot = s * width + j
+            assert m_idx[slot] + s * rows_per_shard == pair_model[k]
+            assert d_idx[slot] == pair_device[k]
+            np.testing.assert_array_equal(perms[slot], perm_rows[k])
+        # padding slots are zeroed
+        assert (m_idx[s * width + len(g):(s + 1) * width] == 0).all()
+        assert (perms[s * width + len(g):(s + 1) * width] == 0).all()
+
+
 @given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=8))
 @settings(max_examples=30, deadline=None)
 def test_weighted_average_permutation_invariant(ws):

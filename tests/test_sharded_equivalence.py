@@ -1,0 +1,265 @@
+"""Mesh-sharded fused engine ≡ single-device fused engine.
+
+The PR 3 sharded data plane (DESIGN.md §9) lays the stacked bank's
+``max_models`` row axis over the launch mesh's ``model`` axis and
+buckets the gathered (model, device) work pairs per owning shard. It
+must be a pure layout refactor: a seeded sharded run has to reproduce
+the single-device fused run's discrete state (live set, clone/delete
+events, scores, preferences) exactly, and the params up to reduction
+order (per-shard weight blocks zero-pad differently than the global
+(A, B) matrix). Under quantized transport, params are pinned to within
+one int8 step — bitwise is provably unattainable across distinct XLA
+programs (see test_engine_equivalence's module docstring).
+
+Shard counts above ``jax.device_count()`` skip; CI's sharded leg runs
+this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+so the 2- and 4-shard tiers execute (a 1-shard mesh always runs).
+Fixtures mirror test_engine_equivalence.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.fedavg import FedAvgServer
+from repro.core.fedcd import FedCDServer
+from repro.launch.mesh import make_model_mesh
+from repro.models.mlp import mlp_accuracy, mlp_loss
+from test_engine_equivalence import ROUNDS, _small_setup
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def needs_devices(n):
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=f"needs {n} devices (XLA_FLAGS="
+               f"--xla_force_host_platform_device_count={n})")
+
+
+@pytest.fixture(
+    scope="module",
+    params=[pytest.param(s, marks=needs_devices(s)) for s in SHARD_COUNTS])
+def n_shards(request):
+    return request.param
+
+
+def _run(cfg, params, data, rounds=ROUNDS, mesh=None):
+    srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                      batch_size=16, engine="fused", mesh=mesh)
+    srv.run(rounds)
+    return srv
+
+
+@pytest.fixture(scope="module")
+def single():
+    cfg, params, data = _small_setup()
+    return _run(cfg, params, data)
+
+
+@pytest.fixture(scope="module")
+def quantized_single():
+    cfg, params, data = _small_setup(quantize_bits=8)
+    return _run(cfg, params, data, rounds=5)
+
+
+@pytest.fixture(scope="module")
+def sharded(n_shards):
+    cfg, params, data = _small_setup()
+    return _run(cfg, params, data, mesh=make_model_mesh(n_shards))
+
+
+def test_discrete_state_matches_exactly(single, sharded):
+    """Live set, genealogy, clone/delete events, active matrix, score
+    history, and every per-round discrete metric are identical."""
+    assert single.registry.live_ids() == sharded.registry.live_ids()
+    assert single.registry.genealogy() == sharded.registry.genealogy()
+    np.testing.assert_array_equal(single.state.active, sharded.state.active)
+    np.testing.assert_array_equal(single.state.alive, sharded.state.alive)
+    np.testing.assert_array_equal(
+        np.isnan(single.state.history), np.isnan(sharded.state.history))
+    np.testing.assert_allclose(
+        np.nan_to_num(single.state.history),
+        np.nan_to_num(sharded.state.history), atol=1e-9)
+    for ms, mh in zip(single.metrics, sharded.metrics):
+        assert ms.round == mh.round
+        assert ms.live_models == mh.live_models
+        assert ms.active_models == mh.active_models
+        assert ms.comm_bytes == mh.comm_bytes
+        np.testing.assert_array_equal(ms.preferred, mh.preferred)
+        np.testing.assert_allclose(ms.test_acc, mh.test_acc, atol=1e-6)
+        np.testing.assert_allclose(ms.val_acc, mh.val_acc, atol=1e-6)
+
+
+def test_params_match_to_reduction_order(single, sharded):
+    for m in single.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(single.registry.params[m]),
+                        jax.tree.leaves(sharded.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_quantized_sharded_matches_single(n_shards, quantized_single):
+    """Sharded int8-transport run vs single fused: discrete state exact,
+    params within one int8 step (mirrors the 3-engine quantized test)."""
+    cfg, params, data = _small_setup(quantize_bits=8)
+    ref = quantized_single
+    srv = _run(cfg, params, data, rounds=5,
+               mesh=make_model_mesh(n_shards))
+    step = 1.0 / 127
+    for ms, mh in zip(ref.metrics, srv.metrics):
+        assert ms.live_models == mh.live_models
+        assert ms.active_models == mh.active_models
+        assert ms.comm_bytes == mh.comm_bytes
+        np.testing.assert_array_equal(ms.preferred, mh.preferred)
+        np.testing.assert_allclose(ms.test_acc, mh.test_acc, atol=1 / 16)
+    np.testing.assert_array_equal(ref.state.active, srv.state.active)
+    assert ref.registry.live_ids() == srv.registry.live_ids()
+    for m in ref.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(ref.registry.params[m]),
+                        jax.tree.leaves(srv.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2 * step)
+
+
+def test_fedavg_sharded_pair_axis_matches(n_shards):
+    """FedAvg's pair-axis sharding (per-shard partial sums + one psum)
+    tracks the single-device fused round."""
+    cfg, params, data = _small_setup()
+    ref = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                       batch_size=16, engine="fused")
+    ref.run(4)
+    srv = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                       batch_size=16, engine="fused",
+                       mesh=make_model_mesh(n_shards))
+    srv.run(4)
+    for ms, mh in zip(ref.metrics, srv.metrics):
+        assert ms.comm_bytes == mh.comm_bytes
+        np.testing.assert_allclose(ms.test_acc, mh.test_acc, atol=1e-6)
+        np.testing.assert_allclose(ms.val_acc, mh.val_acc, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(srv.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_row_placement_balances_shards():
+    """Least-loaded row placement: model ids stay sequential (control
+    plane) while bank rows spread evenly over the shards (data plane);
+    with one shard the map is the identity the single-device fused
+    engine relies on."""
+    from repro.core.registry import StackedParamBank
+    bank = StackedParamBank(16, {"w": np.zeros(2, np.float32)}, n_shards=4)
+    for m in range(12):
+        bank[m] = {"w": np.full(2, m, np.float32)}
+    per_shard = [sum(1 for m in range(12) if bank.row_of[m] // 4 == s)
+                 for s in range(4)]
+    assert per_shard == [3, 3, 3, 3]
+    assert len(set(bank.row_of.values())) == 12      # rows are a bijection
+    for m in range(12):
+        np.testing.assert_array_equal(np.asarray(bank[m]["w"]),
+                                      np.full(2, m, np.float32))
+    # deletions steer new rows toward the emptiest shard (rows are never
+    # recycled — m_cap bounds models EVER created, the paper's M)
+    for m in (1, 5):                                 # shard 1 loses two
+        bank.pop(m)
+    bank[12] = {"w": np.zeros(2, np.float32)}
+    assert bank.row_of[12] // 4 == 1
+    assert bank.row_of[12] not in (bank.row_of[1], bank.row_of[5])
+    # one shard: identity map
+    b1 = StackedParamBank(16, {"w": np.zeros(2, np.float32)}, n_shards=1)
+    for m in range(6):
+        b1[m] = {"w": np.zeros(2, np.float32)}
+    assert [b1.row_of[m] for m in range(6)] == list(range(6))
+
+
+# -- edge cases: extinction, single survivor, cross-shard clones ----------
+
+def _sharded_server(n_shards, **cfg_kw):
+    cfg, params, data = _small_setup(**cfg_kw)
+    return FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                       batch_size=16, engine="fused",
+                       mesh=make_model_mesh(n_shards))
+
+
+def test_extinction_dispatches_cleanly_sharded(n_shards):
+    """The PR 2 ``_transport_bytes`` extinction regression, extended to
+    the sharded path: after killing the whole population, transport
+    accounting still works AND further rounds dispatch cleanly with
+    every shard empty."""
+    srv = _sharded_server(n_shards, quantize_bits=8)
+    srv.run_round(1)
+    for m in list(srv.registry.live_ids()):
+        srv.registry.kill(m, 1)
+    srv.state.active[:] = False
+    srv.state.alive[:] = False
+    assert srv.registry.live_ids() == []
+    per_model = srv._transport_bytes(1)
+    assert per_model > 0
+    assert srv._transport_bytes(0) == 0
+    assert srv._transport_bytes(3) == 3 * per_model
+    m = srv.run_round(2)                       # all shards empty: no work
+    assert m.live_models == 0
+    assert m.active_models == 0
+    assert m.comm_bytes == 0
+
+
+def test_single_survivor_leaves_other_shards_empty(n_shards):
+    """One live model resident on ONE shard: every other mesh slice gets
+    an all-padding bucket each round (keep-mask path) yet the round
+    trains and scores the survivor normally."""
+    srv = _sharded_server(n_shards)
+    cfg = srv.cfg
+    srv.cfg = dataclasses.replace(cfg, milestones=())   # no cloning
+    before = jax.tree.map(np.asarray, srv.registry.params[0])
+    metrics = srv.run(3)
+    assert [m.live_models for m in metrics] == [1, 1, 1]
+    assert srv.registry.live_ids() == [0]
+    # the survivor actually trained (params moved off the init point)
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(before),
+                        jax.tree.leaves(srv.registry.params[0])))
+    assert moved
+    # and its row write never leaked into other shards' rows: every
+    # never-written bank row is still all-zero
+    for leaf in jax.tree.leaves(srv.registry.stacked):
+        assert np.all(np.asarray(leaf)[1:] == 0)
+
+
+def test_clone_lands_on_non_owner_shard(n_shards):
+    """A milestone clone placed on a different mesh slice than its
+    parent (least-loaded row placement sends the FIRST clone off the
+    parent's shard when there is more than one): the row write is
+    routed to the owning shard and the clone's params are bit-identical
+    to the parent's."""
+    srv = _sharded_server(n_shards)
+    rps = srv._rows_per_shard
+    row_of = srv.registry.params.row_of
+    # clone model 0 until a clone's row falls outside the parent's shard
+    clone = None
+    for _ in range(srv.cfg.max_models - 1):
+        parent_params = jax.tree.map(np.asarray, srv.registry.params[0])
+        c = srv.registry.clone(0, 0, parent_params)
+        assert c is not None
+        srv.state.active[:, c] = True
+        srv.state.alive[c] = True
+        if row_of[c] // rps != 0:
+            clone = c
+            break
+    if n_shards == 1:
+        assert clone is None                   # one shard owns every row
+        return
+    assert clone is not None
+    assert clone == 1                          # balanced placement: clone 1
+    assert row_of[clone] // rps == 1           # lands on shard 1 directly
+    for a, b in zip(jax.tree.leaves(srv.registry.params[0]),
+                    jax.tree.leaves(srv.registry.params[clone])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the cross-shard clone participates in a round like any resident row
+    srv.cfg = dataclasses.replace(srv.cfg, milestones=())
+    m = srv.run_round(1)
+    assert clone in srv.registry.live_ids()
+    assert m.live_models == len(srv.registry.live_ids())
