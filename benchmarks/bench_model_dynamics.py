@@ -245,6 +245,171 @@ def compare_mesh(rounds: int = 16, model: str = "mlp", shards: int = 4,
     return lines
 
 
+def compare_pipeline(rounds: int = 16, model: str = "mlp",
+                     shards: int = 4, quick: bool = False):
+    """Time cross-round pipelined dispatch (DESIGN.md §10) against the
+    synchronous engines: sync sharded (the PR 3 engine), pipelined
+    sharded, sync fused, and pipelined fused, on identical seeded runs
+    in the dynamic regime (early milestones growing the population,
+    eq-4 deletions live) where the monolithic round program's shape key
+    churns. Pipelining wins by (a) dispatching round t+1's training
+    speculatively while round t's eval matrices are in flight and (b)
+    keeping the split phases' shape keys stable, so retraces overlap
+    device work instead of idling it. The plan-repair/invalidation
+    rates are reported alongside the speedups.
+
+    NOTE the CPU backend serializes dependent dispatch of multi-shard
+    arrays at argument commit (measured; single-device dispatch chains
+    stay fully async), so the sharded+pipelined combination mostly
+    shows the split-phase retrace win here — the full overlap shows in
+    the single-device pipelined row and needs a stream-ordered
+    accelerator backend to compose with sharding."""
+    import jax
+
+    from repro.launch.mesh import make_model_mesh
+
+    m_cap = 16
+    avail = jax.device_count()
+    want = shards
+    shards = min(shards, avail)
+    while m_cap % shards:
+        shards -= 1
+    if shards != want:
+        print(f"# --pipeline: --mesh {want} clamped to {shards} "
+              f"({avail} local devices, max_models={m_cap})")
+    params, loss_fn, acc_fn = C.model_fns(model)
+    if quick:
+        rounds = max(rounds, 10)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65,
+                                 devices_per_archetype=1)
+        base = dict(n_devices=len(devs), devices_per_round=4,
+                    local_epochs=1)
+    else:
+        rounds = max(rounds, 16)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65)
+        base = dict(devices_per_round=6, local_epochs=1)
+    # milestones AND late deletions inside the horizon: the population
+    # keeps changing, so the monolithic engines' (B, A, L, R) shape key
+    # churns for the whole run — FedCD's defining regime, and the one
+    # pipelining targets (speculation overlaps the retraces)
+    cfg = C.default_cfg(quantize_bits=8, max_models=m_cap,
+                        milestones=(1, 3, 5),
+                        late_delete_round=max(4, rounds // 2), **base)
+
+    mesh = make_model_mesh(shards)
+    variants = [("sharded_sync", mesh, False),
+                ("sharded_pipelined", mesh, True),
+                ("fused_sync", None, False),
+                ("fused_pipelined", None, True)]
+    servers = {}
+    total = {}
+    for tag, m, pipe in variants:
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH, engine="fused", mesh=m,
+                          pipeline=pipe)
+        t0 = time.time()
+        srv.run(rounds)
+        total[tag] = time.time() - t0
+        servers[tag] = srv
+
+    live = [m.live_models for m in servers["sharded_sync"].metrics]
+    lines = []
+    for tag, _, pipe in variants:
+        med = float(np.median([servers[tag].metrics[r - 1].wall_s
+                               for r in range(rounds // 2 + 1,
+                                              rounds + 1)]))
+        lines.append(C.csv_line(
+            f"pipeline_round_wall_{tag}", total[tag] / rounds * 1e6,
+            f"median_steady_us={med * 1e6:.0f};rounds={rounds};"
+            f"steady_live={live[-1]};devices={cfg.n_devices};"
+            f"shards={shards if 'sharded' in tag else 1}"))
+    st = servers["sharded_pipelined"].pipeline_stats.as_dict()
+    spec = max(st["speculated"], 1)
+    lines.append(C.csv_line(
+        "pipeline_speedup", 0.0,
+        f"fused_pipelined_over_sharded_sync="
+        f"{total['sharded_sync'] / total['fused_pipelined']:.2f}x;"
+        f"sharded_pipelined_over_sharded_sync="
+        f"{total['sharded_sync'] / total['sharded_pipelined']:.2f}x;"
+        f"fused_pipelined_over_fused_sync="
+        f"{total['fused_sync'] / total['fused_pipelined']:.2f}x;"
+        f"repair_rate={st['repaired'] / spec:.2f};"
+        f"hit_rate={st['hit'] / spec:.2f};"
+        f"invalidated={st['invalidated']};discarded={st['discarded']};"
+        f"skipped={st['skipped']};shards={shards}"))
+    # pipelining must be a pure scheduling refactor: identical
+    # population dynamics on the same seed
+    for tag, _, _ in variants[1:]:
+        other = [m.live_models for m in servers[tag].metrics]
+        if other != live:
+            raise AssertionError(
+                f"pipeline divergence: {tag} live={other} sync={live}")
+    return lines
+
+
+def measure_sparse_eval(rounds: int = 16, model: str = "mlp",
+                        quick: bool = False, crossover: float = 0.5):
+    """Dense vs holder-only (sparse) validation scoring (DESIGN.md
+    §10): identical seeded fused runs in the post-segregation regime
+    (deletions active, so each surviving model is held by a shrinking
+    clique and the active (model, device) matrix goes sparse), one with
+    the planner's ``sparse_eval`` crossover enabled. Reports the
+    dense/sparse round-wall ratio, the fraction of rounds the planner
+    actually went sparse, and the final matrix density — the crossover
+    where the pair form beats the dense GEMM's weight reuse is the
+    number the ROADMAP eval item needs from a real accelerator."""
+    params, loss_fn, acc_fn = C.model_fns(model)
+    if quick:
+        rounds = max(rounds, 8)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65,
+                                 devices_per_archetype=1)
+        base = dict(n_devices=len(devs), devices_per_round=4,
+                    milestones=(1, 2), late_delete_round=3,
+                    local_epochs=1)
+    else:
+        rounds = max(rounds, 12)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65)
+        base = dict(devices_per_round=6, milestones=(1, 2, 3),
+                    late_delete_round=5, local_epochs=1)
+    cfg = C.default_cfg(quantize_bits=8, **base)
+
+    servers = {}
+    total = {}
+    for tag, sparse in (("dense", None), ("sparse", crossover)):
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH, engine="fused",
+                          sparse_eval=sparse)
+        t0 = time.time()
+        srv.run(rounds)
+        total[tag] = time.time() - t0
+        servers[tag] = srv
+
+    live = servers["dense"].registry.live_ids()
+    active = servers["dense"].state.active
+    density = (float(active[:, live].mean()) if live else 0.0)
+    sparse_rounds = servers["sparse"].planner.sparse_rounds
+    lines = []
+    for tag in ("dense", "sparse"):
+        med = float(np.median([servers[tag].metrics[r - 1].wall_s
+                               for r in range(rounds // 2 + 1,
+                                              rounds + 1)]))
+        lines.append(C.csv_line(
+            f"sparse_eval_round_wall_{tag}", total[tag] / rounds * 1e6,
+            f"median_steady_us={med * 1e6:.0f};rounds={rounds};"
+            f"devices={cfg.n_devices}"))
+    lines.append(C.csv_line(
+        "sparse_eval_ratio", 0.0,
+        f"dense_over_sparse={total['dense'] / total['sparse']:.2f}x;"
+        f"crossover={crossover};active_density={density:.3f};"
+        f"sparse_rounds={sparse_rounds}/{rounds}"))
+    other = [m.live_models for m in servers["sparse"].metrics]
+    ref = [m.live_models for m in servers["dense"].metrics]
+    if other != ref:
+        raise AssertionError(
+            f"sparse-eval divergence: sparse live={other} dense={ref}")
+    return lines
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare-engines", action="store_true",
@@ -252,23 +417,38 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="with --compare-engines: also time the mesh-"
                          "sharded fused engine on N simulated devices")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="time cross-round pipelined dispatch against "
+                         "the synchronous engines (uses --mesh shards)")
+    ap.add_argument("--sparse-eval", action="store_true",
+                    help="time dense vs holder-only validation scoring")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small config, few rounds)")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+    out = []
     if args.compare_engines:
-        out = compare_engines(args.rounds or (8 if args.quick else 20),
-                              args.model, quick=args.quick)
+        out += compare_engines(args.rounds or (8 if args.quick else 20),
+                               args.model, quick=args.quick)
         if args.mesh:
             out += compare_mesh(args.rounds or (8 if args.quick else 16),
                                 args.model, shards=args.mesh,
                                 quick=args.quick)
-    elif args.mesh:
-        out = compare_mesh(args.rounds or (8 if args.quick else 16),
-                           args.model, shards=args.mesh, quick=args.quick)
-    else:
+    elif args.mesh and not args.pipeline:
+        out += compare_mesh(args.rounds or (8 if args.quick else 16),
+                            args.model, shards=args.mesh,
+                            quick=args.quick)
+    if args.pipeline:
+        out += compare_pipeline(args.rounds or (8 if args.quick else 16),
+                                args.model, shards=args.mesh or 4,
+                                quick=args.quick)
+    if args.sparse_eval:
+        out += measure_sparse_eval(args.rounds or (8 if args.quick
+                                                   else 16),
+                                   args.model, quick=args.quick)
+    if not out:
         out = run(args.rounds or (6 if args.quick else 30), args.model,
                   args.force or args.quick)
     for ln in out:

@@ -76,6 +76,11 @@ def main() -> None:
         "mesh": lambda: bench_model_dynamics.compare_mesh(
             8 if args.fast else 16, args.model,
             shards=args.mesh or 4, quick=args.fast),
+        "pipeline": lambda: bench_model_dynamics.compare_pipeline(
+            8 if args.fast else 16, args.model,
+            shards=args.mesh or 4, quick=args.fast),
+        "sparse": lambda: bench_model_dynamics.measure_sparse_eval(
+            8 if args.fast else 16, args.model, quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),
@@ -88,6 +93,7 @@ def main() -> None:
         # the mesh bench only joins the default sweep when shards are
         # requested (it clamps to 1 shard on a single-device host)
         benches.pop("mesh")
+        benches.pop("pipeline")
 
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -182,7 +182,7 @@ class ArchConfig:
             if kind == MLSTM:
                 di = int(x.proj_factor_mlstm * d)
                 p = 2 * d * di                      # up proj (x + gate branch)
-                p += 3 * di * di // max(self.n_heads, 1) * self.n_heads * 0 + 3 * di * di  # q,k,v (full)
+                p += 3 * di * di                    # q,k,v (full)
                 p += 2 * di * self.n_heads          # i,f gate projections (per head)
                 p += di * d                         # down proj
                 return float(p)

@@ -4,15 +4,18 @@ Identical client loop and data plumbing as FedCDServer so the comparison
 isolates the algorithm: one global model, uniform averaging over the
 participating devices' updates.
 
-Engines mirror FedCDServer: ``"fused"`` (default) keeps the global model
-device-resident and runs train → aggregate → val+test evaluation as one
-jitted, donated dispatch per round; ``"batched"`` (PR 1) gathers only the
-participating devices into one jitted vmapped train step but hops through
-the host for aggregation and evaluates in separate dispatches;
-``"legacy"`` trains all N devices and zero-weights the non-participants
-away. All engines draw the same sampling stream (participation, then one
-shared ``make_perms``) as FedCDServer, so FedCD-vs-FedAvg comparisons see
-identical per-round cohorts.
+The server shares FedCD's plan/executor split (DESIGN.md §10): each
+round it builds a one-model :class:`~repro.core.plan.RoundPlan` (the
+participating devices are the work pairs) and hands it to a FedAvg
+executor. Engines mirror FedCDServer: ``"fused"`` (default) keeps the
+global model device-resident and runs the round as one jitted donated
+dispatch; with ``mesh=`` the work-PAIR axis shards over the mesh
+(partial sums + one psum); ``"batched"`` / ``"legacy"`` are the PR 1 /
+seed baselines. ``pipeline=True`` (fused/sharded) enqueues round t+1's
+training before round t's eval matrices are read back — FedAvg has no
+control-plane feedback, so the speculation is exact and never repaired.
+All engines draw the same sampling stream as FedCDServer, so
+FedCD-vs-FedAvg comparisons see identical per-round cohorts.
 """
 from __future__ import annotations
 
@@ -21,18 +24,15 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FedCDConfig
-from repro.core.aggregate import multi_weighted_average, weighted_average
 from repro.core.fedcd import ENGINES
-from repro.federated.simulation import (bucket_size, draw_round_sample,
-                                        make_eval, make_fused_round,
-                                        make_group_train, make_local_train,
-                                        make_sharded_fedavg_round,
-                                        pad_work_batch)
-from repro.launch.mesh import model_axis_size
+from repro.core.plan import RoundPlan
+from repro.federated.executors import (FedAvgFusedExecutor,
+                                       FedAvgHostExecutor,
+                                       FedAvgShardedExecutor)
+from repro.federated.simulation import draw_round_sample
 
 
 @dataclass
@@ -48,16 +48,23 @@ class FedAvgServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 engine: str = "fused", mesh: Any = None):
+                 engine: str = "fused", mesh: Any = None,
+                 pipeline: bool = False):
         """``mesh``: a 1-D ``model``-axis mesh shards the fused round's
         work-PAIR axis (FedAvg has one global model, so the parallel
         dimension is the participating devices; eq 1 completes with one
-        psum — DESIGN.md §9). Requires ``engine="fused"``."""
+        psum — DESIGN.md §9). Requires ``engine="fused"``.
+        ``pipeline``: split-phase dispatch with the next round's
+        training enqueued before this round's readback (DESIGN.md §10).
+        """
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
         if mesh is not None and engine != "fused":
             raise ValueError(
                 f"mesh sharding requires engine='fused', got {engine!r}")
+        if pipeline and engine != "fused":
+            raise ValueError(
+                f"pipeline=True requires engine='fused', got {engine!r}")
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.data = data
@@ -65,134 +72,76 @@ class FedAvgServer:
         self.n_devices = data["train"][0].shape[0]
         self.engine = engine
         self.mesh = mesh
-        self._n_shards = model_axis_size(mesh) if mesh is not None else 0
-        self._stacked = None
+        self.pipeline = pipeline
         if engine == "fused":
             if mesh is not None:
-                self._fused_step = make_sharded_fedavg_round(
-                    loss_fn, acc_fn, cfg.lr, mesh)
+                self.executor = FedAvgShardedExecutor(
+                    cfg, data, init_params, loss_fn, acc_fn, mesh,
+                    pipeline=pipeline)
             else:
-                self._fused_step = make_fused_round(loss_fn, acc_fn, cfg.lr)
-            self._stacked = jax.tree.map(
-                lambda a: jnp.asarray(a)[None], init_params)
-            self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
-                         for k, (x, y) in data.items()}
+                self.executor = FedAvgFusedExecutor(
+                    cfg, data, init_params, loss_fn, acc_fn,
+                    pipeline=pipeline)
         else:
-            self._params = init_params
-            if engine == "batched":
-                self.group_train = make_group_train(loss_fn, cfg.lr,
-                                                    batch_size)
-            else:
-                self.local_train = make_local_train(loss_fn, cfg.lr,
-                                                    batch_size)
-            self.evaluate = make_eval(acc_fn)
+            self.executor = FedAvgHostExecutor(
+                cfg, data, init_params, loss_fn, acc_fn, batch_size,
+                batched=(engine == "batched"))
         self.metrics: List[FedAvgRound] = []
         self._model_bytes = sum(
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(init_params))
+        self._prefetch = None
+
+    @property
+    def pipeline_stats(self):
+        """Speculation accounting (pipelined executors; None otherwise)."""
+        return self.executor.stats
 
     @property
     def params(self) -> Any:
         """The global model (row 0 of the device bank in fused mode)."""
-        if self._stacked is not None:
-            return jax.tree.map(lambda a: a[0], self._stacked)
-        return self._params
+        return self.executor.get_params()
 
     @params.setter
     def params(self, value: Any) -> None:
-        if self._stacked is not None:
-            self._stacked = jax.tree.map(
-                lambda a: jnp.asarray(a)[None], value)
-        else:
-            self._params = value
+        self.executor.set_params(value)
 
-    def _round_fused(self, participating: np.ndarray, perms: np.ndarray
-                     ) -> "tuple[np.ndarray, np.ndarray]":
-        d_ids = np.nonzero(participating)[0]
-        b = len(d_ids)
-        if self.mesh is not None:
-            return self._round_sharded(d_ids, perms)
-        m_idx, d_idx, pp = pad_work_batch(
-            [0] * b, list(d_ids), [perms[d] for d in d_ids])
-        w = np.zeros((1, len(m_idx)), np.float32)
-        w[0, :b] = 1.0
-        # evaluate the global model on every device's val + test split in
-        # the same dispatch (one-row eval matrices)
-        self._stacked, val_mat, test_mat = self._fused_step(
-            self._stacked, m_idx, d_idx, pp, w, np.zeros(1, np.int32),
-            np.zeros(1, np.int32), np.zeros(1, np.int32),
-            *self._dev["train"], *self._dev["val"], *self._dev["test"])
-        return np.asarray(test_mat)[0], np.asarray(val_mat)[0]
-
-    def _round_sharded(self, d_ids: np.ndarray, perms: np.ndarray
-                       ) -> "tuple[np.ndarray, np.ndarray]":
-        """Shard-aware pair gathering: the participating devices are
-        dealt round-robin over the mesh's model axis and each shard's
-        block is padded to one shared bucket (zero-weight padding pairs,
-        mirroring ``pad_work_batch``); the step psums the partial
-        weighted sums back into one replicated global model."""
-        S = self._n_shards
-        chunks = [d_ids[s::S] for s in range(S)]
-        # per-shard bucket floor scales down with the shard count (the
-        # global work splits S ways), mirroring the FedCD sharded path
-        width = bucket_size(max(len(ch) for ch in chunks),
-                            minimum=max(8 // S, 2))
-        m_idx = np.zeros(S * width, np.int32)
-        d_idx = np.zeros(S * width, np.int32)
-        pp = np.zeros((S * width,) + perms[0].shape, np.int32)
-        w = np.zeros(S * width, np.float32)
-        for s, ch in enumerate(chunks):
-            base = s * width
-            d_idx[base:base + len(ch)] = ch
-            w[base:base + len(ch)] = 1.0
-            for j, d in enumerate(ch):
-                pp[base + j] = perms[d]
-        self._stacked, val_mat, test_mat = self._fused_step(
-            self._stacked, m_idx, d_idx, pp, w,
-            *self._dev["train"], *self._dev["val"], *self._dev["test"])
-        return np.asarray(test_mat)[0], np.asarray(val_mat)[0]
-
-    def _train_batched(self, participating: np.ndarray,
-                       perms: np.ndarray) -> None:
-        xs, ys = self.data["train"]
-        d_ids = np.nonzero(participating)[0]
-        b = len(d_ids)
-        m_idx, d_idx, pp = pad_work_batch(
-            [0] * b, list(d_ids), [perms[d] for d in d_ids])
-        stacked = jax.tree.map(lambda a: jnp.asarray(a)[None], self.params)
-        trained = self.group_train(stacked, m_idx, xs, ys, d_idx, pp)
-        w = np.zeros((1, len(m_idx)), np.float32)
-        w[0, :b] = 1.0
-        agg = multi_weighted_average(trained, w)
-        self.params = jax.tree.map(lambda a: np.asarray(a[0]), agg)
-
-    def _train_legacy(self, participating: np.ndarray,
-                      perms: np.ndarray) -> None:
-        xs, ys = self.data["train"]
-        trained = self.local_train(self.params, xs, ys, perms)
-        w = participating.astype(np.float32)
-        self.params = jax.tree.map(np.asarray, weighted_average(trained, w))
+    def _plan(self, t: int, participating: np.ndarray,
+              perms: np.ndarray) -> RoundPlan:
+        """FedAvg's one-model work order: every participating device is
+        a (model 0, device) pair with uniform weight."""
+        d_ids = [int(d) for d in np.nonzero(participating)[0]]
+        return RoundPlan(
+            round=t, participating=participating, perms=perms,
+            scores=np.ones((self.n_devices, 1), np.float32), live=[0],
+            agg_models=[0], pair_model=[0] * len(d_ids),
+            pair_device=d_ids, transfers=2 * len(d_ids),
+            val_stale=[0], test_stale=[0])
 
     def run_round(self, t: int) -> FedAvgRound:
         t0 = time.time()
         cfg = self.cfg
-        participating, perms = draw_round_sample(
-            self.rng, self.n_devices, cfg.devices_per_round,
-            self.data["train"][0].shape[1], self.batch_size,
-            cfg.local_epochs)
-        if self.engine == "fused":
-            test_acc, val_acc = self._round_fused(participating, perms)
+        if self._prefetch is not None and self._prefetch[0] == t:
+            participating, perms = self._prefetch[1]
+            self._prefetch = None
         else:
-            if self.engine == "batched":
-                self._train_batched(participating, perms)
-            else:
-                self._train_legacy(participating, perms)
-            tx, ty = self.data["test"]
-            vx, vy = self.data["val"]
-            test_acc = np.asarray(self.evaluate(self.params, tx, ty))
-            val_acc = np.asarray(self.evaluate(self.params, vx, vy))
+            participating, perms = draw_round_sample(
+                self.rng, self.n_devices, cfg.devices_per_round,
+                self.data["train"][0].shape[1], self.batch_size,
+                cfg.local_epochs)
+        plan = self._plan(t, participating, perms)
+        self.executor.launch(plan)
+        if self.pipeline:
+            # FedAvg's next round depends on nothing this round computes:
+            # prefetch the sample and enqueue its training immediately
+            self._prefetch = (t + 1, draw_round_sample(
+                self.rng, self.n_devices, cfg.devices_per_round,
+                self.data["train"][0].shape[1], self.batch_size,
+                cfg.local_epochs))
+            self.executor.speculate(self._plan(t + 1, *self._prefetch[1]))
+        result = self.executor.readback()
         m = FedAvgRound(
-            round=t, test_acc=test_acc, val_acc=val_acc,
+            round=t, test_acc=result.test_acc, val_acc=result.val_acc,
             comm_bytes=2 * int(participating.sum()) * self._model_bytes,
             wall_s=time.time() - t0)
         self.metrics.append(m)

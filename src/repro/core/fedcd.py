@@ -7,65 +7,53 @@ data → update scores (eq 2-3) → deletions (eq 4 + late rule) → milestone
 cloning. Metrics needed by every paper figure/table are recorded in
 ``self.metrics``.
 
-Three round engines share the control plane (sampling, scores,
-lifecycle, transport accounting — identical RNG streams, see DESIGN.md
-§7):
+The server is the CONTROL PLANE only (DESIGN.md §10): every round it
+asks a :class:`~repro.core.plan.RoundPlanner` for a host-side
+:class:`~repro.core.plan.RoundPlan` (sampled cohort, gathered work
+pairs, stale eval rows, transport count, lifecycle intents) and hands
+it to a :class:`~repro.federated.executors.RoundExecutor` — the
+device-side data plane — as ``dispatch(plan) → RoundResult``. All
+engines share identical RNG streams (DESIGN.md §7):
 
-* ``engine="fused"`` (default): the device-resident data plane. Model
-  params live in the registry's stacked (m_cap, ...) device bank; the
-  WHOLE round — train over gathered ``(participating & holder)`` pairs,
-  fused score-weighted aggregation, the on-device quantize roundtrip,
-  and val+test evaluation of the active (device, model) pairs — is ONE
-  jitted dispatch with the bank donated in and out. ``push_accuracies``
-  and ``_collect`` both read the step's eval pairs, so the round emits
-  each eval matrix exactly once; next-round participation and perms are
-  drawn while the step is in flight (async host/device overlap). Work
-  is O(pairs) train + O(active pairs) eval per round.
-* ``engine="batched"``: the PR 1 engine — one jitted train step vmapped
-  over the gathered pairs, fused multi-model aggregation, but dense
-  (live, N) eval matrices dispatched three times per round (val for
-  scores, then val+test again in ``_collect``) and a host hop around
-  aggregation and quantization. Kept as the fused engine's benchmark
-  baseline.
-* ``engine="legacy"``: the original per-model Python loop — every live
-  model trains ALL N devices (non-holders are zero-weighted away), each
-  model aggregated and evaluated in its own dispatch. Work is
-  O(models · devices). Kept as the equivalence oracle.
+* ``engine="fused"`` (default): the device-resident data plane
+  (DESIGN.md §2) — stacked param bank, one donated round dispatch,
+  eval-row caching, test-row prediction, sampling prefetch.
+* ``engine="fused"`` with ``mesh=``: the mesh-sharded fused data plane
+  (DESIGN.md §9) — bank rows and work pairs bucket per owning shard.
+* ``engine="batched"``: the PR 1 engine, kept as the fused engine's
+  benchmark baseline.
+* ``engine="legacy"``: the original per-model Python loop, kept as the
+  equivalence oracle.
 
-``engine="fused"`` with ``mesh=`` (a 1-D ``model``-axis mesh) selects
-the SHARDED fused data plane (DESIGN.md §9): the bank's row axis is
-laid out over the mesh, work pairs bucket per owning shard, and each
-mesh slice trains/aggregates/scatters only its resident rows — the
-host control plane is unchanged and
-``tests/test_sharded_equivalence.py`` pins it to the single-device
-engine.
+``pipeline=True`` (fused and sharded engines) additionally dispatches
+round t+1's *training* speculatively — from the prefetched sample and
+the pre-lifecycle population — while round t's eval matrices are still
+in flight; the speculation is repaired (deletions) or invalidated and
+retrained (clones) at the next launch (DESIGN.md §10).
+
+``sparse_eval=crossover`` lets the planner score only holders' splits
+when the active (model, device) matrix is sparse enough for the pair
+form to beat the dense eval GEMM.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FedCDConfig
 from repro.core import quantize as qz
-from repro.core.aggregate import (multi_weighted_average,
-                                  participation_weights, weighted_average)
 from repro.core.lifecycle import apply_deletions, clone_at_milestone
+from repro.core.plan import RoundPlanner
 from repro.core.registry import ModelRegistry
 from repro.core.scores import (init_scores, normalized_scores,
                                push_accuracies)
-from repro.federated.simulation import (bucket_size, draw_round_sample,
-                                        make_eval, make_fused_eval,
-                                        make_fused_round, make_group_eval,
-                                        make_group_train, make_local_train,
-                                        make_sharded_eval,
-                                        make_sharded_round, pad_live_rows,
-                                        pad_work_batch, shard_rows,
-                                        shard_work_batch)
+from repro.federated.executors import (BatchedExecutor, FusedExecutor,
+                                       LegacyExecutor, ShardedExecutor)
+from repro.federated.simulation import draw_round_sample
 from repro.launch.mesh import model_axis_size
 from repro.launch.sharding import bank_rows_per_shard, bank_shardings
 
@@ -92,21 +80,34 @@ class FedCDServer:
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
                  use_agg_kernel: bool = False, engine: str = "fused",
-                 mesh: Any = None):
+                 mesh: Any = None, pipeline: bool = False,
+                 sparse_eval: Optional[float] = None):
         """data: stacked device splits from ``partition.stack_devices``:
         {"train": (xs (N,n,...), ys), "val": ..., "test": ...}.
 
         ``mesh``: a 1-D ``model``-axis mesh (``launch.mesh.
-        make_model_mesh``) selects the SHARDED fused data plane: the
-        stacked bank's row axis and the gathered work pairs are laid out
-        over the mesh and each shard trains only its resident rows
-        (DESIGN.md §9). Requires ``engine="fused"`` and
-        ``max_models`` divisible by the mesh's model-axis size."""
+        make_model_mesh``) selects the SHARDED fused data plane
+        (DESIGN.md §9). Requires ``engine="fused"`` and ``max_models``
+        divisible by the mesh's model-axis size.
+
+        ``pipeline``: cross-round pipelined dispatch (fused/sharded
+        engines): round t+1's training is speculatively enqueued while
+        round t's eval matrices are in flight (DESIGN.md §10).
+
+        ``sparse_eval``: density crossover below which validation
+        scoring goes holder-only instead of the dense (stale, N)
+        matrix (DESIGN.md §10)."""
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
         if mesh is not None and engine != "fused":
             raise ValueError(
                 f"mesh sharding requires engine='fused', got {engine!r}")
+        if pipeline and engine != "fused":
+            raise ValueError(
+                f"pipeline=True requires engine='fused', got {engine!r}")
+        if sparse_eval is not None and engine != "fused":
+            raise ValueError(
+                f"sparse_eval requires engine='fused', got {engine!r}")
         self.cfg = cfg
         # Two host RNG streams (DESIGN.md §7): ``rng`` drives round
         # sampling (participation + perms) ONLY, so the fused engine can
@@ -119,6 +120,9 @@ class FedCDServer:
         self.n_devices = data["train"][0].shape[0]
         assert self.n_devices == cfg.n_devices, (self.n_devices, cfg.n_devices)
         self.mesh = mesh
+        self.engine = engine
+        self.pipeline = pipeline
+        self.use_agg_kernel = use_agg_kernel
         self._n_shards = model_axis_size(mesh) if mesh is not None else 0
         self._rows_per_shard = (bank_rows_per_shard(cfg.max_models, mesh)
                                 if mesh is not None else 0)
@@ -132,29 +136,8 @@ class FedCDServer:
             n_shards=max(self._n_shards, 1))
         self.state = init_scores(cfg.n_devices, cfg.max_models,
                                  cfg.score_window)
-        self.engine = engine
-        if engine == "fused":
-            if mesh is not None:
-                self._fused_step = make_sharded_round(
-                    loss_fn, acc_fn, cfg.lr, mesh, cfg.quantize_bits,
-                    use_agg_kernel)
-                self._fused_eval = make_sharded_eval(acc_fn, mesh)
-            else:
-                self._fused_step = make_fused_round(
-                    loss_fn, acc_fn, cfg.lr, cfg.quantize_bits,
-                    use_agg_kernel)
-                self._fused_eval = make_fused_eval(acc_fn)
-            # device-resident copies of every split: uploaded once, then
-            # passed by reference into each round step
-            self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
-                         for k, (x, y) in data.items()}
-        elif engine == "batched":
-            self.group_train = make_group_train(loss_fn, cfg.lr, batch_size)
-            self.group_eval = make_group_eval(acc_fn)
-        else:
-            self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
-            self.evaluate = make_eval(acc_fn)
-        self.use_agg_kernel = use_agg_kernel
+        self.planner = RoundPlanner(cfg, sparse_eval=sparse_eval)
+        self.executor = self._make_executor(loss_fn, acc_fn)
         self.metrics: List[RoundMetrics] = []
         self._model_bytes = sum(
             leaf.size * leaf.dtype.itemsize
@@ -166,19 +149,27 @@ class FedCDServer:
             qz.compressed_bytes(init_params, cfg.quantize_bits)
             if cfg.quantize_bits else self._model_bytes)
         self._prefetch: Tuple[int, Tuple[np.ndarray, np.ndarray]] = None
-        # fused engine eval-row caches: a model's params change ONLY when
-        # it aggregates a training round or is born, so its (N,) val/test
-        # accuracy rows are reused bit-identically until then — with low
-        # participation most live models skip most rounds, so eval work
-        # per round is O(models that changed), not O(live)
-        self._val_cache: Dict[int, np.ndarray] = {}
-        self._test_cache: Dict[int, np.ndarray] = {}
-        self._needs_eval_refresh = False
-        # predicted test-eval rows for the next fused step: the models
-        # devices prefer now (preferences are sticky, so the prediction
-        # is exact in steady state; misses fall back to one small eval
-        # dispatch in _collect)
-        self._pred_rows: List[int] = [0]
+
+    def _make_executor(self, loss_fn: Callable, acc_fn: Callable):
+        if self.engine == "fused":
+            if self.mesh is not None:
+                return ShardedExecutor(
+                    self.cfg, self.registry, self.data, loss_fn, acc_fn,
+                    self.mesh, use_agg_kernel=self.use_agg_kernel,
+                    pipeline=self.pipeline)
+            return FusedExecutor(
+                self.cfg, self.registry, self.data, loss_fn, acc_fn,
+                use_agg_kernel=self.use_agg_kernel,
+                pipeline=self.pipeline)
+        cls = (BatchedExecutor if self.engine == "batched"
+               else LegacyExecutor)
+        return cls(self.cfg, self.registry, self.data, loss_fn, acc_fn,
+                   self.batch_size, use_agg_kernel=self.use_agg_kernel)
+
+    @property
+    def pipeline_stats(self):
+        """Speculation accounting (pipelined executors; None otherwise)."""
+        return self.executor.stats
 
     # -- transport accounting (paper §3.6) --------------------------------
     def _transport_bytes(self, n_transfers: int) -> int:
@@ -186,14 +177,6 @@ class FedCDServer:
 
     def _maybe_compress(self, params: Any) -> Any:
         return qz.roundtrip(params, self.cfg.quantize_bits)
-
-    def _stack_params(self, model_ids: Sequence[int], pad_to: int) -> Any:
-        """Stack live model params into one pytree with a leading model
-        axis of static length ``pad_to`` (rows past the live count repeat
-        model 0 and are never read by real pairs)."""
-        trees = [self.registry.params[m] for m in model_ids]
-        trees += [trees[0]] * (pad_to - len(trees))
-        return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
 
     # -- round sampling ----------------------------------------------------
     def _draw_sample(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -215,21 +198,25 @@ class FedCDServer:
     def run_round(self, t: int) -> RoundMetrics:
         t0 = time.time()
         cfg = self.cfg
-        participating, perms = self._round_sample(t)
+        sample = self._round_sample(t)
         c = normalized_scores(self.state)
 
-        if self.engine == "fused":
-            step = (self._train_eval_sharded if self.mesh is not None
-                    else self._train_eval_fused)
-            transfers, accs = step(t, participating, perms, c)
-        elif self.engine == "batched":
-            transfers, accs = self._train_eval_batched(participating,
-                                                       perms, c)
-        else:
-            transfers, accs = self._train_eval_legacy(participating,
-                                                      perms, c)
+        plan = self.planner.build(t, sample, c, self.state, self.registry,
+                                  self.executor.plan_hints())
+        self.executor.launch(plan)
+        # overlap: draw round t+1's participation + perms while the
+        # dispatched work is still executing (ROADMAP: async sampling)
+        self._prefetch = (t + 1, self._draw_sample())
+        if self.pipeline:
+            # cross-round speculation: enqueue round t+1's training from
+            # the prefetched sample + pre-lifecycle state (DESIGN.md §10)
+            spec = self.planner.build_speculative(
+                t + 1, self._prefetch[1], self.state, self.registry)
+            self.executor.speculate(spec)
+        result = self.executor.readback()
 
-        self.state = push_accuracies(self.state, accs)
+        transfers = plan.transfers
+        self.state = push_accuracies(self.state, result.accs)
         self.state, _ = apply_deletions(self.state, self.registry, t, cfg)
         if t in cfg.milestones:
             self.state, cloned = clone_at_milestone(
@@ -237,396 +224,17 @@ class FedCDServer:
                 clone_params_fn=self._maybe_compress)
             transfers += sum(int(self.state.active[:, m2].sum())
                              for m2 in self.registry.live_ids())
-            if self.engine == "fused" and cloned:
-                if cfg.quantize_bits:
-                    # clones are quantize roundtrips of their parents —
-                    # cached eval rows don't transfer; re-eval the
-                    # population once in _collect
-                    self._needs_eval_refresh = True
-                else:
-                    # a clone's params are bit-identical to its parent's
-                    for parent, clone in cloned:
-                        if parent in self._val_cache:
-                            self._val_cache[clone] = self._val_cache[parent]
-                        if parent in self._test_cache:
-                            self._test_cache[clone] = \
-                                self._test_cache[parent]
+            self.executor.on_clones(cloned)
 
         metrics = self._collect(t, transfers, time.time() - t0)
         self.metrics.append(metrics)
         return metrics
 
-    # -- shared pair gathering --------------------------------------------
-    def _gather_pairs(self, participating: np.ndarray, c: np.ndarray
-                      ) -> Tuple[List[int], List[int], List[int], int]:
-        """(participating & holder) pairs in live-model-id order, plus the
-        transport count (2 transfers per holder: up + down)."""
-        agg_models: List[int] = []
-        pair_model: List[int] = []
-        pair_device: List[int] = []
-        transfers = 0
-        for m in self.registry.live_ids():
-            holders = self.state.active[:, m] & participating
-            if not holders.any():
-                continue
-            d_ids = np.nonzero(holders)[0]
-            agg_models.append(m)
-            pair_model.extend([m] * len(d_ids))
-            pair_device.extend(int(d) for d in d_ids)
-            transfers += 2 * len(d_ids)
-        return agg_models, pair_model, pair_device, transfers
-
-    # -- fused engine: the whole round in one dispatch --------------------
-    def _train_eval_fused(self, t: int, participating: np.ndarray,
-                          perms: np.ndarray, c: np.ndarray
-                          ) -> Tuple[int, np.ndarray]:
-        cfg = self.cfg
-        bank = self.registry.params
-        agg_models, pair_model, pair_device, transfers = self._gather_pairs(
-            participating, c)
-        live = self.registry.live_ids()
-
-        live_set = set(live)
-        agg_set = set(agg_models)
-        # only rows whose params change this round (trained) or were
-        # never scored need evaluating; everything else reuses its
-        # cached row bit-identically
-        val_stale = [m for m in live
-                     if m in agg_set or m not in self._val_cache]
-        test_needed = [m for m in self._pred_rows if m in live_set]
-        test_stale = [m for m in test_needed
-                      if m in agg_set or m not in self._test_cache]
-
-        val_mat = test_mat = None
-        if pair_model:
-            b = len(pair_model)
-            m_idx, d_idx, pperms = pad_work_batch(
-                pair_model, pair_device, [perms[d] for d in pair_device])
-            # bucketed aggregation rows: row j weights the pairs of
-            # agg_models[j]; padding rows repeat row 0 so their scatter
-            # writes are idempotent
-            agg_rows = pad_live_rows(agg_models)
-            slot = {m: j for j, m in enumerate(agg_models)}
-            w = np.zeros((len(agg_rows), len(m_idx)), np.float32)
-            w[[slot[m] for m in pair_model], np.arange(b)] = \
-                c[pair_device, pair_model]
-            w[len(agg_models):] = w[0]
-            new_stacked, val_mat, test_mat = self._fused_step(
-                bank.tree, m_idx, d_idx, pperms, w, agg_rows,
-                pad_live_rows(val_stale or live[:1]),
-                pad_live_rows(test_stale or live[:1]),
-                *self._dev["train"], *self._dev["val"], *self._dev["test"])
-            bank.swap(new_stacked)
-        else:
-            if val_stale:
-                val_mat = self._fused_eval(
-                    bank.tree, pad_live_rows(val_stale), *self._dev["val"])
-            if test_stale:
-                test_mat = self._fused_eval(
-                    bank.tree, pad_live_rows(test_stale), *self._dev["test"])
-
-        # overlap: draw round t+1's participation + perms while the step
-        # above is still executing on the device (ROADMAP: async sampling)
-        self._prefetch = (t + 1, self._draw_sample())
-
-        if val_stale and val_mat is not None:
-            val_mat = np.asarray(val_mat)[:len(val_stale)]
-            for j, m in enumerate(val_stale):
-                self._val_cache[m] = val_mat[j]
-        if test_stale and test_mat is not None:
-            test_mat = np.asarray(test_mat)[:len(test_stale)]
-            for j, m in enumerate(test_stale):
-                self._test_cache[m] = test_mat[j]
-        # a trained model's old test row is stale: drop it unless it was
-        # just re-evaluated (a later preference shift re-scores it via
-        # _collect's fallback dispatch)
-        for m in agg_models:
-            if m not in test_stale:
-                self._test_cache.pop(m, None)
-
-        accs = np.zeros((self.n_devices, cfg.max_models))
-        for m in live:
-            accs[:, m] = self._val_cache[m]
-        return transfers, accs
-
-    # -- sharded fused engine: per-shard buckets over the model mesh ------
-    def _shard_agg_plan(self, agg_rows: List[int], pair_groups,
-                        pair_model: List[int], pair_device: List[int],
-                        c: np.ndarray, b_pad: int
-                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Per-shard aggregation schedule for the sharded round step:
-        LOCAL agg row indices (S*A,), the (S*A, B) weight blocks (row
-        ``s*A+j`` weights shard s's pairs of its j-th agg row), and the
-        keep mask guarding the scatter. Empty shards get all-padding
-        rows with keep=False (they rewrite existing values); non-empty
-        shards' padding rows repeat their first agg row AND weight row so
-        duplicate scatter indices stay idempotent. ``agg_rows`` are BANK
-        rows (``row_of``-mapped); ``pair_model`` stays in model ids for
-        the score lookup."""
-        S = self._n_shards
-        row_of = self.registry.params.row_of
-        agg_idx, agg_groups, a_pad = shard_rows(
-            agg_rows, self._rows_per_shard, S)
-        keep = np.zeros(S * a_pad, bool)
-        w = np.zeros((S * a_pad, b_pad), np.float32)
-        for s, group in enumerate(agg_groups):
-            if not group:
-                continue
-            base = s * a_pad
-            keep[base:base + a_pad] = True
-            slot = {r: j for j, r in enumerate(group)}
-            for col, k in enumerate(pair_groups[s]):
-                m, d = pair_model[k], pair_device[k]
-                w[base + slot[row_of[m]], col] = c[d, m]
-            w[base + len(group):base + a_pad] = w[base]
-        return agg_idx, keep, w
-
-    def _shard_row_slots(self, bank_rows: List[int]
-                         ) -> Tuple[np.ndarray, Dict[int, int]]:
-        """Shard-bucketed eval schedule: the (S*L,) LOCAL row-index array
-        for the step plus the map from bank row to its slot in the
-        row-sharded output matrix."""
-        idx, groups, width = shard_rows(bank_rows, self._rows_per_shard,
-                                        self._n_shards)
-        pos = {r: s * width + j
-               for s, g in enumerate(groups) for j, r in enumerate(g)}
-        return idx, pos
-
-    def _train_eval_sharded(self, t: int, participating: np.ndarray,
-                            perms: np.ndarray, c: np.ndarray
-                            ) -> Tuple[int, np.ndarray]:
-        """The fused round over the model mesh: identical control flow to
-        ``_train_eval_fused``, but every work list is bucketed per
-        owning shard (``shard_work_batch`` / ``shard_rows``) and the
-        step is the ``make_sharded_round`` shard_map dispatch. Reading
-        the row-sharded eval matrices back (``np.asarray``) is the only
-        all-gather; the bank itself never leaves the mesh."""
-        cfg = self.cfg
-        bank = self.registry.params
-        S, rps = self._n_shards, self._rows_per_shard
-        row_of = bank.row_of
-        agg_models, pair_model, pair_device, transfers = self._gather_pairs(
-            participating, c)
-        live = self.registry.live_ids()
-
-        live_set = set(live)
-        agg_set = set(agg_models)
-        val_stale = [m for m in live
-                     if m in agg_set or m not in self._val_cache]
-        test_needed = [m for m in self._pred_rows if m in live_set]
-        test_stale = [m for m in test_needed
-                      if m in agg_set or m not in self._test_cache]
-
-        def rows(models):
-            return [row_of[m] for m in models]
-
-        val_mat = test_mat = None
-        vpos = tpos = None
-        if pair_model:
-            # per-shard bucket floor scales down with the shard count:
-            # the global work is split S ways, and an 8-pair floor per
-            # shard would mostly train padding at realistic (C≈0.1)
-            # participation
-            m_idx, d_idx, pperms, pair_groups, b_pad = shard_work_batch(
-                rows(pair_model), pair_device,
-                [perms[d] for d in pair_device], rps, S,
-                minimum=max(8 // S, 2))
-            agg_idx, keep, w = self._shard_agg_plan(
-                rows(agg_models), pair_groups, pair_model, pair_device,
-                c, b_pad)
-            vidx, vpos = self._shard_row_slots(rows(val_stale or live[:1]))
-            tidx, tpos = self._shard_row_slots(rows(test_stale or live[:1]))
-            new_stacked, val_mat, test_mat = self._fused_step(
-                bank.tree, m_idx, d_idx, pperms, w, agg_idx, keep,
-                vidx, tidx,
-                *self._dev["train"], *self._dev["val"], *self._dev["test"])
-            bank.swap(new_stacked)
-        else:
-            if val_stale:
-                vidx, vpos = self._shard_row_slots(rows(val_stale))
-                val_mat = self._fused_eval(bank.tree, vidx,
-                                           *self._dev["val"])
-            if test_stale:
-                tidx, tpos = self._shard_row_slots(rows(test_stale))
-                test_mat = self._fused_eval(bank.tree, tidx,
-                                            *self._dev["test"])
-
-        # overlap: draw round t+1's sample while the step is in flight
-        self._prefetch = (t + 1, self._draw_sample())
-
-        if val_stale and val_mat is not None:
-            vm = np.asarray(val_mat)          # the eval all-gather boundary
-            for m in val_stale:
-                self._val_cache[m] = vm[vpos[row_of[m]]]
-        if test_stale and test_mat is not None:
-            tm = np.asarray(test_mat)
-            for m in test_stale:
-                self._test_cache[m] = tm[tpos[row_of[m]]]
-        for m in agg_models:
-            if m not in test_stale:
-                self._test_cache.pop(m, None)
-
-        accs = np.zeros((self.n_devices, cfg.max_models))
-        for m in live:
-            accs[:, m] = self._val_cache[m]
-        return transfers, accs
-
-    # -- batched engine: one fused train/agg dispatch per round -----------
-    def _train_eval_batched(self, participating: np.ndarray,
-                            perms: np.ndarray, c: np.ndarray
-                            ) -> Tuple[int, np.ndarray]:
-        cfg = self.cfg
-        xs, ys = self.data["train"]
-        agg_models, pair_model, pair_device, transfers = self._gather_pairs(
-            participating, c)
-
-        if agg_models:
-            b = len(pair_model)
-            m_pad = bucket_size(len(agg_models), minimum=1)
-            slot = {m: j for j, m in enumerate(agg_models)}
-            m_idx, d_idx, pperms = pad_work_batch(
-                [slot[m] for m in pair_model], pair_device,
-                [perms[d] for d in pair_device])
-            stacked = self._stack_params(agg_models, m_pad)
-            trained = self.group_train(stacked, m_idx, xs, ys, d_idx, pperms)
-            # weights (m_pad, b_pad): row j carries c_m_i for model j's
-            # pairs; padding pairs/models stay all-zero columns/rows
-            w = np.zeros((m_pad, len(m_idx)), np.float32)
-            w[m_idx[:b], np.arange(b)] = c[pair_device, pair_model]
-            agg = jax.tree.map(np.asarray, multi_weighted_average(
-                trained, w, use_kernel=self.use_agg_kernel))
-            for j, m in enumerate(agg_models):
-                self.registry.params[m] = self._maybe_compress(
-                    jax.tree.map(lambda a: a[j], agg))
-
-        accs = np.zeros((self.n_devices, cfg.max_models))
-        vx, vy = self.data["val"]
-        mat, live = self._eval_matrix(vx, vy)
-        for j, m in enumerate(live):
-            accs[:, m] = mat[j]
-        return transfers, accs
-
-    def _eval_matrix(self, x: np.ndarray, y: np.ndarray
-                     ) -> Tuple[np.ndarray, List[int]]:
-        """(live, N) accuracy of every live model on every device split,
-        one fused vmapped call."""
-        live = self.registry.live_ids()
-        if not live:
-            return np.zeros((0, self.n_devices)), live
-        stacked = self._stack_params(live, bucket_size(len(live), minimum=1))
-        return np.asarray(self.group_eval(stacked, x, y)), live
-
-    # -- legacy engine: per-model Python loop ------------------------------
-    def _train_eval_legacy(self, participating: np.ndarray,
-                           perms: np.ndarray, c: np.ndarray
-                           ) -> Tuple[int, np.ndarray]:
-        cfg = self.cfg
-        xs, ys = self.data["train"]
-        transfers = 0
-
-        for m in self.registry.live_ids():
-            holders = self.state.active[:, m] & participating
-            if not holders.any():
-                continue
-            trained = self.local_train(self.registry.params[m], xs, ys, perms)
-            w = participation_weights(c, m, participating, self.state.active)
-            new_params = weighted_average(trained, w,
-                                          use_kernel=self.use_agg_kernel)
-            self.registry.params[m] = self._maybe_compress(
-                jax.tree.map(np.asarray, new_params))
-            transfers += 2 * int(holders.sum())   # up + down per holder
-
-        # evaluate every live model on every device's validation set
-        accs = np.zeros((self.n_devices, cfg.max_models))
-        vx, vy = self.data["val"]
-        for m in self.registry.live_ids():
-            accs[:, m] = np.asarray(self.evaluate(self.registry.params[m],
-                                                  vx, vy))
-        return transfers, accs
-
     # -- metrics -----------------------------------------------------------
-    def _eval_rows(self, rows: List[int], split: str) -> np.ndarray:
-        """(len(rows), N) accuracy of the given bank rows on one split,
-        in ``rows`` order — the fused engines' standalone eval dispatch
-        (shard-aware: a sharded server buckets the rows per owning shard
-        and reassembles from the row-sharded output)."""
-        if self.mesh is None:
-            mat = np.asarray(self._fused_eval(
-                self.registry.stacked, pad_live_rows(rows),
-                *self._dev[split]))
-            return mat[:len(rows)]
-        row_of = self.registry.params.row_of
-        idx, pos = self._shard_row_slots([row_of[m] for m in rows])
-        mat = np.asarray(self._fused_eval(self.registry.stacked, idx,
-                                          *self._dev[split]))
-        return mat[[pos[row_of[m]] for m in rows]]
-
-    def _refresh_eval_caches(self) -> None:
-        """Quantized cloning made every clone's params differ from its
-        parent's: re-score the whole live population once and rebuild
-        both row caches (rare — milestone rounds only)."""
-        live = self.registry.live_ids()
-        if not live:
-            self._val_cache, self._test_cache = {}, {}
-            return
-        val = self._eval_rows(live, "val")
-        test = self._eval_rows(live, "test")
-        self._val_cache = {m: val[j] for j, m in enumerate(live)}
-        self._test_cache = {m: test[j] for j, m in enumerate(live)}
-
     def _collect(self, t: int, transfers: int, wall: float) -> RoundMetrics:
         c = normalized_scores(self.state)
         preferred = np.argmax(np.where(self.state.active, c, -1.0), axis=1)
-        tx, ty = self.data["test"]
-        vx, vy = self.data["val"]
-        test_acc = np.zeros(self.n_devices)
-        val_acc = np.zeros(self.n_devices)
-        if self.engine == "fused":
-            # read the cached eval rows (same-round clones inherited
-            # their parent's rows; quantized cloning rebuilt the caches)
-            if self._needs_eval_refresh:
-                self._refresh_eval_caches()
-                self._needs_eval_refresh = False
-            entries = self.registry.entries
-            wanted = [int(m) for m in preferred]
-            usable = [m if (m in entries and entries[m].alive
-                            and m in self._val_cache) else None
-                      for m in wanted]
-            missing = sorted({m for m in usable
-                              if m is not None
-                              and m not in self._test_cache})
-            if missing:
-                # test-row prediction missed (a preference shifted to a
-                # model that didn't train): one small dense eval
-                extra = self._eval_rows(missing, "test")
-                for j, m in enumerate(missing):
-                    self._test_cache[m] = extra[j]
-            for i, m in enumerate(usable):
-                if m is not None:
-                    test_acc[i] = self._test_cache[m][i]
-                    val_acc[i] = self._val_cache[m][i]
-            # predict next round's test rows: what devices prefer now
-            self._pred_rows = sorted({m for m in usable if m is not None})
-        elif self.engine == "batched":
-            # reuse the fused (live, N) accuracy matrices: device i reads
-            # row slot[preferred[i]] instead of a per-model re-evaluation
-            test_mat, live = self._eval_matrix(tx, ty)
-            val_mat, _ = self._eval_matrix(vx, vy)
-            slot = {m: j for j, m in enumerate(live)}
-            for i in range(self.n_devices):
-                j = slot.get(int(preferred[i]))
-                if j is not None:
-                    test_acc[i] = test_mat[j, i]
-                    val_acc[i] = val_mat[j, i]
-        else:
-            for m in np.unique(preferred):
-                sel = preferred == m
-                if m not in self.registry.params:
-                    continue
-                test_acc[sel] = np.asarray(self.evaluate(
-                    self.registry.params[m], tx, ty))[sel]
-                val_acc[sel] = np.asarray(self.evaluate(
-                    self.registry.params[m], vx, vy))[sel]
+        test_acc, val_acc = self.executor.collect(preferred)
         stds = []
         for i in range(self.n_devices):
             ci = c[i, self.state.active[i]]

@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class StackedParamBank:
@@ -52,15 +53,30 @@ class StackedParamBank:
     **Row placement**: model id (control plane — stable, genealogy) and
     bank row (data plane — layout) are decoupled by the ``row_of`` map.
     A model's first write allocates its row on the shard with the
-    fewest PRESENT rows (ties to the lower shard), so clone populations
-    spread evenly over the mesh instead of clustering on the shards
-    owning the low sequential ids — the per-shard work bucket pads to
-    the densest shard, and every shard burns the padding as real
-    compute, so placement balance is round-throughput balance. Rows are
-    never recycled (ids are never reused and ``m_cap`` bounds models
-    EVER created, matching the paper's M); with one shard the policy
-    degenerates to the identity map, which is why the single-device
-    fused engine can keep indexing the bank by model id directly."""
+    lowest observed WORK — an EWMA of per-shard *pair* load
+    (holders x participation, fed back by the executors via
+    :meth:`note_pair_load`), compared in units of the mean load and
+    falling back to present-row count while loads tie (cold start,
+    balanced traffic — see :meth:`_hotness` for why noise must tie).
+    Per-round work is pairs, not rows: a hot model concentrates pairs
+    on its shard and the per-shard work bucket pads every other shard
+    to match, so placing new rows away from hot shards is
+    round-throughput balance that population-count balance alone
+    cannot see (ROADMAP: work-aware rebalancing). Rows are never
+    recycled (ids are never reused and
+    ``m_cap`` bounds models EVER created, matching the paper's M);
+    with one shard the policy degenerates to the identity map, which
+    is why the single-device fused engine can keep indexing the bank
+    by model id directly.
+
+    ``version`` counts host-side row writes (clones landing in fresh
+    slots): the pipelined executors record it when they speculate a
+    next-round training dispatch and invalidate the speculation when
+    the bank was rewritten underneath it (DESIGN.md §10)."""
+
+    #: EWMA decay for the observed per-shard pair load (one round's
+    #: observation carries half the weight; ~4 rounds of history).
+    LOAD_DECAY = 0.5
 
     def __init__(self, m_cap: int, template: Any, shardings: Any = None,
                  n_shards: int = 1):
@@ -76,9 +92,37 @@ class StackedParamBank:
         self._present: set = set()
         self.row_of: Dict[int, int] = {}
         self._used_rows: set = set()
+        self.load_ewma = np.zeros(max(n_shards, 1))
+        self.version = 0
+        self._retired: list = []
+
+    def note_pair_load(self, per_shard_pairs: Any) -> None:
+        """Fold one round's observed per-shard work-pair counts into the
+        placement EWMA (executors call this once per dispatched round).
+        Fully-decayed residue snaps to zero so long-idle shards tie and
+        the population-count fallback decides again."""
+        self.load_ewma = (self.LOAD_DECAY * self.load_ewma
+                          + (1.0 - self.LOAD_DECAY)
+                          * np.asarray(per_shard_pairs, float))
+        self.load_ewma[self.load_ewma < 1e-6] = 0.0
+
+    def shard_of(self, m: int) -> int:
+        return self.row_of[m] // self.rows_per_shard
+
+    def _hotness(self, s: int) -> int:
+        """Shard load in units of the MEAN load, rounded: balanced
+        traffic (every shard ≈ mean) ties at 1 and falls through to the
+        population count, so participation noise cannot reshuffle
+        placement (reshuffled rows churn the per-shard bucket shapes
+        and retrace the round program); only genuinely hot (≥~1.5x
+        mean) or idle shards separate."""
+        mean = float(self.load_ewma.mean())
+        if mean <= 1e-9:
+            return 0
+        return round(float(self.load_ewma[s]) / mean)
 
     def _alloc_row(self, m: int) -> int:
-        """Least-loaded-shard placement (see class docstring)."""
+        """Work-aware least-loaded-shard placement (class docstring)."""
         rps = self.rows_per_shard
         best = None
         for s in range(self.n_shards):
@@ -88,8 +132,9 @@ class StackedParamBank:
                 continue                       # shard full
             present = sum(1 for mm in self._present
                           if self.row_of[mm] // rps == s)
-            if best is None or (present, used, s) < best[0]:
-                best = ((present, used, s), s)
+            key = (self._hotness(s), present, used, s)
+            if best is None or key < best[0]:
+                best = (key, s)
         if best is None:
             raise IndexError(f"bank is full (m_cap={self.m_cap}): {m}")
         s = best[1]
@@ -114,6 +159,8 @@ class StackedParamBank:
             self.row_of[m] = r
             self._used_rows.add(r)
         self._present.add(m)
+        self.version += 1
+        self._retired.append(self.tree)
         self.tree = jax.tree.map(
             lambda a, v: a.at[r].set(jnp.asarray(v, a.dtype)),
             self.tree, row)
@@ -133,8 +180,21 @@ class StackedParamBank:
         """Adopt ``new_tree`` as the bank (the fused step's output; the
         previous tree was donated into that step and is dead). Row
         presence is unchanged — a fused step only rewrites rows of
-        models that already exist."""
+        models that already exist.
+
+        The old tree is RETIRED, not dropped: CPU PJRT buffer deletion
+        blocks on the buffer's pending usage events, so destructing the
+        donated tree here would synchronize the host with the in-flight
+        step — exactly the stall the pipelined executors exist to hide.
+        The executor calls :meth:`release_retired` after its readback,
+        when every consumer of the old buffers has finished."""
+        self._retired.append(self.tree)
         self.tree = new_tree
+
+    def release_retired(self) -> None:
+        """Drop retired trees (their consumers have completed, so the
+        destructors no longer block)."""
+        self._retired.clear()
 
 
 @dataclass

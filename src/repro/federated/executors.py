@@ -1,0 +1,1131 @@
+"""Device-side round executors: the data-plane half of a federated round.
+
+A :class:`RoundExecutor` turns one host-built :class:`~repro.core.plan.
+RoundPlan` into device work — "dispatch(plan) -> RoundResult" — and owns
+everything layout-specific: bank-row resolution (``row_of``), work-pair
+bucketing, per-shard scheduling, eval-row caches, and the jitted
+programs themselves. The four FedCD engines and the FedAvg baselines
+each implement the same five-call contract (DESIGN.md §10):
+
+    plan_hints()  -> what the executor can reuse bit-identically
+    launch(plan)  -> dispatch the round's device work (non-blocking
+                     for the device-resident engines)
+    speculate(p)  -> optionally pre-dispatch round t+1's TRAINING from
+                     a speculative plan (pipelined executors only)
+    readback()    -> block on the eval matrices, return RoundResult
+    collect(pref) -> the round's preferred-model test/val accuracies
+
+**Pipelined execution** (``pipeline=True`` on the fused and sharded
+executors): training is a pure read of the parameter bank
+(``make_pair_train`` / ``make_sharded_train``), so round t+1's train
+dispatch is enqueued — from the prefetched sample and the
+pre-lifecycle population — while round t's eval matrices are still in
+flight. The in-order device queue then never drains across the host's
+readback + lifecycle + planning gap. At the next ``launch`` the
+speculation is *repaired* (deletions only shrink the pair set: dead
+pairs keep zero aggregation weight, dead rows drop out of the scatter)
+or *invalidated and retrained* (clones wrote bank rows / added pairs —
+detected via the bank ``version`` counter and a pair-subset check).
+Aggregation weights, scatter rows, and eval schedules are never
+speculative: they are resolved from the TRUE plan at launch, which is
+why repair is exact (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedCDConfig
+from repro.core import quantize as qz
+from repro.core.aggregate import multi_weighted_average, weighted_average
+from repro.core.plan import EvalHints, RoundPlan
+from repro.core.registry import ModelRegistry
+from repro.federated.simulation import (bucket_size, make_eval,
+                                        make_fused_apply, make_fused_eval,
+                                        make_fused_finish,
+                                        make_fused_round, make_group_eval,
+                                        make_group_train, make_local_train,
+                                        make_pair_eval, make_pair_train,
+                                        make_sharded_apply,
+                                        make_sharded_eval,
+                                        make_sharded_fedavg_finish,
+                                        make_sharded_fedavg_round,
+                                        make_sharded_fedavg_train,
+                                        make_sharded_finish,
+                                        make_sharded_pair_eval,
+                                        make_sharded_round,
+                                        make_sharded_train, pad_live_rows,
+                                        pad_work_batch, shard_eval_pairs,
+                                        shard_rows, shard_work_batch)
+from repro.launch.mesh import model_axis_size
+from repro.launch.sharding import bank_rows_per_shard
+
+
+@dataclass
+class RoundResult:
+    """What the control plane needs back from one dispatched round."""
+    accs: np.ndarray                     # (N, M_cap) val accuracies
+
+
+@dataclass
+class PipelineStats:
+    """Cross-round speculation accounting (reported by the benches)."""
+    speculated: int = 0                  # train dispatches pre-launched
+    hit: int = 0                         # consumed unchanged
+    repaired: int = 0                    # consumed after deletions
+    invalidated: int = 0                 # stale at launch (clone writes /
+    #                                      pairs outside the batch)
+    discarded: int = 0                   # never consumed (extinction /
+    #                                      no-pair round — degenerate repair)
+    skipped: int = 0                     # not speculated (milestone intent)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"speculated": self.speculated, "hit": self.hit,
+                "repaired": self.repaired,
+                "invalidated": self.invalidated,
+                "discarded": self.discarded, "skipped": self.skipped}
+
+
+@dataclass
+class TrainMeta:
+    """Which (model, device) pairs a dispatched train batch covers, in
+    bucket-column order (the repair contract: aggregation weights are
+    addressed by these columns, so a superset batch aggregates
+    identically once dead pairs get zero weight)."""
+    pair_model: List[int]
+    pair_device: List[int]
+    b_pad: int
+    pair_groups: Optional[List[List[int]]] = None    # sharded only
+    weights: Optional[np.ndarray] = None             # FedAvg sharded only
+
+
+class RoundExecutor:
+    """Shared scaffolding; engines override the dispatch internals."""
+
+    pipeline = False
+    stats: Optional[PipelineStats] = None
+
+    def __init__(self, cfg: FedCDConfig, registry: ModelRegistry,
+                 data: Dict[str, Any]):
+        self.cfg = cfg
+        self.registry = registry
+        self.data = data
+        self.n_devices = data["train"][0].shape[0]
+        self._result: Optional[RoundResult] = None
+
+    # -- contract ---------------------------------------------------------
+    def plan_hints(self) -> Optional[EvalHints]:
+        return None                      # no bit-identical reuse
+
+    def launch(self, plan: RoundPlan) -> None:
+        raise NotImplementedError
+
+    def speculate(self, plan: RoundPlan) -> None:
+        pass                             # synchronous engines: no-op
+
+    def readback(self) -> RoundResult:
+        result, self._result = self._result, None
+        return result
+
+    def on_clones(self, cloned: List[Tuple[int, int]]) -> None:
+        pass
+
+    def collect(self, preferred: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    # -- shared helpers ---------------------------------------------------
+    def _maybe_compress(self, params: Any) -> Any:
+        return qz.roundtrip(params, self.cfg.quantize_bits)
+
+    def _holder_weights(self, plan: RoundPlan, m: int) -> np.ndarray:
+        """Per-device aggregation weight for model ``m``: c_m_i on its
+        work-pair devices, 0 elsewhere — the plan-based form of
+        ``aggregate.participation_weights`` (the pair list IS
+        ``participating & active``, so masking reduces to a gather)."""
+        w = np.zeros(self.n_devices, np.float32)
+        d = np.asarray(plan.pair_device,
+                       np.int64)[np.asarray(plan.pair_model) == m]
+        w[d] = plan.scores[d, m]
+        return w
+
+
+class LegacyExecutor(RoundExecutor):
+    """The original per-model Python loop: every model with work trains
+    ALL N devices (non-holders zero-weighted away), one dispatch per
+    model for training and for each eval. O(models x devices) work;
+    kept as the equivalence oracle."""
+
+    def __init__(self, cfg, registry, data, loss_fn, acc_fn,
+                 batch_size: int, use_agg_kernel: bool = False):
+        super().__init__(cfg, registry, data)
+        self.local_train = make_local_train(loss_fn, cfg.lr, batch_size)
+        self.evaluate = make_eval(acc_fn)
+        self.use_agg_kernel = use_agg_kernel
+
+    def launch(self, plan: RoundPlan) -> None:
+        xs, ys = self.data["train"]
+        for m in plan.agg_models:
+            trained = self.local_train(self.registry.params[m], xs, ys,
+                                       plan.perms)
+            w = self._holder_weights(plan, m)
+            new_params = weighted_average(trained, w,
+                                          use_kernel=self.use_agg_kernel)
+            self.registry.params[m] = self._maybe_compress(
+                jax.tree.map(np.asarray, new_params))
+
+        accs = np.zeros((self.n_devices, self.cfg.max_models))
+        vx, vy = self.data["val"]
+        for m in plan.live:
+            accs[:, m] = np.asarray(self.evaluate(self.registry.params[m],
+                                                  vx, vy))
+        self._result = RoundResult(accs)
+
+    def collect(self, preferred: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        tx, ty = self.data["test"]
+        vx, vy = self.data["val"]
+        test_acc = np.zeros(self.n_devices)
+        val_acc = np.zeros(self.n_devices)
+        for m in np.unique(preferred):
+            sel = preferred == m
+            if m not in self.registry.params:
+                continue
+            test_acc[sel] = np.asarray(self.evaluate(
+                self.registry.params[m], tx, ty))[sel]
+            val_acc[sel] = np.asarray(self.evaluate(
+                self.registry.params[m], vx, vy))[sel]
+        return test_acc, val_acc
+
+
+class BatchedExecutor(RoundExecutor):
+    """PR 1's engine: one jitted vmapped train step over the gathered
+    pairs + fused multi-model aggregation, but host hops around
+    aggregation/quantization and dense (live, N) eval matrices
+    re-dispatched in collect. Kept as the fused engine's benchmark
+    baseline."""
+
+    def __init__(self, cfg, registry, data, loss_fn, acc_fn,
+                 batch_size: int, use_agg_kernel: bool = False):
+        super().__init__(cfg, registry, data)
+        self.group_train = make_group_train(loss_fn, cfg.lr, batch_size)
+        self.group_eval = make_group_eval(acc_fn)
+        self.use_agg_kernel = use_agg_kernel
+
+    def _stack_params(self, model_ids: List[int], pad_to: int) -> Any:
+        trees = [self.registry.params[m] for m in model_ids]
+        trees += [trees[0]] * (pad_to - len(trees))
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+    def _eval_matrix(self, x: np.ndarray, y: np.ndarray
+                     ) -> Tuple[np.ndarray, List[int]]:
+        live = self.registry.live_ids()
+        if not live:
+            return np.zeros((0, self.n_devices)), live
+        stacked = self._stack_params(live, bucket_size(len(live),
+                                                       minimum=1))
+        return np.asarray(self.group_eval(stacked, x, y)), live
+
+    def launch(self, plan: RoundPlan) -> None:
+        xs, ys = self.data["train"]
+        agg_models = plan.agg_models
+        if agg_models:
+            b = len(plan.pair_model)
+            m_pad = bucket_size(len(agg_models), minimum=1)
+            slot = {m: j for j, m in enumerate(agg_models)}
+            m_idx, d_idx, pperms = pad_work_batch(
+                [slot[m] for m in plan.pair_model], plan.pair_device,
+                [plan.perms[d] for d in plan.pair_device])
+            stacked = self._stack_params(agg_models, m_pad)
+            trained = self.group_train(stacked, m_idx, xs, ys, d_idx,
+                                       pperms)
+            w = np.zeros((m_pad, len(m_idx)), np.float32)
+            w[m_idx[:b], np.arange(b)] = plan.scores[plan.pair_device,
+                                                     plan.pair_model]
+            agg = jax.tree.map(np.asarray, multi_weighted_average(
+                trained, w, use_kernel=self.use_agg_kernel))
+            for j, m in enumerate(agg_models):
+                self.registry.params[m] = self._maybe_compress(
+                    jax.tree.map(lambda a: a[j], agg))
+
+        accs = np.zeros((self.n_devices, self.cfg.max_models))
+        vx, vy = self.data["val"]
+        mat, live = self._eval_matrix(vx, vy)
+        for j, m in enumerate(live):
+            accs[:, m] = mat[j]
+        self._result = RoundResult(accs)
+
+    def collect(self, preferred: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        tx, ty = self.data["test"]
+        vx, vy = self.data["val"]
+        test_acc = np.zeros(self.n_devices)
+        val_acc = np.zeros(self.n_devices)
+        test_mat, live = self._eval_matrix(tx, ty)
+        val_mat, _ = self._eval_matrix(vx, vy)
+        slot = {m: j for j, m in enumerate(live)}
+        for i in range(self.n_devices):
+            j = slot.get(int(preferred[i]))
+            if j is not None:
+                test_acc[i] = test_mat[j, i]
+                val_acc[i] = val_mat[j, i]
+        return test_acc, val_acc
+
+
+class FusedExecutor(RoundExecutor):
+    """The device-resident data plane (DESIGN.md §2): params live in the
+    registry's stacked bank and the synchronous dense round is ONE
+    jitted donated dispatch. Owns the per-model eval-row caches and the
+    test-row prediction. ``pipeline=True`` switches to the split-phase
+    dispatch with cross-round speculation (module docstring)."""
+
+    def __init__(self, cfg, registry, data, loss_fn, acc_fn,
+                 use_agg_kernel: bool = False, pipeline: bool = False):
+        super().__init__(cfg, registry, data)
+        self.pipeline = pipeline
+        self.use_agg_kernel = use_agg_kernel
+        self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
+                     for k, (x, y) in data.items()}
+        self._build_programs(loss_fn, acc_fn)
+        # eval-row caches: a model's params change ONLY when it trains
+        # or is born, so its (N,) accuracy rows are reused bit-
+        # identically until then (DESIGN.md §2)
+        self._val_cache: Dict[int, np.ndarray] = {}
+        self._test_cache: Dict[int, np.ndarray] = {}
+        self._pred_rows: List[int] = [0]
+        self._needs_refresh = False
+        self._pending: Optional[Tuple[RoundPlan, Dict[str, Callable]]] = \
+            None
+        self._spec: Optional[Tuple[RoundPlan, Any, TrainMeta, int]] = None
+        self._spec_graveyard: List[Any] = []
+        self._last_plan: Optional[RoundPlan] = None
+        self.stats = PipelineStats() if pipeline else None
+        # pipelined dispatch pads row schedules to a coarser floor so
+        # the finish program's (A, L, R) shape key stops changing every
+        # round — the split exists to decouple shape keys, and a stable
+        # key turns per-round retraces into cache hits (DESIGN.md §10)
+        self._row_floor = 4 if pipeline else 1
+
+    def _build_programs(self, loss_fn, acc_fn) -> None:
+        cfg = self.cfg
+        self._round = make_fused_round(loss_fn, acc_fn, cfg.lr,
+                                       cfg.quantize_bits,
+                                       self.use_agg_kernel)
+        self._eval = make_fused_eval(acc_fn)
+        self._pair_eval = make_pair_eval(acc_fn)
+        self._train = make_pair_train(loss_fn, cfg.lr)
+        self._apply = make_fused_apply(cfg.quantize_bits,
+                                       self.use_agg_kernel)
+        self._finish = make_fused_finish(acc_fn, cfg.quantize_bits,
+                                         self.use_agg_kernel)
+
+    # -- planning hints + lifecycle hooks ---------------------------------
+    def plan_hints(self) -> EvalHints:
+        return EvalHints(set(self._val_cache), set(self._test_cache),
+                         list(self._pred_rows))
+
+    def on_clones(self, cloned: List[Tuple[int, int]]) -> None:
+        if not cloned:
+            return
+        if self.cfg.quantize_bits:
+            # clones are quantize roundtrips of their parents — cached
+            # rows don't transfer; re-eval the population in collect
+            self._needs_refresh = True
+        else:
+            # a clone's params are bit-identical to its parent's
+            for parent, clone in cloned:
+                if parent in self._val_cache:
+                    self._val_cache[clone] = self._val_cache[parent]
+                if parent in self._test_cache:
+                    self._test_cache[clone] = self._test_cache[parent]
+
+    # -- weight / batch builders ------------------------------------------
+    def _apply_weights(self, meta: TrainMeta, plan: RoundPlan
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """(A_pad, B) weight matrix + padded agg row indices for the
+        aggregate+scatter phase, addressed by META's pair columns (on a
+        repaired speculation they are a superset of the plan's pairs —
+        dead pairs score c=0 and models outside the plan's agg set get
+        no weight row, so the superset aggregates identically)."""
+        agg_rows = pad_live_rows(plan.agg_models, self._row_floor)
+        slot = {m: j for j, m in enumerate(plan.agg_models)}
+        w = np.zeros((len(agg_rows), meta.b_pad), np.float32)
+        for k, (m, d) in enumerate(zip(meta.pair_model,
+                                       meta.pair_device)):
+            j = slot.get(m)
+            if j is not None:
+                w[j, k] = plan.scores[d, m]
+        w[len(plan.agg_models):] = w[0]
+        return w, agg_rows
+
+    def _batch_args(self, pair_model: List[int],
+                    pair_device: List[int], perms: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               TrainMeta]:
+        """ONE bucketing of the work pairs shared by the monolithic
+        round and the split train phase, so the sync and pipelined
+        programs can never see different batch schedules."""
+        m_idx, d_idx, pperms = pad_work_batch(
+            pair_model, pair_device, [perms[d] for d in pair_device])
+        meta = TrainMeta(list(pair_model), list(pair_device), len(m_idx))
+        return m_idx, d_idx, pperms, meta
+
+    def _dispatch_train(self, tree: Any, pair_model: List[int],
+                        pair_device: List[int], perms: np.ndarray
+                        ) -> Tuple[Any, TrainMeta]:
+        m_idx, d_idx, pperms, meta = self._batch_args(pair_model,
+                                                      pair_device, perms)
+        trained = self._train(tree, m_idx, *self._dev["train"], d_idx,
+                              pperms)
+        return trained, meta
+
+    def _dispatch_apply(self, trained: Any, meta: TrainMeta,
+                        plan: RoundPlan) -> None:
+        bank = self.registry.params
+        w, agg_rows = self._apply_weights(meta, plan)
+        bank.swap(self._apply(bank.tree, trained, w, agg_rows))
+
+    # -- eval dispatch / readers ------------------------------------------
+    def _val_reader_dense(self, fut: Any, models: List[int]) -> Callable:
+        def read() -> Dict[int, np.ndarray]:
+            mat = np.asarray(fut)[:len(models)]
+            return {m: mat[j] for j, m in enumerate(models)}
+        return read
+
+    def _val_reader_sparse(self, fut: Any, plan: RoundPlan,
+                           positions: List[int]) -> Callable:
+        """Merge sparse per-pair accuracies into full cached rows:
+        pair k's value sits at ``positions[k]`` of the eval vector
+        (identity for the single-device layout, shard-bucket slots for
+        the sharded one); untouched entries keep their cached value and
+        never-scored rows start at zero (only active entries are ever
+        read — DESIGN.md §10)."""
+        def read() -> Dict[int, np.ndarray]:
+            vec = np.asarray(fut)
+            rows: Dict[int, np.ndarray] = {}
+            for k, (m, d) in enumerate(zip(plan.val_pair_model,
+                                           plan.val_pair_device)):
+                if m not in rows:
+                    rows[m] = self._val_cache.get(
+                        m, np.zeros(self.n_devices)).copy()
+                rows[m][d] = vec[positions[k]]
+            return rows
+        return read
+
+    def _dispatch_sparse_val(self, plan: RoundPlan) -> Callable:
+        p = len(plan.val_pair_model)
+        p_pad = bucket_size(p)
+        m_idx = np.zeros(p_pad, np.int32)
+        m_idx[:p] = plan.val_pair_model
+        d_idx = np.zeros(p_pad, np.int32)
+        d_idx[:p] = plan.val_pair_device
+        fut = self._pair_eval(self.registry.params.tree, m_idx, d_idx,
+                              *self._dev["val"])
+        return self._val_reader_sparse(fut, plan, list(range(p)))
+
+    def _dispatch_dense(self, models: List[int], split: str) -> Callable:
+        fut = self._eval(self.registry.params.tree,
+                         pad_live_rows(models, self._row_floor),
+                         *self._dev[split])
+        return self._val_reader_dense(fut, models)
+
+    def _dispatch_evals(self, plan: RoundPlan) -> Dict[str, Callable]:
+        pend: Dict[str, Callable] = {}
+        if plan.val_stale:
+            pend["val"] = (self._dispatch_sparse_val(plan)
+                           if plan.sparse_val
+                           else self._dispatch_dense(plan.val_stale,
+                                                     "val"))
+        if plan.test_stale:
+            pend["test"] = self._dispatch_dense(plan.test_stale, "test")
+        return pend
+
+    # -- launch -----------------------------------------------------------
+    def launch(self, plan: RoundPlan) -> None:
+        self._last_plan = plan
+        self._note_load(plan)
+        if self.pipeline:
+            self._launch_split(plan)
+        else:
+            self._launch_sync(plan)
+
+    def _note_load(self, plan: RoundPlan) -> None:
+        pass                             # sharded executor observes load
+
+    def _launch_sync(self, plan: RoundPlan) -> None:
+        bank = self.registry.params
+        if plan.pair_model and not plan.sparse_val:
+            # the whole round as ONE donated dispatch (DESIGN.md §2)
+            m_idx, d_idx, pperms, meta = self._batch_args(
+                plan.pair_model, plan.pair_device, plan.perms)
+            w, agg_rows = self._apply_weights(meta, plan)
+            new_stacked, val_mat, test_mat = self._round(
+                bank.tree, m_idx, d_idx, pperms, w, agg_rows,
+                pad_live_rows(plan.val_stale or plan.live[:1]),
+                pad_live_rows(plan.test_stale or plan.live[:1]),
+                *self._dev["train"], *self._dev["val"],
+                *self._dev["test"])
+            bank.swap(new_stacked)
+            pend: Dict[str, Callable] = {}
+            if plan.val_stale:
+                pend["val"] = self._val_reader_dense(val_mat,
+                                                     plan.val_stale)
+            if plan.test_stale:
+                pend["test"] = self._val_reader_dense(test_mat,
+                                                      plan.test_stale)
+        else:
+            # sparse-val rounds use the split phases (train+apply, then
+            # holder-only val scoring); no-pair rounds are eval-only
+            if plan.pair_model:
+                trained, meta = self._dispatch_train(
+                    bank.tree, plan.pair_model, plan.pair_device,
+                    plan.perms)
+                self._dispatch_apply(trained, meta, plan)
+            pend = self._dispatch_evals(plan)
+        self._pending = (plan, pend)
+
+    def _finish_round(self, trained: Any, meta: TrainMeta,
+                      plan: RoundPlan) -> Dict[str, Callable]:
+        """Aggregate + scatter + stale-row eval as ONE dispatch (the
+        ``make_*_finish`` program) — everything the monolithic round
+        does after training, with the same program fusion."""
+        bank = self.registry.params
+        w, agg_rows = self._apply_weights(meta, plan)
+        new_stacked, val_mat, test_mat = self._finish(
+            bank.tree, trained, w, agg_rows,
+            pad_live_rows(plan.val_stale or plan.live[:1],
+                          self._row_floor),
+            pad_live_rows(plan.test_stale or plan.live[:1],
+                          self._row_floor),
+            *self._dev["val"], *self._dev["test"])
+        bank.swap(new_stacked)
+        pend: Dict[str, Callable] = {}
+        if plan.val_stale:
+            pend["val"] = self._val_reader_dense(val_mat, plan.val_stale)
+        if plan.test_stale:
+            pend["test"] = self._val_reader_dense(test_mat,
+                                                  plan.test_stale)
+        return pend
+
+    def _launch_split(self, plan: RoundPlan) -> None:
+        bank = self.registry.params
+        if plan.pair_model:
+            spec = self._take_speculation(plan)
+            if spec is None:
+                trained, meta = self._dispatch_train(
+                    bank.tree, plan.pair_model, plan.pair_device,
+                    plan.perms)
+            else:
+                trained, meta = spec
+            if plan.sparse_val:
+                self._dispatch_apply(trained, meta, plan)
+                pend = self._dispatch_evals(plan)
+            else:
+                pend = self._finish_round(trained, meta, plan)
+        else:
+            self._drop_speculation()
+            pend = self._dispatch_evals(plan)
+        self._pending = (plan, pend)
+
+    # -- speculation ------------------------------------------------------
+    def _discard_spec(self, invalidated: bool) -> None:
+        """Abandon the pending speculation. Its in-flight ``trained``
+        future is parked until the next readback — destructing it here
+        would block on its pending execution (see StackedParamBank.
+        swap). ``invalidated`` separates launch-time staleness (clones)
+        from never-consumed batches (extinction / no-pair rounds, the
+        degenerate repair) in the stats."""
+        self._spec_graveyard.append(self._spec[1])
+        self._spec = None
+        if invalidated:
+            self.stats.invalidated += 1
+        else:
+            self.stats.discarded += 1
+
+    def _drop_speculation(self) -> None:
+        if self._spec is not None:
+            self._discard_spec(invalidated=False)
+
+    def _take_speculation(self, plan: RoundPlan
+                          ) -> Optional[Tuple[Any, TrainMeta]]:
+        """Consume the pending speculative train batch if it still
+        covers the true plan: deletions only shrink the pair set, so a
+        superset batch is repairable; clones add pairs and rewrite bank
+        rows, so version/pair mismatches retrain from scratch."""
+        if self._spec is None:
+            return None
+        spec_plan, trained, meta, version = self._spec
+        if (spec_plan.round != plan.round
+                or self.registry.params.version != version):
+            self._discard_spec(invalidated=True)
+            return None
+        covered = set(zip(meta.pair_model, meta.pair_device))
+        if any(p not in covered for p in plan.pairs()):
+            self._discard_spec(invalidated=True)
+            return None
+        self._spec = None
+        if len(plan.pair_model) == len(meta.pair_model):
+            self.stats.hit += 1
+        else:
+            self.stats.repaired += 1
+        return trained, meta
+
+    def speculate(self, plan: RoundPlan) -> None:
+        if not self.pipeline:
+            return
+        self._drop_speculation()
+        if self._last_plan is not None and self._last_plan.clone_milestone:
+            # pending lifecycle intent: the milestone's clones WILL
+            # rewrite bank rows and add pairs — don't burn a dispatch
+            self.stats.skipped += 1
+            return
+        if not plan.pair_model:
+            return
+        trained, meta = self._dispatch_train(
+            self.registry.params.tree, plan.pair_model,
+            plan.pair_device, plan.perms)
+        self._spec = (plan, trained, meta, self.registry.params.version)
+        self.stats.speculated += 1
+
+    # -- readback + collect -----------------------------------------------
+    def readback(self) -> RoundResult:
+        plan, pend = self._pending
+        self._pending = None
+        if "val" in pend:
+            self._val_cache.update(pend["val"]())
+        if "test" in pend:
+            self._test_cache.update(pend["test"]())
+        # a trained model's old test row is stale: drop it unless it
+        # was just re-evaluated
+        for m in plan.agg_models:
+            if m not in plan.test_stale:
+                self._test_cache.pop(m, None)
+        accs = np.zeros((self.n_devices, self.cfg.max_models))
+        for m in plan.live:
+            accs[:, m] = self._val_cache[m]
+        # the step's consumers have completed: retired bank trees and
+        # abandoned speculative batches can now destruct without
+        # blocking the host (registry docstring)
+        self.registry.params.release_retired()
+        self._spec_graveyard.clear()
+        return RoundResult(accs)
+
+    def eval_rows(self, rows: List[int], split: str) -> np.ndarray:
+        """(len(rows), N) accuracy of the given models on one split —
+        the standalone eval dispatch for collect's misprediction
+        fallback and the quantized-cloning refresh."""
+        mat = np.asarray(self._eval(self.registry.params.tree,
+                                    pad_live_rows(rows, self._row_floor),
+                                    *self._dev[split]))
+        return mat[:len(rows)]
+
+    def _refresh_caches(self) -> None:
+        """Quantized cloning made every clone's params differ from its
+        parent's: re-score the whole live population once."""
+        live = self.registry.live_ids()
+        if not live:
+            self._val_cache, self._test_cache = {}, {}
+            return
+        val = self.eval_rows(live, "val")
+        test = self.eval_rows(live, "test")
+        self._val_cache = {m: val[j] for j, m in enumerate(live)}
+        self._test_cache = {m: test[j] for j, m in enumerate(live)}
+
+    def collect(self, preferred: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        if self._needs_refresh:
+            self._refresh_caches()
+            self._needs_refresh = False
+        entries = self.registry.entries
+        wanted = [int(m) for m in preferred]
+        usable = [m if (m in entries and entries[m].alive
+                        and m in self._val_cache) else None
+                  for m in wanted]
+        missing = sorted({m for m in usable
+                          if m is not None and m not in self._test_cache})
+        if missing:
+            # test-row prediction missed (a preference shifted to a
+            # model that didn't train): one small dense eval
+            extra = self.eval_rows(missing, "test")
+            for j, m in enumerate(missing):
+                self._test_cache[m] = extra[j]
+        test_acc = np.zeros(self.n_devices)
+        val_acc = np.zeros(self.n_devices)
+        for i, m in enumerate(usable):
+            if m is not None:
+                test_acc[i] = self._test_cache[m][i]
+                val_acc[i] = self._val_cache[m][i]
+        # predict next round's test rows: what devices prefer now
+        self._pred_rows = sorted({m for m in usable if m is not None})
+        return test_acc, val_acc
+
+
+class ShardedExecutor(FusedExecutor):
+    """The fused data plane over a 1-D ``model``-axis mesh (DESIGN.md
+    §9): bank rows and work pairs bucket per owning shard, each mesh
+    slice trains/aggregates/scatters only its resident rows, and only
+    the small row-sharded eval matrices cross back to the host. Feeds
+    the observed per-shard pair load into the bank's work-aware row
+    placement every round."""
+
+    def __init__(self, cfg, registry, data, loss_fn, acc_fn, mesh,
+                 use_agg_kernel: bool = False, pipeline: bool = False):
+        self.mesh = mesh
+        self._n_shards = model_axis_size(mesh)
+        self._rows_per_shard = bank_rows_per_shard(cfg.max_models, mesh)
+        super().__init__(cfg, registry, data, loss_fn, acc_fn,
+                         use_agg_kernel, pipeline)
+
+    def _build_programs(self, loss_fn, acc_fn) -> None:
+        cfg = self.cfg
+        self._round = make_sharded_round(loss_fn, acc_fn, cfg.lr,
+                                         self.mesh, cfg.quantize_bits,
+                                         self.use_agg_kernel)
+        self._eval = make_sharded_eval(acc_fn, self.mesh)
+        self._pair_eval = make_sharded_pair_eval(acc_fn, self.mesh)
+        self._train = make_sharded_train(loss_fn, cfg.lr, self.mesh)
+        self._apply = make_sharded_apply(self.mesh, cfg.quantize_bits,
+                                         self.use_agg_kernel)
+        self._finish = make_sharded_finish(acc_fn, self.mesh,
+                                           cfg.quantize_bits,
+                                           self.use_agg_kernel)
+
+    def _rows(self, models: List[int]) -> List[int]:
+        row_of = self.registry.params.row_of
+        return [row_of[m] for m in models]
+
+    def _note_load(self, plan: RoundPlan) -> None:
+        counts = np.zeros(self._n_shards)
+        for r in self._rows(plan.pair_model):
+            counts[r // self._rows_per_shard] += 1
+        self.registry.params.note_pair_load(counts)
+
+    def _shard_row_slots(self, bank_rows: List[int]
+                         ) -> Tuple[np.ndarray, Dict[int, int]]:
+        idx, groups, width = shard_rows(bank_rows, self._rows_per_shard,
+                                        self._n_shards,
+                                        minimum=self._row_floor)
+        pos = {r: s * width + j
+               for s, g in enumerate(groups) for j, r in enumerate(g)}
+        return idx, pos
+
+    def _batch_args(self, pair_model: List[int],
+                    pair_device: List[int], perms: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               TrainMeta]:
+        # per-shard bucket floor scales down with the shard count: the
+        # global work splits S ways (DESIGN.md §9)
+        m_idx, d_idx, pperms, pair_groups, b_pad = shard_work_batch(
+            self._rows(pair_model), pair_device,
+            [perms[d] for d in pair_device], self._rows_per_shard,
+            self._n_shards, minimum=max(8 // self._n_shards, 2))
+        meta = TrainMeta(list(pair_model), list(pair_device), b_pad,
+                         pair_groups)
+        return m_idx, d_idx, pperms, meta
+
+    def _dispatch_train(self, tree: Any, pair_model: List[int],
+                        pair_device: List[int], perms: np.ndarray
+                        ) -> Tuple[Any, TrainMeta]:
+        m_idx, d_idx, pperms, meta = self._batch_args(pair_model,
+                                                      pair_device, perms)
+        trained = self._train(tree, m_idx, d_idx, pperms,
+                              *self._dev["train"])
+        return trained, meta
+
+    def _shard_agg_plan(self, agg_rows: List[int], meta: TrainMeta,
+                        c: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-shard aggregation schedule (DESIGN.md §9): LOCAL agg row
+        indices (S*A,), the (S*A, B) weight blocks, and the keep mask
+        guarding the scatter. Pairs are addressed by META's bucket
+        columns; a repaired speculation's dead pairs simply find no
+        slot (their model left the agg set) or score c=0."""
+        S = self._n_shards
+        row_of = self.registry.params.row_of
+        agg_idx, agg_groups, a_pad = shard_rows(
+            agg_rows, self._rows_per_shard, S, minimum=self._row_floor)
+        keep = np.zeros(S * a_pad, bool)
+        w = np.zeros((S * a_pad, meta.b_pad), np.float32)
+        for s, group in enumerate(agg_groups):
+            if not group:
+                continue
+            base = s * a_pad
+            keep[base:base + a_pad] = True
+            slot = {r: j for j, r in enumerate(group)}
+            for col, k in enumerate(meta.pair_groups[s]):
+                m, d = meta.pair_model[k], meta.pair_device[k]
+                j = slot.get(row_of[m])
+                if j is not None:
+                    w[base + j, col] = c[d, m]
+            w[base + len(group):base + a_pad] = w[base]
+        return agg_idx, keep, w
+
+    def _dispatch_apply(self, trained: Any, meta: TrainMeta,
+                        plan: RoundPlan) -> None:
+        bank = self.registry.params
+        agg_idx, keep, w = self._shard_agg_plan(
+            self._rows(plan.agg_models), meta, plan.scores)
+        bank.swap(self._apply(bank.tree, trained, w, agg_idx, keep))
+
+    def _finish_round(self, trained: Any, meta: TrainMeta,
+                      plan: RoundPlan) -> Dict[str, Callable]:
+        bank = self.registry.params
+        agg_idx, keep, w = self._shard_agg_plan(
+            self._rows(plan.agg_models), meta, plan.scores)
+        vidx, vpos = self._shard_row_slots(
+            self._rows(plan.val_stale or plan.live[:1]))
+        tidx, tpos = self._shard_row_slots(
+            self._rows(plan.test_stale or plan.live[:1]))
+        new_stacked, val_mat, test_mat = self._finish(
+            bank.tree, trained, w, agg_idx, keep, vidx, tidx,
+            *self._dev["val"], *self._dev["test"])
+        bank.swap(new_stacked)
+        pend: Dict[str, Callable] = {}
+        if plan.val_stale:
+            pend["val"] = self._sharded_reader(val_mat, plan.val_stale,
+                                               vpos)
+        if plan.test_stale:
+            pend["test"] = self._sharded_reader(test_mat,
+                                                plan.test_stale, tpos)
+        return pend
+
+    def _sharded_reader(self, fut: Any, models: List[int],
+                        pos: Dict[int, int]) -> Callable:
+        row_of = self.registry.params.row_of
+
+        def read() -> Dict[int, np.ndarray]:
+            mat = np.asarray(fut)         # the eval all-gather boundary
+            return {m: mat[pos[row_of[m]]] for m in models}
+        return read
+
+    def _dispatch_dense(self, models: List[int], split: str) -> Callable:
+        idx, pos = self._shard_row_slots(self._rows(models))
+        fut = self._eval(self.registry.params.tree, idx,
+                         *self._dev[split])
+        return self._sharded_reader(fut, models, pos)
+
+    def _dispatch_sparse_val(self, plan: RoundPlan) -> Callable:
+        m_idx, d_idx, groups, width = shard_eval_pairs(
+            self._rows(plan.val_pair_model), plan.val_pair_device,
+            self._rows_per_shard, self._n_shards,
+            minimum=max(8 // self._n_shards, 2))
+        fut = self._pair_eval(self.registry.params.tree, m_idx, d_idx,
+                              *self._dev["val"])
+        positions = [0] * len(plan.val_pair_model)
+        for s, g in enumerate(groups):
+            for j, k in enumerate(g):
+                positions[k] = s * width + j
+        return self._val_reader_sparse(fut, plan, positions)
+
+    def _launch_sync(self, plan: RoundPlan) -> None:
+        bank = self.registry.params
+        if plan.pair_model and not plan.sparse_val:
+            m_idx, d_idx, pperms, meta = self._batch_args(
+                plan.pair_model, plan.pair_device, plan.perms)
+            agg_idx, keep, w = self._shard_agg_plan(
+                self._rows(plan.agg_models), meta, plan.scores)
+            vidx, vpos = self._shard_row_slots(
+                self._rows(plan.val_stale or plan.live[:1]))
+            tidx, tpos = self._shard_row_slots(
+                self._rows(plan.test_stale or plan.live[:1]))
+            new_stacked, val_mat, test_mat = self._round(
+                bank.tree, m_idx, d_idx, pperms, w, agg_idx, keep,
+                vidx, tidx, *self._dev["train"], *self._dev["val"],
+                *self._dev["test"])
+            bank.swap(new_stacked)
+            pend: Dict[str, Callable] = {}
+            if plan.val_stale:
+                pend["val"] = self._sharded_reader(val_mat,
+                                                   plan.val_stale, vpos)
+            if plan.test_stale:
+                pend["test"] = self._sharded_reader(test_mat,
+                                                    plan.test_stale,
+                                                    tpos)
+        else:
+            if plan.pair_model:
+                trained, meta = self._dispatch_train(
+                    bank.tree, plan.pair_model, plan.pair_device,
+                    plan.perms)
+                self._dispatch_apply(trained, meta, plan)
+            pend = self._dispatch_evals(plan)
+        self._pending = (plan, pend)
+
+    def eval_rows(self, rows: List[int], split: str) -> np.ndarray:
+        row_of = self.registry.params.row_of
+        idx, pos = self._shard_row_slots(self._rows(rows))
+        mat = np.asarray(self._eval(self.registry.params.tree, idx,
+                                    *self._dev[split]))
+        return mat[[pos[row_of[m]] for m in rows]]
+
+
+# -- FedAvg executors -------------------------------------------------------
+
+@dataclass
+class FedAvgResult:
+    val_acc: np.ndarray                  # (N,)
+    test_acc: np.ndarray                 # (N,)
+
+
+class FedAvgExecutorBase:
+    """FedAvg's round has no control-plane feedback at all (one global
+    model, uniform weights), so its executors share the FedCD contract
+    but speculation is exact: the next round's train batch IS the next
+    plan, never repaired or invalidated."""
+
+    pipeline = False
+    stats: Optional[PipelineStats] = None
+
+    def __init__(self, cfg, data):
+        self.cfg = cfg
+        self.data = data
+        self.n_devices = data["train"][0].shape[0]
+        self._result: Optional[FedAvgResult] = None
+
+    def get_params(self) -> Any:
+        raise NotImplementedError
+
+    def set_params(self, value: Any) -> None:
+        raise NotImplementedError
+
+    def launch(self, plan: RoundPlan) -> None:
+        raise NotImplementedError
+
+    def speculate(self, plan: RoundPlan) -> None:
+        pass
+
+    def readback(self) -> FedAvgResult:
+        result, self._result = self._result, None
+        return result
+
+
+class FedAvgHostExecutor(FedAvgExecutorBase):
+    """The legacy / batched FedAvg paths: host-resident global model."""
+
+    def __init__(self, cfg, data, init_params, loss_fn, acc_fn,
+                 batch_size: int, batched: bool):
+        super().__init__(cfg, data)
+        self.params = init_params
+        self.batched = batched
+        if batched:
+            self.group_train = make_group_train(loss_fn, cfg.lr,
+                                                batch_size)
+        else:
+            self.local_train = make_local_train(loss_fn, cfg.lr,
+                                                batch_size)
+        self.evaluate = make_eval(acc_fn)
+
+    def get_params(self) -> Any:
+        return self.params
+
+    def set_params(self, value: Any) -> None:
+        self.params = value
+
+    def launch(self, plan: RoundPlan) -> None:
+        xs, ys = self.data["train"]
+        if self.batched:
+            d_ids = plan.pair_device
+            b = len(d_ids)
+            m_idx, d_idx, pp = pad_work_batch(
+                [0] * b, list(d_ids), [plan.perms[d] for d in d_ids])
+            stacked = jax.tree.map(lambda a: jnp.asarray(a)[None],
+                                   self.params)
+            trained = self.group_train(stacked, m_idx, xs, ys, d_idx, pp)
+            w = np.zeros((1, len(m_idx)), np.float32)
+            w[0, :b] = 1.0
+            agg = multi_weighted_average(trained, w)
+            self.params = jax.tree.map(lambda a: np.asarray(a[0]), agg)
+        else:
+            trained = self.local_train(self.params, xs, ys, plan.perms)
+            w = plan.participating.astype(np.float32)
+            self.params = jax.tree.map(np.asarray,
+                                       weighted_average(trained, w))
+        tx, ty = self.data["test"]
+        vx, vy = self.data["val"]
+        self._result = FedAvgResult(
+            val_acc=np.asarray(self.evaluate(self.params, vx, vy)),
+            test_acc=np.asarray(self.evaluate(self.params, tx, ty)))
+
+
+class FedAvgFusedExecutor(FedAvgExecutorBase):
+    """Device-resident FedAvg: the global model is row 0 of a (1, ...)
+    bank and the synchronous round is one donated dispatch
+    (``make_fused_round`` with one-row buckets). ``pipeline=True``
+    splits train / apply / eval so the next round's training is
+    enqueued before this round's eval matrices are read back."""
+
+    def __init__(self, cfg, data, init_params, loss_fn, acc_fn,
+                 pipeline: bool = False):
+        super().__init__(cfg, data)
+        self.pipeline = pipeline
+        self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
+                     for k, (x, y) in data.items()}
+        self._stacked = jax.tree.map(
+            lambda a: jnp.asarray(a)[None], init_params)
+        self._build_programs(loss_fn, acc_fn)
+        self._pending: Optional[Tuple[Any, Any]] = None
+        self._spec: Optional[Tuple[int, Any, TrainMeta]] = None
+        self._retired: List[Any] = []     # see StackedParamBank.swap
+        self.stats = PipelineStats() if pipeline else None
+
+    def _swap(self, new_stacked: Any) -> None:
+        self._retired.append(self._stacked)
+        self._stacked = new_stacked
+
+    def _build_programs(self, loss_fn, acc_fn) -> None:
+        cfg = self.cfg
+        self._round = make_fused_round(loss_fn, acc_fn, cfg.lr)
+        self._train = make_pair_train(loss_fn, cfg.lr)
+        self._finish = make_fused_finish(acc_fn)
+
+    def get_params(self) -> Any:
+        return jax.tree.map(lambda a: a[0], self._stacked)
+
+    def set_params(self, value: Any) -> None:
+        self._retired.append(self._stacked)
+        self._stacked = jax.tree.map(lambda a: jnp.asarray(a)[None],
+                                     value)
+        self._park_spec()                # the bank was rewritten
+
+    def _park_spec(self) -> None:
+        """Drop a pending speculation without destructing its
+        in-flight buffers (see StackedParamBank.swap)."""
+        if self._spec is not None:
+            self._retired.append(self._spec[1])
+            self._spec = None
+
+    # -- split-phase pieces (overridden by the sharded variant) -----------
+    def _dispatch_train(self, plan: RoundPlan) -> Tuple[Any, TrainMeta]:
+        d_ids = plan.pair_device
+        m_idx, d_idx, pp = pad_work_batch(
+            [0] * len(d_ids), list(d_ids),
+            [plan.perms[d] for d in d_ids])
+        trained = self._train(self._stacked, m_idx, *self._dev["train"],
+                              d_idx, pp)
+        return trained, TrainMeta([0] * len(d_ids), list(d_ids),
+                                  len(m_idx))
+
+    def _dispatch_finish(self, trained: Any, meta: TrainMeta
+                         ) -> Tuple[Any, Any]:
+        w = np.zeros((1, meta.b_pad), np.float32)
+        w[0, :len(meta.pair_device)] = 1.0
+        new_stacked, val_mat, test_mat = self._finish(
+            self._stacked, trained, w, np.zeros(1, np.int32),
+            np.zeros(1, np.int32), np.zeros(1, np.int32),
+            *self._dev["val"], *self._dev["test"])
+        self._swap(new_stacked)
+        return val_mat, test_mat
+
+    def _launch_sync(self, plan: RoundPlan) -> None:
+        d_ids = plan.pair_device
+        b = len(d_ids)
+        m_idx, d_idx, pp = pad_work_batch(
+            [0] * b, list(d_ids), [plan.perms[d] for d in d_ids])
+        w = np.zeros((1, len(m_idx)), np.float32)
+        w[0, :b] = 1.0
+        new_stacked, val_mat, test_mat = self._round(
+            self._stacked, m_idx, d_idx, pp, w, np.zeros(1, np.int32),
+            np.zeros(1, np.int32), np.zeros(1, np.int32),
+            *self._dev["train"], *self._dev["val"], *self._dev["test"])
+        self._swap(new_stacked)
+        self._pending = (val_mat, test_mat)
+
+    def launch(self, plan: RoundPlan) -> None:
+        if not self.pipeline:
+            self._launch_sync(plan)
+            return
+        if self._spec is not None and self._spec[0] == plan.round:
+            _, trained, meta = self._spec
+            self._spec = None
+            self.stats.hit += 1
+        else:
+            self._park_spec()
+            trained, meta = self._dispatch_train(plan)
+        self._pending = self._dispatch_finish(trained, meta)
+
+    def speculate(self, plan: RoundPlan) -> None:
+        if not self.pipeline:
+            return
+        trained, meta = self._dispatch_train(plan)
+        self._spec = (plan.round, trained, meta)
+        self.stats.speculated += 1
+
+    def readback(self) -> FedAvgResult:
+        val_mat, test_mat = self._pending
+        self._pending = None
+        result = FedAvgResult(val_acc=np.asarray(val_mat)[0],
+                              test_acc=np.asarray(test_mat)[0])
+        self._retired.clear()            # consumers completed; no block
+        return result
+
+
+class FedAvgShardedExecutor(FedAvgFusedExecutor):
+    """FedAvg's fused round with the work-PAIR axis sharded over the
+    mesh's ``model`` axis (one global model, replicated): participating
+    devices deal round-robin over shards, each shard reduces a partial
+    weighted sum, and one psum completes eq 1 (DESIGN.md §9)."""
+
+    def __init__(self, cfg, data, init_params, loss_fn, acc_fn, mesh,
+                 pipeline: bool = False):
+        self.mesh = mesh
+        self._n_shards = model_axis_size(mesh)
+        super().__init__(cfg, data, init_params, loss_fn, acc_fn,
+                         pipeline)
+
+    def _build_programs(self, loss_fn, acc_fn) -> None:
+        cfg = self.cfg
+        self._round = make_sharded_fedavg_round(loss_fn, acc_fn, cfg.lr,
+                                                self.mesh)
+        self._train = make_sharded_fedavg_train(loss_fn, cfg.lr,
+                                                self.mesh)
+        self._finish = make_sharded_fedavg_finish(acc_fn, self.mesh)
+
+    def _shard_batch(self, plan: RoundPlan
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray, int]:
+        """Deal the participating devices round-robin over the mesh and
+        pad each shard's block to one shared bucket (zero-weight
+        padding pairs), mirroring the FedCD sharded work batch."""
+        S = self._n_shards
+        d_ids = np.asarray(plan.pair_device, np.int64)
+        chunks = [d_ids[s::S] for s in range(S)]
+        width = bucket_size(max(len(ch) for ch in chunks),
+                            minimum=max(8 // S, 2))
+        m_idx = np.zeros(S * width, np.int32)
+        d_idx = np.zeros(S * width, np.int32)
+        pp = np.zeros((S * width,) + plan.perms[0].shape, np.int32)
+        w = np.zeros(S * width, np.float32)
+        for s, ch in enumerate(chunks):
+            base = s * width
+            d_idx[base:base + len(ch)] = ch
+            w[base:base + len(ch)] = 1.0
+            for j, d in enumerate(ch):
+                pp[base + j] = plan.perms[d]
+        return m_idx, d_idx, pp, w, width
+
+    def _launch_sync(self, plan: RoundPlan) -> None:
+        m_idx, d_idx, pp, w, _ = self._shard_batch(plan)
+        new_stacked, val_mat, test_mat = self._round(
+            self._stacked, m_idx, d_idx, pp, w,
+            *self._dev["train"], *self._dev["val"], *self._dev["test"])
+        self._swap(new_stacked)
+        self._pending = (val_mat, test_mat)
+
+    def _dispatch_train(self, plan: RoundPlan) -> Tuple[Any, TrainMeta]:
+        m_idx, d_idx, pp, w, width = self._shard_batch(plan)
+        trained = self._train(self._stacked, m_idx, d_idx, pp,
+                              *self._dev["train"])
+        meta = TrainMeta([0] * len(plan.pair_device),
+                         list(plan.pair_device), width, weights=w)
+        return trained, meta
+
+    def _dispatch_finish(self, trained: Any, meta: TrainMeta
+                         ) -> Tuple[Any, Any]:
+        new_stacked, val_mat, test_mat = self._finish(
+            self._stacked, trained, meta.weights,
+            *self._dev["val"], *self._dev["test"])
+        self._swap(new_stacked)
+        return val_mat, test_mat

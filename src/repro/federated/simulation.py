@@ -97,12 +97,14 @@ def pad_work_batch(model_idx: "list[int]", device_idx: "list[int]",
     return m_idx, d_idx, perms
 
 
-def pad_live_rows(live: "list[int]") -> np.ndarray:
+def pad_live_rows(live: "list[int]", minimum: int = 1) -> np.ndarray:
     """Pad the live-model row-index list to one static bucket (padding
     rows repeat the first live row; callers slice the first ``len(live)``
-    matrix rows). ``minimum=1``: populations are small and each live
-    count is a distinct steady state worth its own executable."""
-    pad = bucket_size(len(live), minimum=1)
+    matrix rows). The default ``minimum=1`` gives each live count its
+    own executable (populations are small); the pipelined executors
+    pass a coarser floor so the finish program's shape key stops
+    changing every round (DESIGN.md §10)."""
+    pad = bucket_size(len(live), minimum=minimum)
     idx = np.full(pad, live[0] if live else 0, np.int32)
     idx[:len(live)] = live
     return idx
@@ -129,6 +131,19 @@ def _pair_train(loss_fn: Callable, lr: float) -> Callable:
     return one_pair
 
 
+def make_pair_train(loss_fn: Callable, lr: float) -> Callable:
+    """The TRAIN phase alone: jitted fn(stacked_params, model_idx (B,),
+    xs (N,n,...), ys (N,n), device_idx (B,), perms (B,T,b)) -> trained
+    params with leading pair axis B.
+
+    Pure read of the bank — no scatter, no aggregation — which is what
+    lets the pipelined executors dispatch round t+1's training
+    speculatively while round t's eval matrices are still in flight and
+    simply discard the result on a mispeculation (DESIGN.md §10)."""
+    return jax.jit(jax.vmap(_pair_train(loss_fn, lr),
+                            in_axes=(None, 0, None, None, 0, 0)))
+
+
 def make_group_train(loss_fn: Callable, lr: float, batch_size: int
                      ) -> Callable:
     """Batched multi-model local training over a gathered work batch.
@@ -143,8 +158,7 @@ def make_group_train(loss_fn: Callable, lr: float, batch_size: int
     caller (padding pairs are masked out at aggregation), so the engine
     does O(pairs) work instead of the legacy O(models · devices).
     """
-    return jax.jit(jax.vmap(_pair_train(loss_fn, lr),
-                            in_axes=(None, 0, None, None, 0, 0)))
+    return make_pair_train(loss_fn, lr)
 
 
 def make_group_eval(acc_fn: Callable) -> Callable:
@@ -153,6 +167,47 @@ def make_group_eval(acc_fn: Callable) -> Callable:
     fused call (the batched engine's evaluation matrix)."""
     per_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
     return jax.jit(jax.vmap(per_model, in_axes=(0, None, None)))
+
+
+
+def _aggregate_rows(trained, w, quantize_bits: int,
+                    use_agg_kernel: bool):
+    """Steps 2-3 of the round body: bucketed eq-1 aggregation over the
+    (A, B) weight matrix + the in-jit quantize roundtrip. ONE shared
+    implementation for the monolithic, apply, and finish builders (both
+    layouts), so the aggregation/transport semantics the equivalence
+    tiers pin can never diverge between the sync and pipelined
+    programs."""
+    agg = multi_weighted_average(trained, w, use_kernel=use_agg_kernel)
+    if quantize_bits:
+        from repro.core import quantize as qz
+        agg = jax.vmap(lambda t: qz.roundtrip(t, quantize_bits))(agg)
+    return agg
+
+
+def _scatter_rows(stacked, agg, agg_rows, keep=None):
+    """Step 4: the idempotent-padding scatter writeback; with ``keep``
+    the keep-masked sharded variant (empty shards rewrite their rows'
+    existing values, so padding can never zero a live row)."""
+    if keep is None:
+        return jax.tree.map(
+            lambda old, new: old.at[agg_rows].set(new.astype(old.dtype)),
+            stacked, agg)
+
+    def write(old, new):
+        cur = old[agg_rows]
+        k = keep.reshape((-1,) + (1,) * (cur.ndim - 1))
+        return old.at[agg_rows].set(jnp.where(k, new.astype(old.dtype),
+                                              cur))
+
+    return jax.tree.map(write, stacked, agg)
+
+
+def _eval_gathered(eval_model, stacked, idx, xs, ys):
+    """Step 5: gather the scheduled bank rows and score each on every
+    device's split — the (rows, N) accuracy matrix."""
+    rows = jax.tree.map(lambda a: a[idx], stacked)
+    return jax.vmap(eval_model, in_axes=(0, None, None))(rows, xs, ys)
 
 
 def make_fused_round(loss_fn: Callable, acc_fn: Callable, lr: float,
@@ -203,20 +258,67 @@ def make_fused_round(loss_fn: Callable, acc_fn: Callable, lr: float,
                    live_idx, test_idx, xs, ys, vx, vy, tx, ty):
         trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
             stacked, m_idx, xs, ys, d_idx, perms)
-        agg = multi_weighted_average(trained, w, use_kernel=use_agg_kernel)
-        if quantize_bits:
-            from repro.core import quantize as qz
-            agg = jax.vmap(lambda t: qz.roundtrip(t, quantize_bits))(agg)
-        new_stacked = jax.tree.map(
-            lambda old, new: old.at[agg_rows].set(new.astype(old.dtype)),
-            stacked, agg)
-        vrows = jax.tree.map(lambda a: a[live_idx], new_stacked)
-        trows = jax.tree.map(lambda a: a[test_idx], new_stacked)
-        val = jax.vmap(eval_model, in_axes=(0, None, None))(vrows, vx, vy)
-        test = jax.vmap(eval_model, in_axes=(0, None, None))(trows, tx, ty)
+        agg = _aggregate_rows(trained, w, quantize_bits, use_agg_kernel)
+        new_stacked = _scatter_rows(stacked, agg, agg_rows)
+        val = _eval_gathered(eval_model, new_stacked, live_idx, vx, vy)
+        test = _eval_gathered(eval_model, new_stacked, test_idx, tx, ty)
         return new_stacked, val, test
 
     return jax.jit(round_step, donate_argnums=(0,))
+
+
+def make_fused_apply(quantize_bits: int = 0,
+                     use_agg_kernel: bool = False) -> Callable:
+    """The AGGREGATE+WRITEBACK phase alone (pipelined split,
+    DESIGN.md §10): fn(stacked [donated], trained (B, ...), w (A, B),
+    agg_rows (A,)) -> new_stacked. Same aggregation, quantize
+    roundtrip, and idempotent-padding scatter semantics as steps 2-4 of
+    ``make_fused_round`` — the weights and scatter rows arrive AFTER
+    training was dispatched, which is what lets the host resolve them
+    from round t-1's readback while the train phase runs."""
+
+    def apply_step(stacked, trained, w, agg_rows):
+        agg = _aggregate_rows(trained, w, quantize_bits, use_agg_kernel)
+        return _scatter_rows(stacked, agg, agg_rows)
+
+    return jax.jit(apply_step, donate_argnums=(0,))
+
+
+def make_fused_finish(acc_fn: Callable, quantize_bits: int = 0,
+                      use_agg_kernel: bool = False) -> Callable:
+    """Everything AFTER training as one dispatch (pipelined split,
+    DESIGN.md §10): fn(stacked [donated], trained (B, ...), w (A, B),
+    agg_rows (A,), live_idx (L,), test_idx (R,), vx, vy, tx, ty) ->
+    (new_stacked, val (L, N), test (R, N)). Identical to steps 2-5 of
+    ``make_fused_round`` — aggregation weights, scatter rows, and eval
+    schedules arrive AFTER the train batch was dispatched, so the host
+    resolves them from round t-1's readback while training runs."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+
+    def finish_step(stacked, trained, w, agg_rows, live_idx, test_idx,
+                    vx, vy, tx, ty):
+        agg = _aggregate_rows(trained, w, quantize_bits, use_agg_kernel)
+        new_stacked = _scatter_rows(stacked, agg, agg_rows)
+        val = _eval_gathered(eval_model, new_stacked, live_idx, vx, vy)
+        test = _eval_gathered(eval_model, new_stacked, test_idx, tx, ty)
+        return new_stacked, val, test
+
+    return jax.jit(finish_step, donate_argnums=(0,))
+
+
+def make_pair_eval(acc_fn: Callable) -> Callable:
+    """Holder-only (sparse) evaluation: fn(stacked, m_idx (P,),
+    d_idx (P,), xs, ys) -> (P,) accuracy of model row ``m_idx[k]`` on
+    device ``d_idx[k]``'s split. The sparse form does O(active pairs)
+    eval work instead of the dense matrix's O(rows · N); the dense GEMM
+    wins the weight reuse back above a density crossover, so the
+    planner only selects this below ``sparse_eval`` (DESIGN.md §10)."""
+
+    def one_pair(stacked, m, d, xs, ys):
+        params = jax.tree.map(lambda a: a[m], stacked)
+        return acc_fn(params, xs[d], ys[d])
+
+    return jax.jit(jax.vmap(one_pair, in_axes=(None, 0, 0, None, None)))
 
 
 def make_fused_eval(acc_fn: Callable) -> Callable:
@@ -227,16 +329,15 @@ def make_fused_eval(acc_fn: Callable) -> Callable:
     eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
 
     def mat(stacked, live_idx, xs, ys):
-        rows = jax.tree.map(lambda a: a[live_idx], stacked)
-        return jax.vmap(eval_model, in_axes=(0, None, None))(rows, xs, ys)
+        return _eval_gathered(eval_model, stacked, live_idx, xs, ys)
 
     return jax.jit(mat)
 
 
 # -- mesh-sharded fused engine (DESIGN.md §9) -------------------------------
 
-def shard_rows(rows: "list[int]", rows_per_shard: int, n_shards: int
-               ) -> Tuple[np.ndarray, List[List[int]], int]:
+def shard_rows(rows: "list[int]", rows_per_shard: int, n_shards: int,
+               minimum: int = 1) -> Tuple[np.ndarray, List[List[int]], int]:
     """Partition global bank-row ids by owning shard (row ``m`` lives on
     shard ``m // rows_per_shard``) and pad every shard's list to ONE
     shared bucket ``L = bucket_size(max per-shard count, minimum=1)``.
@@ -255,7 +356,7 @@ def shard_rows(rows: "list[int]", rows_per_shard: int, n_shards: int
     for r in rows:
         groups[r // rows_per_shard].append(r)
     width = bucket_size(max((len(g) for g in groups), default=0),
-                        minimum=1)
+                        minimum=minimum)
     idx = np.zeros(n_shards * width, np.int32)
     for s, g in enumerate(groups):
         base = s * width
@@ -331,22 +432,10 @@ def make_sharded_round(loss_fn: Callable, acc_fn: Callable, lr: float,
              live_idx, test_idx, xs, ys, vx, vy, tx, ty):
         trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
             stacked, m_idx, xs, ys, d_idx, perms)
-        agg = multi_weighted_average(trained, w, use_kernel=use_agg_kernel)
-        if quantize_bits:
-            from repro.core import quantize as qz
-            agg = jax.vmap(lambda t: qz.roundtrip(t, quantize_bits))(agg)
-
-        def write(old, new):
-            cur = old[agg_rows]
-            keep = agg_keep.reshape((-1,) + (1,) * (cur.ndim - 1))
-            return old.at[agg_rows].set(
-                jnp.where(keep, new.astype(old.dtype), cur))
-
-        new_stacked = jax.tree.map(write, stacked, agg)
-        vrows = jax.tree.map(lambda a: a[live_idx], new_stacked)
-        trows = jax.tree.map(lambda a: a[test_idx], new_stacked)
-        val = jax.vmap(eval_model, in_axes=(0, None, None))(vrows, vx, vy)
-        test = jax.vmap(eval_model, in_axes=(0, None, None))(trows, tx, ty)
+        agg = _aggregate_rows(trained, w, quantize_bits, use_agg_kernel)
+        new_stacked = _scatter_rows(stacked, agg, agg_rows, keep=agg_keep)
+        val = _eval_gathered(eval_model, new_stacked, live_idx, vx, vy)
+        test = _eval_gathered(eval_model, new_stacked, test_idx, tx, ty)
         return new_stacked, val, test
 
     step = shard_map(
@@ -369,12 +458,144 @@ def make_sharded_eval(acc_fn: Callable, mesh: jax.sharding.Mesh
     rep = P()
 
     def mat(stacked, idx, xs, ys):
-        rows = jax.tree.map(lambda a: a[idx], stacked)
-        return jax.vmap(eval_model, in_axes=(0, None, None))(rows, xs, ys)
+        return _eval_gathered(eval_model, stacked, idx, xs, ys)
 
     return jax.jit(shard_map(mat, mesh=mesh,
                              in_specs=(row, row, rep, rep),
                              out_specs=row, check_rep=False))
+
+
+def _make_sharded_pair_train(loss_fn: Callable, lr: float,
+                             mesh: jax.sharding.Mesh,
+                             bank_spec: P) -> Callable:
+    """Shared body of the sharded TRAIN phase: each shard trains its
+    B-pair block against the bank laid out per ``bank_spec``
+    (row-sharded for FedCD's per-model rows, replicated for FedAvg's
+    single global model). Pure read of the bank, so the pipelined
+    executors can dispatch it speculatively (DESIGN.md §10)."""
+    one_pair = _pair_train(loss_fn, lr)
+    row = P("model")
+    rep = P()
+
+    def body(stacked, m_idx, d_idx, perms, xs, ys):
+        return jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(bank_spec, row, row, row, rep, rep),
+                             out_specs=row, check_rep=False))
+
+
+def make_sharded_train(loss_fn: Callable, lr: float,
+                       mesh: jax.sharding.Mesh) -> Callable:
+    """``make_pair_train`` over the model mesh (shard-LOCAL ``m_idx``
+    from ``shard_work_batch``): fn(stacked [row-sharded], m_idx (S*B,),
+    d_idx (S*B,), perms (S*B, T, b), xs, ys) -> trained (S*B, ...)
+    row-sharded."""
+    return _make_sharded_pair_train(loss_fn, lr, mesh, P("model"))
+
+
+def make_sharded_apply(mesh: jax.sharding.Mesh, quantize_bits: int = 0,
+                       use_agg_kernel: bool = False) -> Callable:
+    """``make_fused_apply`` over the model mesh: each shard aggregates
+    its A rows from its (A, B) weight block of the trained pairs and
+    scatters into its local bank block behind the keep mask (identical
+    semantics to steps 2-4 of ``make_sharded_round``; empty shards
+    rewrite existing values).
+
+    fn(stacked [donated, row-sharded], trained (S*B, ...) row-sharded,
+    w (S*A, B), agg_rows (S*A,) LOCAL, agg_keep (S*A,) bool) ->
+    new_stacked."""
+    row = P("model")
+
+    def body(stacked, trained, w, agg_rows, agg_keep):
+        agg = _aggregate_rows(trained, w, quantize_bits, use_agg_kernel)
+        return _scatter_rows(stacked, agg, agg_rows, keep=agg_keep)
+
+    step = shard_map(body, mesh=mesh,
+                     in_specs=(row, row, row, row, row),
+                     out_specs=row, check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded_finish(acc_fn: Callable, mesh: jax.sharding.Mesh,
+                        quantize_bits: int = 0,
+                        use_agg_kernel: bool = False) -> Callable:
+    """``make_fused_finish`` over the model mesh: each shard aggregates
+    its (A, B) weight block, quantize-roundtrips, scatters behind the
+    keep mask, and evaluates its resident stale rows — steps 2-5 of
+    ``make_sharded_round`` as their own dispatch (pipelined split).
+
+    fn(stacked [donated, row-sharded], trained (S*B, ...) row-sharded,
+    w (S*A, B), agg_rows (S*A,) LOCAL, agg_keep (S*A,), live_idx (S*L,),
+    test_idx (S*R,), vx, vy, tx, ty) -> (new_stacked, val (S*L, N),
+    test (S*R, N))."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    rep = P()
+
+    def body(stacked, trained, w, agg_rows, agg_keep, live_idx, test_idx,
+             vx, vy, tx, ty):
+        agg = _aggregate_rows(trained, w, quantize_bits, use_agg_kernel)
+        new_stacked = _scatter_rows(stacked, agg, agg_rows, keep=agg_keep)
+        val = _eval_gathered(eval_model, new_stacked, live_idx, vx, vy)
+        test = _eval_gathered(eval_model, new_stacked, test_idx, tx, ty)
+        return new_stacked, val, test
+
+    step = shard_map(body, mesh=mesh,
+                     in_specs=(row, row, row, row, row, row, row,
+                               rep, rep, rep, rep),
+                     out_specs=(row, row, row), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded_pair_eval(acc_fn: Callable, mesh: jax.sharding.Mesh
+                           ) -> Callable:
+    """``make_pair_eval`` over the model mesh: fn(stacked [row-sharded],
+    m_idx (S*P,) LOCAL rows, d_idx (S*P,), xs, ys) -> (S*P,) row-sharded
+    accuracies; pairs bucket per owning shard (``shard_eval_pairs``) and
+    padding outputs are discarded by the caller."""
+    row = P("model")
+    rep = P()
+
+    def one_pair(stacked, m, d, xs, ys):
+        params = jax.tree.map(lambda a: a[m], stacked)
+        return acc_fn(params, xs[d], ys[d])
+
+    def body(stacked, m_idx, d_idx, xs, ys):
+        return jax.vmap(one_pair, in_axes=(None, 0, 0, None, None))(
+            stacked, m_idx, d_idx, xs, ys)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(row, row, row, rep, rep),
+                             out_specs=row, check_rep=False))
+
+
+def shard_eval_pairs(pair_rows: "list[int]", pair_device: "list[int]",
+                     rows_per_shard: int, n_shards: int,
+                     minimum: int = 8
+                     ) -> Tuple[np.ndarray, np.ndarray,
+                                List[List[int]], int]:
+    """Bucket (bank row, device) eval pairs per OWNING shard (the eval
+    analogue of ``shard_work_batch``): pair k goes to shard
+    ``pair_rows[k] // rows_per_shard`` with a shard-LOCAL row index.
+    Returns ``(m_idx (S*P,), d_idx (S*P,), groups, P)`` where
+    ``groups[s]`` lists the original pair positions assigned to shard s
+    in bucket order — the output slot of pair ``groups[s][j]`` in the
+    (S*P,) accuracy vector is ``s*P + j``. Padding pairs point at local
+    row 0 / device 0 and their outputs are discarded."""
+    groups: List[List[int]] = [[] for _ in range(n_shards)]
+    for k, r in enumerate(pair_rows):
+        groups[r // rows_per_shard].append(k)
+    width = bucket_size(max((len(g) for g in groups), default=0), minimum)
+    m_idx = np.zeros(n_shards * width, np.int32)
+    d_idx = np.zeros(n_shards * width, np.int32)
+    for s, g in enumerate(groups):
+        base = s * width
+        for j, k in enumerate(g):
+            m_idx[base + j] = pair_rows[k] - s * rows_per_shard
+            d_idx[base + j] = pair_device[k]
+    return m_idx, d_idx, groups, width
 
 
 def make_sharded_fedavg_round(loss_fn: Callable, acc_fn: Callable,
@@ -416,6 +637,45 @@ def make_sharded_fedavg_round(loss_fn: Callable, acc_fn: Callable,
         body, mesh=mesh,
         in_specs=(rep, row, row, row, row, rep, rep, rep, rep, rep, rep),
         out_specs=(rep, rep, rep), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded_fedavg_train(loss_fn: Callable, lr: float,
+                              mesh: jax.sharding.Mesh) -> Callable:
+    """The TRAIN phase of ``make_sharded_fedavg_round`` alone: the
+    replicated (1, ...) global model trains each shard's B-pair block
+    (pipelined FedAvg split, DESIGN.md §10): fn(stacked (1, ...)
+    replicated, m_idx (S*B,), d_idx (S*B,), perms (S*B, T, b), xs, ys)
+    -> trained (S*B, ...) row-sharded."""
+    return _make_sharded_pair_train(loss_fn, lr, mesh, P())
+
+
+def make_sharded_fedavg_finish(acc_fn: Callable,
+                               mesh: jax.sharding.Mesh) -> Callable:
+    """Aggregate + evaluate phases of ``make_sharded_fedavg_round`` as
+    their own dispatch (pipelined FedAvg split): fn(stacked (1, ...)
+    [donated, replicated], trained (S*B, ...) row-sharded, w (S*B,),
+    vx, vy, tx, ty) -> (new_stacked, val (1, N), test (1, N))."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    rep = P()
+
+    def body(stacked, trained, w, vx, vy, tx, ty):
+        num = jax.tree.map(
+            lambda t: jnp.einsum("b...,b->...", t.astype(jnp.float32), w),
+            trained)
+        num = jax.lax.psum(num, "model")
+        den = jnp.maximum(jax.lax.psum(jnp.sum(w), "model"), 1e-12)
+        new_stacked = jax.tree.map(
+            lambda n, o: (n / den).astype(o.dtype)[None], num, stacked)
+        model = jax.tree.map(lambda a: a[0], new_stacked)
+        val = eval_model(model, vx, vy)[None]
+        test = eval_model(model, tx, ty)[None]
+        return new_stacked, val, test
+
+    step = shard_map(body, mesh=mesh,
+                     in_specs=(rep, row, row, rep, rep, rep, rep),
+                     out_specs=(rep, rep, rep), check_rep=False)
     return jax.jit(step, donate_argnums=(0,))
 
 

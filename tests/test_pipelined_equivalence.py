@@ -1,0 +1,263 @@
+"""Pipelined dispatch ≡ synchronous engines (DESIGN.md §10).
+
+``pipeline=True`` splits the fused round into train / apply / eval
+programs and speculatively enqueues round t+1's training — from the
+prefetched sample and the pre-lifecycle population — while round t's
+eval matrices are still in flight. It must be a pure scheduling
+refactor: a seeded pipelined run has to reproduce the synchronous
+engine's discrete state (live set, genealogy, clone/delete events,
+preferences, transport) exactly across clone AND delete rounds, and
+the params up to reduction order (the split phases compile different
+XLA programs than the monolithic dispatch). The tiers force every
+speculation outcome: clean hits and deletion repairs on the standard
+fixture, invalidation via milestone clones, and an extinction round
+where the speculative batch has no surviving pair at all.
+
+Also pinned here: the sparse (holder-only) validation-scoring path the
+planner selects below the ``sparse_eval`` density crossover, and the
+work-aware (EWMA pair-load) row placement satellite.
+
+Sharded tiers skip above ``jax.device_count()``; CI's sharded leg runs
+them under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.fedavg import FedAvgServer
+from repro.core.fedcd import FedCDServer
+from repro.launch.mesh import make_model_mesh
+from repro.models.mlp import mlp_accuracy, mlp_loss
+from test_engine_equivalence import ROUNDS, _small_setup
+from test_sharded_equivalence import SHARD_COUNTS, needs_devices
+
+
+def _server(cfg, params, data, **kw):
+    return FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                       batch_size=16, engine="fused", **kw)
+
+
+def _run(cfg, params, data, rounds=ROUNDS, **kw):
+    srv = _server(cfg, params, data, **kw)
+    srv.run(rounds)
+    return srv
+
+
+def assert_equivalent(ref, other):
+    """Discrete state exact; accuracies/params to reduction order."""
+    assert ref.registry.live_ids() == other.registry.live_ids()
+    assert ref.registry.genealogy() == other.registry.genealogy()
+    np.testing.assert_array_equal(ref.state.active, other.state.active)
+    np.testing.assert_array_equal(ref.state.alive, other.state.alive)
+    np.testing.assert_allclose(
+        np.nan_to_num(ref.state.history),
+        np.nan_to_num(other.state.history), atol=1e-9)
+    for ms, mp in zip(ref.metrics, other.metrics):
+        assert ms.round == mp.round
+        assert ms.live_models == mp.live_models
+        assert ms.active_models == mp.active_models
+        assert ms.comm_bytes == mp.comm_bytes
+        np.testing.assert_array_equal(ms.preferred, mp.preferred)
+        np.testing.assert_allclose(ms.test_acc, mp.test_acc, atol=1e-6)
+        np.testing.assert_allclose(ms.val_acc, mp.val_acc, atol=1e-6)
+    for m in ref.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(ref.registry.params[m]),
+                        jax.tree.leaves(other.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def sync_fused():
+    cfg, params, data = _small_setup()
+    return _run(cfg, params, data)
+
+
+@pytest.fixture(
+    scope="module",
+    params=[pytest.param(s, marks=needs_devices(s)) for s in SHARD_COUNTS])
+def n_shards(request):
+    return request.param
+
+
+def test_pipelined_fused_matches_sync(sync_fused):
+    """The standard 8-round fixture covers clone rounds (milestones 2,
+    5 -> speculation skipped via the plan's lifecycle intent) and
+    deletion rounds (-> repairs): discrete state exact."""
+    cfg, params, data = _small_setup()
+    pip = _run(cfg, params, data, pipeline=True)
+    assert_equivalent(sync_fused, pip)
+    stats = pip.pipeline_stats.as_dict()
+    assert stats["speculated"] > 0
+    assert stats["hit"] + stats["repaired"] > 0
+    # the milestone intent suppresses doomed speculations
+    assert stats["skipped"] >= 2
+
+
+def test_pipelined_sharded_matches_sync(sync_fused, n_shards):
+    cfg, params, data = _small_setup()
+    pip = _run(cfg, params, data, mesh=make_model_mesh(n_shards),
+               pipeline=True)
+    assert_equivalent(sync_fused, pip)
+
+
+def test_pipelined_quantized_matches_sync():
+    """Pipelined int8-transport run: discrete state exact, params
+    within one int8 step (the cross-program bound, see
+    test_engine_equivalence)."""
+    cfg, params, data = _small_setup(quantize_bits=8)
+    ref = _run(cfg, params, data, rounds=5)
+    pip = _run(cfg, params, data, rounds=5, pipeline=True)
+    step = 1.0 / 127
+    for ms, mp in zip(ref.metrics, pip.metrics):
+        assert ms.live_models == mp.live_models
+        assert ms.comm_bytes == mp.comm_bytes
+        np.testing.assert_array_equal(ms.preferred, mp.preferred)
+        np.testing.assert_allclose(ms.test_acc, mp.test_acc, atol=1 / 16)
+    np.testing.assert_array_equal(ref.state.active, pip.state.active)
+    assert ref.registry.live_ids() == pip.registry.live_ids()
+    for m in ref.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(ref.registry.params[m]),
+                        jax.tree.leaves(pip.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2 * step)
+
+
+def test_forced_plan_invalidation_round():
+    """A clone landing OUTSIDE the milestone path (direct registry
+    write between rounds) rewrites bank rows underneath a pending
+    speculation: the version check must invalidate it, retrain, and
+    still produce the sync engine's exact discrete state."""
+    outs = {}
+    for pipe in (False, True):
+        cfg, params, data = _small_setup()
+        cfg = dataclasses.replace(cfg, milestones=())
+        srv = _server(cfg, params, data, pipeline=pipe)
+        srv.run_round(1)              # leaves a speculation for round 2
+        clone = srv.registry.clone(
+            0, 1, jax.tree.map(np.asarray, srv.registry.params[0]))
+        srv.state.active[:, clone] = True
+        srv.state.alive[clone] = True
+        for t in (2, 3):
+            srv.run_round(t)
+        outs[pipe] = srv
+    assert_equivalent(outs[False], outs[True])
+    stats = outs[True].pipeline_stats.as_dict()
+    assert stats["invalidated"] >= 1   # round 2's speculation was stale
+
+
+def test_extinction_round_discards_speculation():
+    """Mass extinction between rounds: the speculative batch has no
+    surviving pair; the pipelined engine must discard it and dispatch
+    the empty round cleanly (mirrors the sharded extinction tier)."""
+    cfg, params, data = _small_setup(quantize_bits=8)
+    srv = _server(cfg, params, data, pipeline=True)
+    srv.run_round(1)                  # leaves a speculation for round 2
+    for m in list(srv.registry.live_ids()):
+        srv.registry.kill(m, 1)
+    srv.state.active[:] = False
+    srv.state.alive[:] = False
+    assert srv.registry.live_ids() == []
+    m = srv.run_round(2)
+    assert m.live_models == 0
+    assert m.active_models == 0
+    assert m.comm_bytes == 0
+    # never consumed (no surviving pair) = discarded, not invalidated
+    assert srv.pipeline_stats.discarded >= 1
+    assert srv.pipeline_stats.invalidated == 0
+    srv.run_round(3)                  # still clean with nothing pending
+
+
+def test_pipelined_fedavg_matches_sync():
+    cfg, params, data = _small_setup()
+    ref = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                       batch_size=16, engine="fused")
+    ref.run(4)
+    pip = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                       batch_size=16, engine="fused", pipeline=True)
+    pip.run(4)
+    for ms, mp in zip(ref.metrics, pip.metrics):
+        assert ms.comm_bytes == mp.comm_bytes
+        np.testing.assert_allclose(ms.test_acc, mp.test_acc, atol=1e-6)
+        np.testing.assert_allclose(ms.val_acc, mp.val_acc, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(pip.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+    assert pip.pipeline_stats.hit == 3    # rounds 2-4 reuse speculation
+
+
+def test_pipeline_requires_fused_engine():
+    cfg, params, data = _small_setup()
+    for engine in ("batched", "legacy"):
+        with pytest.raises(ValueError):
+            FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                        batch_size=16, engine=engine, pipeline=True)
+        with pytest.raises(ValueError):
+            FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                         batch_size=16, engine=engine, pipeline=True)
+
+
+# -- sparse (holder-only) validation scoring ------------------------------
+
+def test_sparse_eval_matches_dense(sync_fused):
+    """crossover=1.1 forces every round sparse: holder-only scoring
+    must reproduce the dense engine's discrete state exactly (every
+    consumed (device, model) accuracy entry is an active pair, which
+    sparse scoring covers by construction)."""
+    cfg, params, data = _small_setup()
+    sp = _run(cfg, params, data, sparse_eval=1.1)
+    assert_equivalent(sync_fused, sp)
+
+
+@needs_devices(2)
+def test_sparse_eval_matches_dense_sharded(sync_fused):
+    cfg, params, data = _small_setup()
+    sp = _run(cfg, params, data, mesh=make_model_mesh(2), sparse_eval=1.1)
+    assert_equivalent(sync_fused, sp)
+
+
+def test_sparse_crossover_zero_stays_dense(sync_fused):
+    """crossover=0 can never trigger (density is always > 0), so the
+    planner must keep the dense path bit-for-bit."""
+    cfg, params, data = _small_setup()
+    srv = _run(cfg, params, data, sparse_eval=0.0)
+    assert_equivalent(sync_fused, srv)
+
+
+# -- work-aware (EWMA pair-load) row placement ----------------------------
+
+def test_work_aware_placement_follows_pair_load():
+    """New rows land on the shard with the lowest observed pair-load
+    EWMA, not just the fewest resident rows: after shard 0 absorbs a
+    hot round, the next row avoids it even though populations tie."""
+    from repro.core.registry import StackedParamBank
+    bank = StackedParamBank(16, {"w": np.zeros(2, np.float32)}, n_shards=4)
+    for m in range(8):                    # two residents per shard
+        bank[m] = {"w": np.full(2, m, np.float32)}
+    assert [sum(1 for m in range(8) if bank.shard_of(m) == s)
+            for s in range(4)] == [2, 2, 2, 2]
+    bank.note_pair_load([12.0, 0.0, 4.0, 4.0])   # shard 0 is hot
+    bank[8] = {"w": np.zeros(2, np.float32)}
+    assert bank.shard_of(8) == 1                 # the idle shard wins
+    # EWMA decays: after quiet rounds the tie-break falls back to
+    # population (shard 1 now has 3 rows, so the next row avoids it)
+    for _ in range(40):
+        bank.note_pair_load([0.0, 0.0, 0.0, 0.0])
+    bank[9] = {"w": np.zeros(2, np.float32)}
+    assert bank.shard_of(9) != 1
+    # cold start (no load observed) keeps PR 3's population balancing
+    b2 = StackedParamBank(16, {"w": np.zeros(2, np.float32)}, n_shards=4)
+    for m in range(12):
+        b2[m] = {"w": np.zeros(2, np.float32)}
+    assert [sum(1 for m in range(12) if b2.shard_of(m) == s)
+            for s in range(4)] == [3, 3, 3, 3]
+    # one shard: identity map, untouched by load feedback
+    b1 = StackedParamBank(16, {"w": np.zeros(2, np.float32)}, n_shards=1)
+    b1.note_pair_load([7.0])
+    for m in range(6):
+        b1[m] = {"w": np.zeros(2, np.float32)}
+    assert [b1.row_of[m] for m in range(6)] == list(range(6))
