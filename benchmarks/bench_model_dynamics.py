@@ -37,6 +37,8 @@ def _mesh_argv(argv):
 
 
 _n = _mesh_argv(sys.argv)
+if _n is None and "--data-mesh" in sys.argv:
+    _n = "4"                      # the 2x2-vs-4x1 comparison's budget
 if _n is not None and _n.isdigit() and "jax" not in sys.modules:
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
@@ -245,6 +247,121 @@ def compare_mesh(rounds: int = 16, model: str = "mlp", shards: int = 4,
     return lines
 
 
+def compare_datamesh(rounds: int = 12, model: str = "mlp",
+                     quick: bool = False):
+    """Time the 2-D (model × data) mesh against the 1-D model mesh at
+    EQUAL device count (DESIGN.md §11): 2×2 vs 4×1 on 4 simulated
+    devices, plus a churn-regime row (random join/leave/drift schedule
+    under the 2-D mesh vs single-device fused).
+
+    Beyond wall clock, the rows record the quantity the data axis
+    exists for: per-shard resident DEVICE-SPLIT bytes, which shrink
+    S_data× once splits stop being replicated per model shard — the
+    memory headroom that lifts the population cap toward the ROADMAP's
+    "millions of users" scale. Run under ``XLA_FLAGS=--xla_force_host_
+    platform_device_count=4`` (or the ``--mesh 4`` CLI shortcut)."""
+    import jax
+
+    from repro.data.scenarios import random_churn
+    from repro.launch.mesh import make_launch_mesh
+
+    avail = jax.device_count()
+    if avail < 2:
+        print(f"# --data-mesh needs >=2 devices, have {avail}: skipping "
+              f"(a 1x1-vs-1x1 'comparison' would be meaningless)")
+        return []
+    if avail < 4:
+        print(f"# --data-mesh needs 4 devices, have {avail}: "
+              f"falling back to (2x1) vs (1x2)")
+    sm = 2 if avail >= 4 else 1
+    sd = 2
+    params, loss_fn, acc_fn = C.model_fns(model)
+    if quick:
+        rounds = max(rounds, 8)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65,
+                                 devices_per_archetype=1)
+        base = dict(n_devices=len(devs), devices_per_round=4,
+                    local_epochs=1)
+    else:
+        rounds = max(rounds, 12)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65)
+        base = dict(devices_per_round=6, local_epochs=1)
+    cfg = C.default_cfg(quantize_bits=8, max_models=16,
+                        milestones=(1, 2, 3, 4),
+                        late_delete_round=rounds + 5, **base)
+
+    variants = [("mesh1d", make_launch_mesh(sm * sd, 1)),
+                ("mesh2d", make_launch_mesh(sm, sd))]
+    servers = {}
+    total = {}
+    for tag, mesh in variants:
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH, engine="sharded", mesh=mesh)
+        t0 = time.time()
+        srv.run(rounds)
+        total[tag] = time.time() - t0
+        servers[tag] = srv
+
+    live = [m.live_models for m in servers["mesh1d"].metrics]
+    steady = list(range(rounds // 2 + 1, rounds + 1))
+    med = {t: float(np.median([servers[t].metrics[r - 1].wall_s
+                               for r in steady])) for t in servers}
+    lines = []
+    for tag, mesh in variants:
+        bank = servers[tag].executor.databank
+        lines.append(C.csv_line(
+            f"datamesh_round_wall_{tag}", med[tag] * 1e6,
+            f"rounds={rounds};steady_live={live[-1]};"
+            f"devices={cfg.n_devices};"
+            f"mesh={mesh.shape.get('model', 1)}x"
+            f"{mesh.shape.get('data', 1)};"
+            f"data_bytes_per_shard={bank.bytes_per_shard()}"))
+    b1 = servers["mesh1d"].executor.databank.bytes_per_shard()
+    b2 = servers["mesh2d"].executor.databank.bytes_per_shard()
+    lines.append(C.csv_line(
+        "datamesh_speedup", 0.0,
+        f"mesh2d_over_mesh1d={med['mesh1d'] / max(med['mesh2d'], 1e-12):.2f}x;"
+        f"data_bytes_shrink={b1 / max(b2, 1):.2f}x;"
+        f"total_mesh1d_s={total['mesh1d']:.2f};"
+        f"total_mesh2d_s={total['mesh2d']:.2f}"))
+    # the 2-D mesh must stay a pure layout refactor
+    other = [m.live_models for m in servers["mesh2d"].metrics]
+    if other != live:
+        raise AssertionError(
+            f"datamesh divergence: 2d live={other} 1d={live}")
+
+    # churn regime: a dynamic population under the 2-D mesh vs the
+    # single-device fused engine on the SAME schedule
+    def sched():
+        return random_churn(rounds, cfg.n_devices, seed=1, join_rate=0.4,
+                            leave_rate=0.3, drift_rate=0.2,
+                            min_devices=max(4, cfg.devices_per_round),
+                            n_train=C.N_TRAIN, n_val=C.N_VAL,
+                            n_test=C.N_TEST)
+    churn = {}
+    for tag, mesh in (("fused", None), ("mesh2d", make_launch_mesh(sm, sd))):
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH,
+                          engine="sharded" if mesh is not None else "fused",
+                          mesh=mesh, scenario=sched())
+        t0 = time.time()
+        srv.run(rounds)
+        churn[tag] = (time.time() - t0, srv)
+    ev = sched()
+    ref_live = [m.live_models for m in churn["fused"][1].metrics]
+    mesh_live = [m.live_models for m in churn["mesh2d"][1].metrics]
+    if ref_live != mesh_live:
+        raise AssertionError(
+            f"churn divergence: mesh2d live={mesh_live} fused={ref_live}")
+    lines.append(C.csv_line(
+        "datamesh_churn_round_wall", churn["mesh2d"][0] / rounds * 1e6,
+        f"fused_us={churn['fused'][0] / rounds * 1e6:.0f};"
+        f"events={len(ev.events)};joins={ev.total_joins};"
+        f"final_present={int(churn['mesh2d'][1].present.sum())};"
+        f"rounds={rounds}"))
+    return lines
+
+
 def compare_pipeline(rounds: int = 16, model: str = "mlp",
                      shards: int = 4, quick: bool = False):
     """Time cross-round pipelined dispatch (DESIGN.md §10) against the
@@ -422,6 +539,10 @@ if __name__ == "__main__":
                          "the synchronous engines (uses --mesh shards)")
     ap.add_argument("--sparse-eval", action="store_true",
                     help="time dense vs holder-only validation scoring")
+    ap.add_argument("--data-mesh", action="store_true",
+                    help="time the 2-D (model x data) mesh vs the 1-D "
+                         "model mesh at 4 simulated devices (2x2 vs "
+                         "4x1) plus a churn-regime row")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small config, few rounds)")
     ap.add_argument("--rounds", type=int, default=None)
@@ -448,6 +569,9 @@ if __name__ == "__main__":
         out += measure_sparse_eval(args.rounds or (8 if args.quick
                                                    else 16),
                                    args.model, quick=args.quick)
+    if args.data_mesh:
+        out += compare_datamesh(args.rounds or (8 if args.quick else 12),
+                                args.model, quick=args.quick)
     if not out:
         out = run(args.rounds or (6 if args.quick else 30), args.model,
                   args.force or args.quick)

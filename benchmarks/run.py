@@ -79,6 +79,8 @@ def main() -> None:
         "pipeline": lambda: bench_model_dynamics.compare_pipeline(
             8 if args.fast else 16, args.model,
             shards=args.mesh or 4, quick=args.fast),
+        "datamesh": lambda: bench_model_dynamics.compare_datamesh(
+            8 if args.fast else 12, args.model, quick=args.fast),
         "sparse": lambda: bench_model_dynamics.measure_sparse_eval(
             8 if args.fast else 16, args.model, quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
@@ -90,10 +92,11 @@ def main() -> None:
         keep = set(args.only.split(","))
         benches = {k: v for k, v in benches.items() if k in keep}
     elif args.mesh is None:
-        # the mesh bench only joins the default sweep when shards are
-        # requested (it clamps to 1 shard on a single-device host)
+        # the mesh benches only join the default sweep when shards are
+        # requested (they clamp to 1 shard on a single-device host)
         benches.pop("mesh")
         benches.pop("pipeline")
+        benches.pop("datamesh")
 
     print("name,us_per_call,derived")
     t0 = time.time()

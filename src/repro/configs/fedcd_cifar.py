@@ -1,5 +1,7 @@
 """The paper's own experimental config: 10-layer CNN on CIFAR-shaped data,
-30 devices, 15 per round, milestones {5,15,25,30} (paper §3.1-3.2)."""
+30 devices, 15 per round, milestones {5,15,25,30} (paper §3.1-3.2);
+plus the Dirichlet(α) non-IID scenario (Hsu et al. 2019) with its α
+sweep — the third partition beside the paper's two."""
 from repro.config import FedCDConfig
 
 HIERARCHICAL = FedCDConfig(
@@ -11,3 +13,15 @@ HYPERGEOMETRIC = FedCDConfig(
     n_devices=30, devices_per_round=15, local_epochs=2, score_window=3,
     milestones=(5, 15, 25, 30), late_delete_round=20,
     late_delete_threshold=0.3, max_models=16, lr=0.08, seed=0)
+
+# Dirichlet(α) partitions (data.partition.dirichlet_devices, symmetric
+# per-class-concentration-α convention): same server hyperparameters,
+# sweeping from near-single-label devices (0.1) to near-IID (10) in
+# the spirit of Hsu et al. 2019 Fig 2 (their literal Dir(α·p) scale is
+# α/10 — see data/partition.py).
+DIRICHLET = FedCDConfig(
+    n_devices=30, devices_per_round=15, local_epochs=2, score_window=3,
+    milestones=(5, 15, 25, 30), late_delete_round=20,
+    late_delete_threshold=0.3, max_models=16, lr=0.08, seed=0)
+
+DIRICHLET_ALPHAS = (0.1, 0.5, 1.0, 10.0)

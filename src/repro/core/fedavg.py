@@ -57,8 +57,14 @@ class FedAvgServer:
         ``pipeline``: split-phase dispatch with the next round's
         training enqueued before this round's readback (DESIGN.md §10).
         """
-        if engine not in ENGINES:
-            raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
+        if engine not in ENGINES + ("sharded",):
+            raise ValueError(
+                f"engine must be one of {ENGINES + ('sharded',)}: "
+                f"{engine!r}")
+        if engine == "sharded":
+            if mesh is None:
+                raise ValueError("engine='sharded' requires mesh=")
+            engine = "fused"
         if mesh is not None and engine != "fused":
             raise ValueError(
                 f"mesh sharding requires engine='fused', got {engine!r}")

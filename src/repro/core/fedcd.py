@@ -51,12 +51,18 @@ from repro.core.plan import RoundPlanner
 from repro.core.registry import ModelRegistry
 from repro.core.scores import (init_scores, normalized_scores,
                                push_accuracies)
+from repro.data.bank import DeviceDataBank
 from repro.federated.executors import (BatchedExecutor, FusedExecutor,
-                                       LegacyExecutor, ShardedExecutor)
+                                       LegacyExecutor, Sharded2DExecutor,
+                                       ShardedExecutor)
 from repro.federated.simulation import draw_round_sample
-from repro.launch.mesh import model_axis_size
+from repro.launch.mesh import data_axis_size, model_axis_size
 from repro.launch.sharding import bank_rows_per_shard, bank_shardings
 
+# the three MESHLESS engines (tests/benches iterate this tuple);
+# engine="sharded" additionally names the fused data plane dispatched
+# over a launch mesh — it REQUIRES mesh=, and passing a mesh with
+# engine="fused" selects it too (back-compat spelling)
 ENGINES = ("fused", "batched", "legacy")
 
 LIFECYCLE_STREAM = 0xFEDCD   # keys the clone-noise RNG off the sampling one
@@ -81,14 +87,23 @@ class FedCDServer:
                  data: Dict[str, Any], batch_size: int = 64,
                  use_agg_kernel: bool = False, engine: str = "fused",
                  mesh: Any = None, pipeline: bool = False,
-                 sparse_eval: Optional[float] = None):
+                 sparse_eval: Optional[float] = None,
+                 scenario: Any = None,
+                 migrate_threshold: Optional[float] = None):
         """data: stacked device splits from ``partition.stack_devices``:
-        {"train": (xs (N,n,...), ys), "val": ..., "test": ...}.
+        {"train": (xs (N,n,...), ys), "val": ..., "test": ...}. The
+        fused-family engines wrap it into a device-resident
+        :class:`~repro.data.bank.DeviceDataBank` (DESIGN.md §11).
 
-        ``mesh``: a 1-D ``model``-axis mesh (``launch.mesh.
-        make_model_mesh``) selects the SHARDED fused data plane
-        (DESIGN.md §9). Requires ``engine="fused"`` and ``max_models``
-        divisible by the mesh's model-axis size.
+        ``mesh``: a launch mesh (``launch.mesh.make_launch_mesh`` /
+        ``make_model_mesh``) selects the SHARDED data plane: the param
+        bank's rows over the ``model`` axis (DESIGN.md §9) and, when
+        the mesh's ``data`` axis is >1, the data bank's rows over
+        ``data`` with work pairs bucketed per mesh cell (DESIGN.md
+        §11). ``engine="sharded"`` names this plane explicitly (it
+        requires ``mesh=``); ``engine="fused"`` with a mesh is the
+        back-compat spelling. ``max_models`` must divide over the
+        model axis and the data-bank rows over the data axis.
 
         ``pipeline``: cross-round pipelined dispatch (fused/sharded
         engines): round t+1's training is speculatively enqueued while
@@ -96,9 +111,25 @@ class FedCDServer:
 
         ``sparse_eval``: density crossover below which validation
         scoring goes holder-only instead of the dense (stale, N)
-        matrix (DESIGN.md §10)."""
-        if engine not in ENGINES:
-            raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
+        matrix (DESIGN.md §10).
+
+        ``scenario``: a :class:`~repro.data.scenarios.ChurnSchedule`
+        makes the device population DYNAMIC — joins/leaves/label drift
+        apply at each round's start as device-lifecycle intents
+        alongside the model clone/delete intents (DESIGN.md §11).
+        Fused-family engines only.
+
+        ``migrate_threshold``: sharded engines — migrate a hot bank row
+        between rounds when a shard's pair-load EWMA exceeds this
+        multiple of the mean (``StackedParamBank.rebalance``)."""
+        if engine not in ENGINES + ("sharded",):
+            raise ValueError(
+                f"engine must be one of {ENGINES + ('sharded',)}: "
+                f"{engine!r}")
+        if engine == "sharded":
+            if mesh is None:
+                raise ValueError("engine='sharded' requires mesh=")
+            engine = "fused"             # one fused data plane, meshed
         if mesh is not None and engine != "fused":
             raise ValueError(
                 f"mesh sharding requires engine='fused', got {engine!r}")
@@ -108,6 +139,14 @@ class FedCDServer:
         if sparse_eval is not None and engine != "fused":
             raise ValueError(
                 f"sparse_eval requires engine='fused', got {engine!r}")
+        if scenario is not None and engine != "fused":
+            raise ValueError(
+                f"scenario churn requires engine='fused', got {engine!r}")
+        if migrate_threshold is not None and mesh is None:
+            raise ValueError("migrate_threshold requires mesh=")
+        if use_agg_kernel and mesh is not None and data_axis_size(mesh) > 1:
+            raise ValueError(
+                "use_agg_kernel is unsupported with a sharded data axis")
         self.cfg = cfg
         # Two host RNG streams (DESIGN.md §7): ``rng`` drives round
         # sampling (participation + perms) ONLY, so the fused engine can
@@ -117,15 +156,34 @@ class FedCDServer:
         self.life_rng = np.random.default_rng([cfg.seed, LIFECYCLE_STREAM])
         self.data = data
         self.batch_size = batch_size
-        self.n_devices = data["train"][0].shape[0]
-        assert self.n_devices == cfg.n_devices, (self.n_devices, cfg.n_devices)
+        n_initial = data["train"][0].shape[0]
+        assert n_initial == cfg.n_devices, (n_initial, cfg.n_devices)
         self.mesh = mesh
         self.engine = engine
         self.pipeline = pipeline
         self.use_agg_kernel = use_agg_kernel
+        self.scenario = scenario
+        self.migrate_threshold = migrate_threshold
         self._n_shards = model_axis_size(mesh) if mesh is not None else 0
         self._rows_per_shard = (bank_rows_per_shard(cfg.max_models, mesh)
                                 if mesh is not None else 0)
+        # device-id space (DESIGN.md §11): ids are control plane and
+        # never reused, so the score state sizes to every id the
+        # scenario can ever create; data ROWS are bank layout and are
+        # reused. Static populations keep id space == row space == N.
+        self.n_devices = n_initial + (scenario.total_joins
+                                      if scenario is not None else 0)
+        self.present = np.zeros(self.n_devices, bool)
+        self.present[:n_initial] = True
+        self._churn_rng = (scenario.make_rng()
+                           if scenario is not None else None)
+        self.databank = (DeviceDataBank(
+            data, n_cap=(scenario.row_capacity(n_initial)
+                         if scenario is not None else None),
+            id_cap=self.n_devices,
+            mesh=(mesh if mesh is not None and data_axis_size(mesh) > 1
+                  else None))
+            if engine == "fused" else None)
         # only the fused engine stores params device-resident: the
         # legacy/batched baselines keep PR 1's host dict storage so the
         # engine benchmark compares against them as shipped
@@ -134,8 +192,10 @@ class FedCDServer:
             shardings=(bank_shardings(mesh, init_params)
                        if mesh is not None else None),
             n_shards=max(self._n_shards, 1))
-        self.state = init_scores(cfg.n_devices, cfg.max_models,
+        self.state = init_scores(self.n_devices, cfg.max_models,
                                  cfg.score_window)
+        # ids beyond the initial population haven't joined yet
+        self.state.active[n_initial:, :] = False
         self.planner = RoundPlanner(cfg, sparse_eval=sparse_eval)
         self.executor = self._make_executor(loss_fn, acc_fn)
         self.metrics: List[RoundMetrics] = []
@@ -153,12 +213,17 @@ class FedCDServer:
     def _make_executor(self, loss_fn: Callable, acc_fn: Callable):
         if self.engine == "fused":
             if self.mesh is not None:
-                return ShardedExecutor(
-                    self.cfg, self.registry, self.data, loss_fn, acc_fn,
-                    self.mesh, use_agg_kernel=self.use_agg_kernel,
-                    pipeline=self.pipeline)
+                cls = (Sharded2DExecutor
+                       if data_axis_size(self.mesh) > 1
+                       else ShardedExecutor)
+                return cls(
+                    self.cfg, self.registry, self.databank, loss_fn,
+                    acc_fn, self.mesh,
+                    use_agg_kernel=self.use_agg_kernel,
+                    pipeline=self.pipeline,
+                    migrate_threshold=self.migrate_threshold)
             return FusedExecutor(
-                self.cfg, self.registry, self.data, loss_fn, acc_fn,
+                self.cfg, self.registry, self.databank, loss_fn, acc_fn,
                 use_agg_kernel=self.use_agg_kernel,
                 pipeline=self.pipeline)
         cls = (BatchedExecutor if self.engine == "batched"
@@ -179,13 +244,19 @@ class FedCDServer:
         return qz.roundtrip(params, self.cfg.quantize_bits)
 
     # -- round sampling ----------------------------------------------------
-    def _draw_sample(self) -> Tuple[np.ndarray, np.ndarray]:
+    def _draw_sample(self, present: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
         """One round's participation mask + minibatch perms (shared by all
-        models — every engine consumes the sampling stream identically)."""
+        models — every engine consumes the sampling stream identically).
+        ``present`` overrides the current presence mask (the prefetch
+        passes the NEXT round's post-churn population, which is
+        computable because the schedule is scripted — DESIGN.md §11)."""
         return draw_round_sample(self.rng, self.n_devices,
                                  self.cfg.devices_per_round,
                                  self.data["train"][0].shape[1],
-                                 self.batch_size, self.cfg.local_epochs)
+                                 self.batch_size, self.cfg.local_epochs,
+                                 present=(self.present if present is None
+                                          else present))
 
     def _round_sample(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
         if self._prefetch is not None and self._prefetch[0] == t:
@@ -194,19 +265,75 @@ class FedCDServer:
             return sample
         return self._draw_sample()
 
+    # -- device churn (DESIGN.md §11) --------------------------------------
+    def _present_after(self, t: int) -> np.ndarray:
+        """The presence mask once round ``t``'s scheduled churn applies,
+        WITHOUT applying it (joins claim sequential ids)."""
+        mask = self.present.copy()
+        if self.scenario is None or not self.scenario.has_events(t):
+            return mask
+        for e in self.scenario.leaves_at(t):
+            mask[e.device] = False
+        nid = self.databank.next_id
+        for _ in self.scenario.joins_at(t):
+            mask[nid] = True
+            nid += 1
+        return mask
+
+    def _apply_churn(self, t: int) -> Tuple[List[int], List[int]]:
+        """Resolve round ``t``'s device-lifecycle intents at round start
+        (leaves → joins → drifts, the scenarios-module contract). A
+        joining device activates every live model with an empty score
+        window (raw score 1.0 — the paper's init); a leaving device's
+        preferences clear and its data-bank slot frees for reuse; a
+        drifting device's splits rewrite in place and its score window
+        resets (its history scored the OLD distribution)."""
+        if self.scenario is None or not self.scenario.has_events(t):
+            return [], []
+        joined: List[int] = []
+        left: List[int] = []
+        drifted: List[int] = []
+        for e in self.scenario.leaves_at(t):
+            d = e.device
+            self.present[d] = False
+            self.state.active[d, :] = False
+            self.state.history[d] = np.nan
+            self.databank.remove(d)
+            left.append(d)
+        for e in self.scenario.joins_at(t):
+            dev = self.scenario.make_device(self._churn_rng, e.archetype)
+            d = self.databank.add(dev)
+            self.present[d] = True
+            for m in self.registry.live_ids():
+                self.state.active[d, m] = True
+            joined.append(d)
+        for e in self.scenario.drifts_at(t):
+            self.databank.update(
+                e.device,
+                self.scenario.make_device(self._churn_rng, e.archetype))
+            self.state.history[e.device] = np.nan
+            drifted.append(e.device)
+        self.executor.on_churn(joined, left, drifted)
+        return joined, left
+
     # -- Algorithm 1 -------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
         t0 = time.time()
         cfg = self.cfg
+        joined, left = self._apply_churn(t)
         sample = self._round_sample(t)
         c = normalized_scores(self.state)
 
+        churn_next = (self.scenario is not None
+                      and self.scenario.has_events(t + 1))
         plan = self.planner.build(t, sample, c, self.state, self.registry,
-                                  self.executor.plan_hints())
+                                  self.executor.plan_hints(),
+                                  churn=(joined, left),
+                                  churn_next=churn_next)
         self.executor.launch(plan)
         # overlap: draw round t+1's participation + perms while the
         # dispatched work is still executing (ROADMAP: async sampling)
-        self._prefetch = (t + 1, self._draw_sample())
+        self._prefetch = (t + 1, self._draw_sample(self._present_after(t + 1)))
         if self.pipeline:
             # cross-round speculation: enqueue round t+1's training from
             # the prefetched sample + pre-lifecycle state (DESIGN.md §10)
@@ -236,14 +363,14 @@ class FedCDServer:
         preferred = np.argmax(np.where(self.state.active, c, -1.0), axis=1)
         test_acc, val_acc = self.executor.collect(preferred)
         stds = []
-        for i in range(self.n_devices):
+        for i in np.nonzero(self.present)[0]:
             ci = c[i, self.state.active[i]]
             stds.append(ci.std() if ci.size else 0.0)
         return RoundMetrics(
             round=t, test_acc=test_acc, val_acc=val_acc,
             active_models=int(self.state.active.sum()),
             live_models=len(self.registry.live_ids()),
-            score_std=float(np.mean(stds)),
+            score_std=float(np.mean(stds)) if stds else 0.0,
             comm_bytes=self._transport_bytes(transfers),
             wall_s=wall, preferred=preferred)
 

@@ -61,6 +61,13 @@ class RoundPlan:
     val_pair_device: List[int] = field(default_factory=list)
     clone_milestone: bool = False    # pending lifecycle intent
     speculative: bool = False        # built from pre-lifecycle state
+    # device-lifecycle intents (DESIGN.md §11): churn already applied
+    # at THIS round's start, and whether the NEXT round has scheduled
+    # churn (the pipelined executors skip speculation across it — the
+    # cohort and data rows it would train against are about to change)
+    device_joins: List[int] = field(default_factory=list)
+    device_leaves: List[int] = field(default_factory=list)
+    churn_next: bool = False
 
     def pairs(self) -> List[Tuple[int, int]]:
         return list(zip(self.pair_model, self.pair_device))
@@ -140,20 +147,28 @@ class RoundPlanner:
     def build(self, t: int, sample: Tuple[np.ndarray, np.ndarray],
               scores: np.ndarray, state: ScoreState,
               registry: ModelRegistry,
-              hints: Optional[EvalHints] = None) -> RoundPlan:
+              hints: Optional[EvalHints] = None,
+              churn: Optional[Tuple[List[int], List[int]]] = None,
+              churn_next: bool = False) -> RoundPlan:
+        """``churn``: the (joined ids, left ids) applied at this round's
+        start; ``churn_next``: whether round t+1 has scheduled device
+        lifecycle events (consumed by the speculation guard)."""
         participating, perms = sample
         agg_models, pair_model, pair_device, transfers = gather_pairs(
             state, registry, participating)
         live = registry.live_ids()
         val_stale, test_stale = self._eval_sets(state, live, agg_models,
                                                 hints)
+        joins, leaves = churn if churn is not None else ([], [])
         plan = RoundPlan(
             round=t, participating=participating, perms=perms,
             scores=scores, live=live, agg_models=agg_models,
             pair_model=pair_model, pair_device=pair_device,
             transfers=transfers, val_stale=val_stale,
             test_stale=test_stale,
-            clone_milestone=t in self.cfg.milestones)
+            clone_milestone=t in self.cfg.milestones,
+            device_joins=list(joins), device_leaves=list(leaves),
+            churn_next=churn_next)
         self._sparse_val(plan, state)
         return plan
 

@@ -176,6 +176,78 @@ class StackedParamBank:
         self._present.discard(m)
         return default
 
+    # -- row migration (work rebalancing, DESIGN.md §11) -------------------
+    def migrate(self, m: int, dest_shard: int) -> int:
+        """Move a present model's row to ``dest_shard``: one
+        device-to-device row copy inside the bank plus a ``row_of``
+        update — pure layout, so a migration round is bit-identical in
+        discrete state to a no-migration round (the equivalence test
+        pins this). The vacated row is freed for later placements (the
+        model still occupies exactly one row, so ``m_cap`` still bounds
+        models ever created); the version bump invalidates any
+        speculative train batch built on the old placement."""
+        if m not in self._present:
+            raise KeyError(m)
+        rps = self.rows_per_shard
+        r_old = self.row_of[m]
+        free = [r for r in range(dest_shard * rps, (dest_shard + 1) * rps)
+                if r not in self._used_rows]
+        if not free:
+            raise IndexError(f"shard {dest_shard} has no free row")
+        r_new = free[0]
+        self._retired.append(self.tree)    # see :meth:`swap`
+        self.tree = jax.tree.map(lambda a: a.at[r_new].set(a[r_old]),
+                                 self.tree)
+        if self.shardings is not None:
+            self.tree = jax.device_put(self.tree, self.shardings)
+        self._used_rows.discard(r_old)
+        self._used_rows.add(r_new)
+        self.row_of[m] = r_new
+        self.version += 1
+        return r_new
+
+    def rebalance(self, threshold: float) -> "list[tuple[int, int, int]]":
+        """Migrate at most ONE row per call off the hottest shard when
+        its pair-load EWMA exceeds ``threshold ×`` the mean load
+        (ROADMAP: existing hot rows never moved after placement; new-row
+        placement alone cannot drain an already-hot shard). The moved
+        model is the hot shard's most recently placed one (highest id —
+        the row whose placement the EWMA least informed), the
+        destination is the coldest shard with a free row. The whole
+        EWMA then RESETS: the observed loads described the old
+        placement, and discarding them both rules out a migration
+        cascade (no trigger until fresh load accumulates) and hands
+        placement back to the population-count fallback meanwhile.
+        Returns ``[(model, from_shard, to_shard)]`` (empty when
+        balanced)."""
+        mean = float(self.load_ewma.mean())
+        if mean <= 1e-9 or self.n_shards < 2:
+            return []
+        hot = int(np.argmax(self.load_ewma))
+        if float(self.load_ewma[hot]) <= threshold * mean:
+            return []
+        rps = self.rows_per_shard
+        residents = [m for m in self._present
+                     if self.row_of[m] // rps == hot]
+        if len(residents) < 2:
+            return []                    # nothing to drain
+        dest = None
+        for s in range(self.n_shards):
+            if s == hot:
+                continue
+            block = range(s * rps, (s + 1) * rps)
+            if all(r in self._used_rows for r in block):
+                continue
+            key = (self._hotness(s), float(self.load_ewma[s]), s)
+            if dest is None or key < dest[0]:
+                dest = (key, s)
+        if dest is None:
+            return []
+        m = max(residents)
+        self.migrate(m, dest[1])
+        self.load_ewma[:] = 0.0
+        return [(m, hot, dest[1])]
+
     def swap(self, new_tree: Any) -> None:
         """Adopt ``new_tree`` as the bank (the fused step's output; the
         previous tree was donated into that step and is dead). Row

@@ -1,0 +1,199 @@
+"""Device-resident data bank: the data-plane twin of the model plane's
+``StackedParamBank`` (DESIGN.md §11).
+
+The bank holds every device's train/val/test splits as ONE stacked
+pytree per split with a static leading ``(n_cap,)`` row axis, resident
+on the accelerators. With ``mesh`` (a 2-D ``(model × data)`` launch
+mesh from ``launch.mesh.make_launch_mesh``) each leaf's row axis is
+laid out over the mesh's ``data`` axis — every ``data``-axis slice
+owns a contiguous block of ``rows_per_shard`` device rows and the 2-D
+sharded engine only ever trains/evaluates against its resident block,
+so device splits are no longer replicated per model shard (the last
+replicated structure in the system).
+
+**Row placement.** Device id (control plane — stable for a device's
+lifetime, what plans and score state index) and data row (layout) are
+decoupled by ``row_of``. A joining device's rows land on the data
+shard with the fewest PRESENT devices (ties break low), mirroring the
+model bank's least-loaded placement. Unlike model rows — which are
+never recycled because ``m_cap`` bounds models EVER created — device
+slots are REUSED: a leaving device frees its row and a later join may
+write over it (``n_cap`` bounds *concurrent* devices, not total ids,
+which is what lets a long churn scenario run in fixed device memory).
+With one data shard and no churn the map is the identity, which is why
+the legacy/batched/fused engines and every pre-existing equivalence
+oracle see exactly the PR 1 ``partition.stack_devices`` layout.
+
+``version`` counts row WRITES (joins reusing a slot, label-drift
+rewrites): the pipelined executors record it when they speculate a
+next-round training dispatch and invalidate the speculation when the
+data under it was rewritten (leaves need no bump — a departed device's
+pairs drop out of the true plan and repair zero-weights them, see
+DESIGN.md §10/§11).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import DeviceData
+
+SPLITS = ("train", "val", "test")
+
+
+class DeviceDataBank:
+    def __init__(self, data: Dict[str, Tuple[np.ndarray, np.ndarray]],
+                 n_cap: Optional[int] = None, id_cap: Optional[int] = None,
+                 mesh: Any = None):
+        """``data``: stacked device splits from ``partition.
+        stack_devices`` — the initial population, placed on rows
+        0..N-1 (identity map). ``n_cap``: total data rows (≥ N,
+        divisible by the mesh's data axis; rounded up when omitted).
+        ``id_cap``: device-id space size (≥ N; ids above the initial
+        population are claimed by :meth:`add`)."""
+        n0 = data["train"][0].shape[0]
+        self.n_shards = 1
+        self.shardings = None
+        if mesh is not None:
+            self.n_shards = mesh.shape.get("data", 1)
+        cap = n_cap if n_cap is not None else n0
+        # round capacity up so rows divide evenly over the data shards
+        cap = -(-cap // self.n_shards) * self.n_shards
+        if cap < n0:
+            raise ValueError(f"n_cap={n_cap} < {n0} initial devices")
+        self.n_cap = cap
+        self.id_cap = id_cap if id_cap is not None else max(cap, n0)
+        if self.id_cap < n0:
+            raise ValueError(f"id_cap={id_cap} < {n0} initial devices")
+        if mesh is not None:
+            from repro.launch.sharding import data_rows_per_shard
+            self.rows_per_shard = data_rows_per_shard(cap, mesh)
+        else:
+            self.rows_per_shard = cap
+
+        def stack(x):
+            x = np.asarray(x)
+            if cap == n0:
+                return jnp.asarray(x)
+            pad = np.zeros((cap - n0,) + x.shape[1:], x.dtype)
+            return jnp.asarray(np.concatenate([x, pad], axis=0))
+
+        self.splits = {k: (stack(x), stack(y)) for k, (x, y) in data.items()}
+        if mesh is not None:
+            from repro.launch.sharding import data_bank_shardings
+            self.shardings = data_bank_shardings(mesh, self.splits)
+            self.splits = jax.device_put(self.splits, self.shardings)
+        self.row_of: Dict[int, int] = {d: d for d in range(n0)}
+        self._row_owner: Dict[int, int] = {d: d for d in range(n0)}
+        self._present: set = set(range(n0))
+        self._next_id = n0
+        self.version = 0
+
+    # -- introspection ------------------------------------------------------
+    def __contains__(self, device_id: int) -> bool:
+        return device_id in self._present
+
+    def present_ids(self) -> List[int]:
+        return sorted(self._present)
+
+    @property
+    def n_present(self) -> int:
+        return len(self._present)
+
+    @property
+    def next_id(self) -> int:
+        """The id the next :meth:`add` will claim (ids are sequential,
+        which is what makes future presence masks computable)."""
+        return self._next_id
+
+    def shard_of(self, device_id: int) -> int:
+        return self.row_of[device_id] // self.rows_per_shard
+
+    def identity_map(self) -> bool:
+        """True while device id == data row for every present device —
+        the no-churn fast path the single-device engines rely on."""
+        return all(self.row_of[d] == d for d in self._present)
+
+    def nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.splits))
+
+    def bytes_per_shard(self) -> int:
+        """Device-split bytes resident per data shard — the quantity the
+        2-D mesh shrinks S_data× versus the replicated layout."""
+        return self.nbytes() // self.n_shards
+
+    # -- placement ----------------------------------------------------------
+    def _alloc_row(self) -> int:
+        """Least-loaded data shard (fewest present rows, ties low), then
+        the lowest free row inside it — freed slots are REUSED (class
+        docstring)."""
+        used = {self.row_of[d] for d in self._present}
+        best = None
+        for s in range(self.n_shards):
+            block = range(s * self.rows_per_shard,
+                          (s + 1) * self.rows_per_shard)
+            free = [r for r in block if r not in used]
+            if not free:
+                continue
+            key = (len(block) - len(free), s)
+            if best is None or key < best[0]:
+                best = (key, free[0])
+        if best is None:
+            raise IndexError(f"data bank is full (n_cap={self.n_cap})")
+        return best[1]
+
+    # -- row writes ---------------------------------------------------------
+    def _write_row(self, r: int, device: DeviceData) -> None:
+        new = {}
+        for k in SPLITS:
+            xs, ys = self.splits[k]
+            x, y = getattr(device, k)
+            if x.shape != xs.shape[1:]:
+                raise ValueError(
+                    f"{k} split shape {x.shape} != bank row {xs.shape[1:]}")
+            new[k] = (xs.at[r].set(jnp.asarray(x, xs.dtype)),
+                      ys.at[r].set(jnp.asarray(y, ys.dtype)))
+        self.splits = new
+        if self.shardings is not None:
+            # route the write to the owning data shard (the eager
+            # scatter's output layout is whatever GSPMD picked)
+            self.splits = jax.device_put(self.splits, self.shardings)
+        self.version += 1
+
+    def add(self, device: DeviceData) -> int:
+        """A device joins: claim the next device id, place its splits on
+        the least-loaded shard (reusing a freed slot when one exists),
+        and return the id."""
+        if self._next_id >= self.id_cap:
+            raise IndexError(f"device id space full (id_cap={self.id_cap})")
+        d = self._next_id
+        self._next_id += 1
+        r = self._alloc_row()
+        stale = self._row_owner.get(r)
+        if stale is not None and stale != d:
+            self.row_of.pop(stale, None)      # slot reuse: drop the old map
+        self.row_of[d] = r
+        self._row_owner[r] = d
+        self._present.add(d)
+        self._write_row(r, device)
+        return d
+
+    def update(self, device_id: int, device: DeviceData) -> None:
+        """Label drift: rewrite a present device's splits in place."""
+        if device_id not in self._present:
+            raise KeyError(device_id)
+        self._write_row(self.row_of[device_id], device)
+
+    def remove(self, device_id: int) -> None:
+        """A device leaves: free its slot for reuse. Its rows keep their
+        (now unreachable) data — in-flight speculative batches may still
+        read them, and repair zero-weights those pairs (DESIGN.md §10)."""
+        if device_id not in self._present:
+            raise KeyError(device_id)
+        self._present.discard(device_id)
+        # row_of keeps the stale mapping until the slot is reused, so a
+        # reader resolving a just-departed device still finds its column

@@ -1,0 +1,152 @@
+"""Dynamic device populations: churn schedules for the data plane.
+
+The paper's premise is a *changing* fleet of edge devices, but until
+PR 5 every scenario ran a fixed population. A :class:`ChurnSchedule`
+scripts the device lifecycle — joins (a new device with a fresh
+non-IID split enters), leaves (a device departs; its data-bank slot is
+freed for reuse) and label drift (a device's local distribution shifts
+to a new archetype) — as per-round intents the control plane consumes
+alongside FedCD's model clone/delete intents (DESIGN.md §11).
+
+Determinism contract: the schedule is resolved entirely host-side at
+round START, in a fixed order (leaves → joins → drifts), drawing data
+for joins/drifts from a dedicated churn RNG stream seeded off the
+schedule — never off an engine's dispatch order. Every engine
+(fused / sharded / pipelined) therefore sees the identical population
+trajectory on the same schedule, which is what the churn equivalence
+tier pins. Joining devices claim monotonically increasing device ids
+(ids are control plane and never reused; data ROWS are reused —
+``data.bank.DeviceDataBank``), so the future present-set of any round
+is computable without applying it — the sampling prefetch and the
+pipelined executors' speculation guards rely on that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data.partition import (DeviceData, dirichlet_probs,
+                                  hierarchical_probs, hypergeometric_probs,
+                                  make_device)
+
+CHURN_STREAM = 0xC4A12   # keys the churn-data RNG off the schedule seed
+
+
+@dataclass(frozen=True)
+class DeviceJoin:
+    round: int
+    archetype: int
+
+
+@dataclass(frozen=True)
+class DeviceLeave:
+    round: int
+    device: int
+
+
+@dataclass(frozen=True)
+class LabelDrift:
+    round: int
+    device: int
+    archetype: int
+
+
+@dataclass
+class ChurnSchedule:
+    """A scripted device lifecycle + the recipe for generating the data
+    of joining/drifting devices (split sizes must match the base
+    population's — the bank validates row shapes on write)."""
+    events: Tuple = ()
+    partition: str = "hierarchical"   # hierarchical|hypergeometric|dirichlet
+    seed: int = 0
+    bias: float = 0.65                # hierarchical archetype bias
+    alpha: float = 0.5                # dirichlet concentration
+    n_train: int = 64
+    n_val: int = 32
+    n_test: int = 32
+    noise: float = 2.0
+    _by_round: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        for e in self.events:
+            self._by_round.setdefault(e.round, []).append(e)
+
+    def make_rng(self) -> np.random.Generator:
+        return np.random.default_rng([self.seed, CHURN_STREAM])
+
+    @property
+    def total_joins(self) -> int:
+        return sum(1 for e in self.events if isinstance(e, DeviceJoin))
+
+    def row_capacity(self, n_initial: int) -> int:
+        """Upper bound on concurrent devices: every join before any
+        leave (slot reuse only shrinks the real requirement)."""
+        return n_initial + self.total_joins
+
+    def has_events(self, t: int) -> bool:
+        return t in self._by_round
+
+    def last_round(self) -> int:
+        return max((e.round for e in self.events), default=0)
+
+    def joins_at(self, t: int) -> List[DeviceJoin]:
+        return [e for e in self._by_round.get(t, ())
+                if isinstance(e, DeviceJoin)]
+
+    def leaves_at(self, t: int) -> List[DeviceLeave]:
+        return [e for e in self._by_round.get(t, ())
+                if isinstance(e, DeviceLeave)]
+
+    def drifts_at(self, t: int) -> List[LabelDrift]:
+        return [e for e in self._by_round.get(t, ())
+                if isinstance(e, LabelDrift)]
+
+    def archetype_probs(self, archetype: int) -> np.ndarray:
+        if self.partition == "hierarchical":
+            return hierarchical_probs(archetype, self.bias)
+        if self.partition == "hypergeometric":
+            return hypergeometric_probs(archetype)
+        if self.partition == "dirichlet":
+            # deterministic per-archetype draw so a drift target's
+            # distribution doesn't depend on event interleaving
+            rng = np.random.default_rng([self.seed, archetype])
+            return dirichlet_probs(rng, self.alpha)
+        raise ValueError(f"unknown partition {self.partition!r}")
+
+    def make_device(self, rng: np.random.Generator,
+                    archetype: int) -> DeviceData:
+        return make_device(rng, archetype, self.archetype_probs(archetype),
+                           self.n_train, self.n_val, self.n_test,
+                           self.noise)
+
+
+def random_churn(rounds: int, n_initial: int, seed: int = 0,
+                 join_rate: float = 0.3, leave_rate: float = 0.2,
+                 drift_rate: float = 0.1, min_devices: int = 2,
+                 n_archetypes: int = 10, first_round: int = 2,
+                 **schedule_kw) -> ChurnSchedule:
+    """A deterministic random schedule: each round independently draws a
+    join (fresh archetype), a leave (uniform over the devices that would
+    be present, floored at ``min_devices``), and a drift. Built entirely
+    at schedule-construction time so the run itself stays scripted."""
+    rng = np.random.default_rng([seed, 0x5C4ED])
+    present = list(range(n_initial))
+    next_id = n_initial
+    events: List = []
+    for t in range(first_round, rounds + 1):
+        stayers = list(present)     # valid leave/drift targets this round
+        if rng.random() < leave_rate and len(present) > min_devices:
+            d = stayers.pop(int(rng.integers(len(stayers))))
+            events.append(DeviceLeave(t, d))
+            present.remove(d)
+        if rng.random() < join_rate:
+            events.append(DeviceJoin(t, int(rng.integers(n_archetypes))))
+            present.append(next_id)
+            stayers.append(next_id)  # drifting a same-round join is fine
+            next_id += 1
+        if rng.random() < drift_rate and stayers:
+            d = stayers[int(rng.integers(len(stayers)))]
+            events.append(LabelDrift(t, d, int(rng.integers(n_archetypes))))
+    return ChurnSchedule(events=tuple(events), seed=seed, **schedule_kw)

@@ -44,12 +44,19 @@ from repro.core import quantize as qz
 from repro.core.aggregate import multi_weighted_average, weighted_average
 from repro.core.plan import EvalHints, RoundPlan
 from repro.core.registry import ModelRegistry
+from repro.data.bank import DeviceDataBank
 from repro.federated.simulation import (bucket_size, make_eval,
                                         make_fused_apply, make_fused_eval,
                                         make_fused_finish,
                                         make_fused_round, make_group_eval,
                                         make_group_train, make_local_train,
                                         make_pair_eval, make_pair_train,
+                                        make_sharded2d_apply,
+                                        make_sharded2d_eval,
+                                        make_sharded2d_finish,
+                                        make_sharded2d_pair_eval,
+                                        make_sharded2d_round,
+                                        make_sharded2d_train,
                                         make_sharded_apply,
                                         make_sharded_eval,
                                         make_sharded_fedavg_finish,
@@ -60,8 +67,9 @@ from repro.federated.simulation import (bucket_size, make_eval,
                                         make_sharded_round,
                                         make_sharded_train, pad_live_rows,
                                         pad_work_batch, shard_eval_pairs,
+                                        shard_eval_pairs_2d, shard_pairs_2d,
                                         shard_rows, shard_work_batch)
-from repro.launch.mesh import model_axis_size
+from repro.launch.mesh import data_axis_size, model_axis_size
 from repro.launch.sharding import bank_rows_per_shard
 
 
@@ -110,11 +118,14 @@ class RoundExecutor:
     stats: Optional[PipelineStats] = None
 
     def __init__(self, cfg: FedCDConfig, registry: ModelRegistry,
-                 data: Dict[str, Any]):
+                 data: Any):
         self.cfg = cfg
         self.registry = registry
         self.data = data
-        self.n_devices = data["train"][0].shape[0]
+        self.databank = data if isinstance(data, DeviceDataBank) else None
+        self.n_devices = (self.databank.id_cap
+                          if self.databank is not None
+                          else data["train"][0].shape[0])
         self._result: Optional[RoundResult] = None
 
     # -- contract ---------------------------------------------------------
@@ -133,6 +144,10 @@ class RoundExecutor:
 
     def on_clones(self, cloned: List[Tuple[int, int]]) -> None:
         pass
+
+    def on_churn(self, joined: List[int], left: List[int],
+                 drifted: List[int]) -> None:
+        pass                             # device-lifecycle hook
 
     def collect(self, preferred: np.ndarray
                 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -286,10 +301,13 @@ class FusedExecutor(RoundExecutor):
     def __init__(self, cfg, registry, data, loss_fn, acc_fn,
                  use_agg_kernel: bool = False, pipeline: bool = False):
         super().__init__(cfg, registry, data)
+        if self.databank is None:
+            # adopt a bare stacked-splits dict as an identity-mapped
+            # single-shard data bank (DESIGN.md §11)
+            self.databank = self._make_bank(data)
+            self.n_devices = self.databank.id_cap
         self.pipeline = pipeline
         self.use_agg_kernel = use_agg_kernel
-        self._dev = {k: (jnp.asarray(x), jnp.asarray(y))
-                     for k, (x, y) in data.items()}
         self._build_programs(loss_fn, acc_fn)
         # eval-row caches: a model's params change ONLY when it trains
         # or is born, so its (N,) accuracy rows are reused bit-
@@ -300,7 +318,8 @@ class FusedExecutor(RoundExecutor):
         self._needs_refresh = False
         self._pending: Optional[Tuple[RoundPlan, Dict[str, Callable]]] = \
             None
-        self._spec: Optional[Tuple[RoundPlan, Any, TrainMeta, int]] = None
+        self._spec: Optional[Tuple[RoundPlan, Any, TrainMeta,
+                                   Tuple[int, int]]] = None
         self._spec_graveyard: List[Any] = []
         self._last_plan: Optional[RoundPlan] = None
         self.stats = PipelineStats() if pipeline else None
@@ -309,6 +328,16 @@ class FusedExecutor(RoundExecutor):
         # round — the split exists to decouple shape keys, and a stable
         # key turns per-round retraces into cache hits (DESIGN.md §10)
         self._row_floor = 4 if pipeline else 1
+
+    def _make_bank(self, data: Dict[str, Any]) -> DeviceDataBank:
+        return DeviceDataBank(data)
+
+    @property
+    def _dev(self):
+        """The CURRENT device-resident splits. A property, not a cached
+        reference: the bank replaces its split arrays on every churn
+        row write, and a dispatch must read the post-churn data."""
+        return self.databank.splits
 
     def _build_programs(self, loss_fn, acc_fn) -> None:
         cfg = self.cfg
@@ -323,10 +352,45 @@ class FusedExecutor(RoundExecutor):
         self._finish = make_fused_finish(acc_fn, cfg.quantize_bits,
                                          self.use_agg_kernel)
 
+    # -- device id -> data row resolution (DESIGN.md §11) -----------------
+    def _drows(self, device_ids: List[int]) -> List[int]:
+        """Plans reference devices by ID; the bank's ``row_of`` resolves
+        the data rows at dispatch (identity while there is no churn)."""
+        row_of = self.databank.row_of
+        return [row_of[d] for d in device_ids]
+
+    def _to_id_row(self, vec: np.ndarray) -> np.ndarray:
+        """Map one eval-matrix row (indexed by data-bank row) to the
+        device-ID indexing the control plane uses. The full-fleet
+        identity fast path keeps the no-churn layout bit-identical to
+        PR 4; any absence forces the explicit map so DEPARTED devices'
+        columns read 0 identically on every engine (their stale rows
+        still compute values that must not leak into metrics)."""
+        bank = self.databank
+        if (bank.id_cap == bank.n_cap == bank.n_present
+                and bank.identity_map()):
+            return vec
+        out = np.zeros(self.n_devices, vec.dtype)
+        for d in bank.present_ids():
+            out[d] = vec[bank.row_of[d]]
+        return out
+
     # -- planning hints + lifecycle hooks ---------------------------------
     def plan_hints(self) -> EvalHints:
         return EvalHints(set(self._val_cache), set(self._test_cache),
                          list(self._pred_rows))
+
+    def on_churn(self, joined: List[int], left: List[int],
+                 drifted: List[int]) -> None:
+        """Joins and drifts rewrite data-bank rows, so every cached
+        per-model accuracy row holds stale columns — drop the caches
+        and let the next plan mark the population stale (one full
+        re-eval round, identical across engines). A pure leave changes
+        no data: the departed device's cached entries are simply never
+        read again (its active row is cleared)."""
+        if joined or drifted:
+            self._val_cache.clear()
+            self._test_cache.clear()
 
     def on_clones(self, cloned: List[Tuple[int, int]]) -> None:
         if not cloned:
@@ -368,9 +432,12 @@ class FusedExecutor(RoundExecutor):
                                TrainMeta]:
         """ONE bucketing of the work pairs shared by the monolithic
         round and the split train phase, so the sync and pipelined
-        programs can never see different batch schedules."""
+        programs can never see different batch schedules. ``d_idx``
+        entries are data-bank ROWS (resolved here, at dispatch); perms
+        stay device-ID-indexed — they are host control-plane state."""
         m_idx, d_idx, pperms = pad_work_batch(
-            pair_model, pair_device, [perms[d] for d in pair_device])
+            pair_model, self._drows(pair_device),
+            [perms[d] for d in pair_device])
         meta = TrainMeta(list(pair_model), list(pair_device), len(m_idx))
         return m_idx, d_idx, pperms, meta
 
@@ -393,7 +460,8 @@ class FusedExecutor(RoundExecutor):
     def _val_reader_dense(self, fut: Any, models: List[int]) -> Callable:
         def read() -> Dict[int, np.ndarray]:
             mat = np.asarray(fut)[:len(models)]
-            return {m: mat[j] for j, m in enumerate(models)}
+            return {m: self._to_id_row(mat[j])
+                    for j, m in enumerate(models)}
         return read
 
     def _val_reader_sparse(self, fut: Any, plan: RoundPlan,
@@ -422,7 +490,7 @@ class FusedExecutor(RoundExecutor):
         m_idx = np.zeros(p_pad, np.int32)
         m_idx[:p] = plan.val_pair_model
         d_idx = np.zeros(p_pad, np.int32)
-        d_idx[:p] = plan.val_pair_device
+        d_idx[:p] = self._drows(plan.val_pair_device)
         fut = self._pair_eval(self.registry.params.tree, m_idx, d_idx,
                               *self._dev["val"])
         return self._val_reader_sparse(fut, plan, list(range(p)))
@@ -553,14 +621,17 @@ class FusedExecutor(RoundExecutor):
     def _take_speculation(self, plan: RoundPlan
                           ) -> Optional[Tuple[Any, TrainMeta]]:
         """Consume the pending speculative train batch if it still
-        covers the true plan: deletions only shrink the pair set, so a
-        superset batch is repairable; clones add pairs and rewrite bank
-        rows, so version/pair mismatches retrain from scratch."""
+        covers the true plan: deletions and device leaves only shrink
+        the pair set, so a superset batch is repairable (dead pairs
+        aggregate with zero weight); clones add pairs and rewrite
+        PARAM bank rows, joins/drifts rewrite DATA bank rows — either
+        version mismatch retrains from scratch."""
         if self._spec is None:
             return None
-        spec_plan, trained, meta, version = self._spec
+        spec_plan, trained, meta, versions = self._spec
         if (spec_plan.round != plan.round
-                or self.registry.params.version != version):
+                or (self.registry.params.version,
+                    self.databank.version) != versions):
             self._discard_spec(invalidated=True)
             return None
         covered = set(zip(meta.pair_model, meta.pair_device))
@@ -578,9 +649,12 @@ class FusedExecutor(RoundExecutor):
         if not self.pipeline:
             return
         self._drop_speculation()
-        if self._last_plan is not None and self._last_plan.clone_milestone:
-            # pending lifecycle intent: the milestone's clones WILL
-            # rewrite bank rows and add pairs — don't burn a dispatch
+        if self._last_plan is not None and (
+                self._last_plan.clone_milestone
+                or self._last_plan.churn_next):
+            # pending lifecycle intent: milestone clones rewrite param
+            # rows and add pairs; next-round device churn rewrites data
+            # rows / changes the cohort — don't burn a dispatch
             self.stats.skipped += 1
             return
         if not plan.pair_model:
@@ -588,7 +662,9 @@ class FusedExecutor(RoundExecutor):
         trained, meta = self._dispatch_train(
             self.registry.params.tree, plan.pair_model,
             plan.pair_device, plan.perms)
-        self._spec = (plan, trained, meta, self.registry.params.version)
+        self._spec = (plan, trained, meta,
+                      (self.registry.params.version,
+                       self.databank.version))
         self.stats.speculated += 1
 
     # -- readback + collect -----------------------------------------------
@@ -621,7 +697,7 @@ class FusedExecutor(RoundExecutor):
         mat = np.asarray(self._eval(self.registry.params.tree,
                                     pad_live_rows(rows, self._row_floor),
                                     *self._dev[split]))
-        return mat[:len(rows)]
+        return np.stack([self._to_id_row(r) for r in mat[:len(rows)]])
 
     def _refresh_caches(self) -> None:
         """Quantized cloning made every clone's params differ from its
@@ -642,9 +718,14 @@ class FusedExecutor(RoundExecutor):
             self._needs_refresh = False
         entries = self.registry.entries
         wanted = [int(m) for m in preferred]
+        # departed (or not-yet-joined) devices report no accuracy: their
+        # cached columns may hold pre-leave values on one dispatch path
+        # and zeros on another, so presence gates the read (DESIGN.md
+        # §11)
         usable = [m if (m in entries and entries[m].alive
-                        and m in self._val_cache) else None
-                  for m in wanted]
+                        and m in self._val_cache
+                        and i in self.databank) else None
+                  for i, m in enumerate(wanted)]
         missing = sorted({m for m in usable
                           if m is not None and m not in self._test_cache})
         if missing:
@@ -673,12 +754,20 @@ class ShardedExecutor(FusedExecutor):
     placement every round."""
 
     def __init__(self, cfg, registry, data, loss_fn, acc_fn, mesh,
-                 use_agg_kernel: bool = False, pipeline: bool = False):
+                 use_agg_kernel: bool = False, pipeline: bool = False,
+                 migrate_threshold: Optional[float] = None):
         self.mesh = mesh
         self._n_shards = model_axis_size(mesh)
         self._rows_per_shard = bank_rows_per_shard(cfg.max_models, mesh)
+        self.migrate_threshold = migrate_threshold
+        self.migrations = 0
         super().__init__(cfg, registry, data, loss_fn, acc_fn,
                          use_agg_kernel, pipeline)
+
+    def _make_bank(self, data):
+        if data_axis_size(self.mesh) > 1:
+            return DeviceDataBank(data, mesh=self.mesh)
+        return DeviceDataBank(data)
 
     def _build_programs(self, loss_fn, acc_fn) -> None:
         cfg = self.cfg
@@ -703,6 +792,12 @@ class ShardedExecutor(FusedExecutor):
         for r in self._rows(plan.pair_model):
             counts[r // self._rows_per_shard] += 1
         self.registry.params.note_pair_load(counts)
+        if self.migrate_threshold is not None:
+            # rebalance BEFORE this round's bucketing so the moved
+            # row's pairs land on its new shard; the bank version bump
+            # invalidates any speculation built on the old placement
+            self.migrations += len(
+                self.registry.params.rebalance(self.migrate_threshold))
 
     def _shard_row_slots(self, bank_rows: List[int]
                          ) -> Tuple[np.ndarray, Dict[int, int]]:
@@ -720,7 +815,7 @@ class ShardedExecutor(FusedExecutor):
         # per-shard bucket floor scales down with the shard count: the
         # global work splits S ways (DESIGN.md §9)
         m_idx, d_idx, pperms, pair_groups, b_pad = shard_work_batch(
-            self._rows(pair_model), pair_device,
+            self._rows(pair_model), self._drows(pair_device),
             [perms[d] for d in pair_device], self._rows_per_shard,
             self._n_shards, minimum=max(8 // self._n_shards, 2))
         meta = TrainMeta(list(pair_model), list(pair_device), b_pad,
@@ -799,7 +894,8 @@ class ShardedExecutor(FusedExecutor):
 
         def read() -> Dict[int, np.ndarray]:
             mat = np.asarray(fut)         # the eval all-gather boundary
-            return {m: mat[pos[row_of[m]]] for m in models}
+            return {m: self._to_id_row(mat[pos[row_of[m]]])
+                    for m in models}
         return read
 
     def _dispatch_dense(self, models: List[int], split: str) -> Callable:
@@ -810,7 +906,8 @@ class ShardedExecutor(FusedExecutor):
 
     def _dispatch_sparse_val(self, plan: RoundPlan) -> Callable:
         m_idx, d_idx, groups, width = shard_eval_pairs(
-            self._rows(plan.val_pair_model), plan.val_pair_device,
+            self._rows(plan.val_pair_model),
+            self._drows(plan.val_pair_device),
             self._rows_per_shard, self._n_shards,
             minimum=max(8 // self._n_shards, 2))
         fut = self._pair_eval(self.registry.params.tree, m_idx, d_idx,
@@ -859,7 +956,116 @@ class ShardedExecutor(FusedExecutor):
         idx, pos = self._shard_row_slots(self._rows(rows))
         mat = np.asarray(self._eval(self.registry.params.tree, idx,
                                     *self._dev[split]))
-        return mat[[pos[row_of[m]] for m in rows]]
+        return np.stack([self._to_id_row(mat[pos[row_of[m]]])
+                         for m in rows])
+
+
+class Sharded2DExecutor(ShardedExecutor):
+    """The data plane on the full 2-D ``(model × data)`` launch mesh
+    (DESIGN.md §11): the param bank's rows shard over ``model`` exactly
+    as in :class:`ShardedExecutor`, the device data bank's rows shard
+    over ``data`` (splits are no longer replicated per model shard),
+    and dispatch-time bucketing groups work pairs by owning MESH CELL —
+    (model shard of the pair's bank row) × (data shard of the pair's
+    data row). Per PR 4's plan/executor split this is dispatch-layer
+    work only: the round/train/finish/apply programs share the 1-D
+    engine's signatures, so launch, speculation, repair, readback, and
+    the eval-row caches are all inherited unchanged. The one new
+    collective is the ``data``-axis psum completing eq 1 (a model's
+    holders may live on several data shards), which is why this
+    executor's params match the 1-data-shard oracle to reduction order
+    while its discrete state matches exactly."""
+
+    def __init__(self, cfg, registry, data, loss_fn, acc_fn, mesh,
+                 use_agg_kernel: bool = False, pipeline: bool = False,
+                 migrate_threshold: Optional[float] = None):
+        if use_agg_kernel:
+            raise ValueError(
+                "use_agg_kernel is unsupported with a sharded data axis "
+                "(eq 1 completes with a psum over partial sums)")
+        self._n_dshards = data_axis_size(mesh)
+        super().__init__(cfg, registry, data, loss_fn, acc_fn, mesh,
+                         use_agg_kernel=False, pipeline=pipeline,
+                         migrate_threshold=migrate_threshold)
+
+    def _build_programs(self, loss_fn, acc_fn) -> None:
+        cfg = self.cfg
+        self._round = make_sharded2d_round(loss_fn, acc_fn, cfg.lr,
+                                           self.mesh, cfg.quantize_bits)
+        self._eval = make_sharded2d_eval(acc_fn, self.mesh)
+        self._pair_eval = make_sharded2d_pair_eval(acc_fn, self.mesh)
+        self._train = make_sharded2d_train(loss_fn, cfg.lr, self.mesh)
+        self._apply = make_sharded2d_apply(self.mesh, cfg.quantize_bits)
+        self._finish = make_sharded2d_finish(acc_fn, self.mesh,
+                                             cfg.quantize_bits)
+
+    @property
+    def _n_cells(self) -> int:
+        return self._n_shards * self._n_dshards
+
+    def _batch_args(self, pair_model: List[int],
+                    pair_device: List[int], perms: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               TrainMeta]:
+        # the global work now splits Sm*Sd ways — scale the bucket
+        # floor with the cell count, not the model-shard count
+        m_idx, d_idx, pperms, cell_groups, b_pad = shard_pairs_2d(
+            self._rows(pair_model), self._drows(pair_device),
+            [perms[d] for d in pair_device], self._rows_per_shard,
+            self._n_shards, self.databank.rows_per_shard,
+            self._n_dshards, minimum=max(8 // self._n_cells, 2))
+        meta = TrainMeta(list(pair_model), list(pair_device), b_pad,
+                         cell_groups)
+        return m_idx, d_idx, pperms, meta
+
+    def _shard_agg_plan(self, agg_rows: List[int], meta: TrainMeta,
+                        c: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The 2-D aggregation schedule: LOCAL agg row indices (Sm*A,),
+        the (Sm*A, Sd*B) weight grid — cell (sm, sd) holds the (A, B)
+        block pairing model shard sm's agg rows with cell (sm, sd)'s
+        bucket columns — and the keep mask guarding the scatter. Padding
+        agg rows repeat the shard's first row's FULL weight row (all
+        data-shard blocks), so duplicate scatter indices still carry
+        identical post-psum values; empty model shards keep-mask their
+        rows to existing values exactly as in the 1-D plan."""
+        S_m, S_d = self._n_shards, self._n_dshards
+        row_of = self.registry.params.row_of
+        agg_idx, agg_groups, a_pad = shard_rows(
+            agg_rows, self._rows_per_shard, S_m, minimum=self._row_floor)
+        keep = np.zeros(S_m * a_pad, bool)
+        w = np.zeros((S_m * a_pad, S_d * meta.b_pad), np.float32)
+        for sm, group in enumerate(agg_groups):
+            if not group:
+                continue
+            base = sm * a_pad
+            keep[base:base + a_pad] = True
+            slot = {r: j for j, r in enumerate(group)}
+            for sd in range(S_d):
+                cbase = sd * meta.b_pad
+                for col, k in enumerate(
+                        meta.pair_groups[sm * S_d + sd]):
+                    m, d = meta.pair_model[k], meta.pair_device[k]
+                    j = slot.get(row_of[m])
+                    if j is not None:
+                        w[base + j, cbase + col] = c[d, m]
+            w[base + len(group):base + a_pad] = w[base]
+        return agg_idx, keep, w
+
+    def _dispatch_sparse_val(self, plan: RoundPlan) -> Callable:
+        m_idx, d_idx, groups, width = shard_eval_pairs_2d(
+            self._rows(plan.val_pair_model),
+            self._drows(plan.val_pair_device),
+            self._rows_per_shard, self._n_shards,
+            self.databank.rows_per_shard, self._n_dshards,
+            minimum=max(8 // self._n_cells, 2))
+        fut = self._pair_eval(self.registry.params.tree, m_idx, d_idx,
+                              *self._dev["val"])
+        positions = [0] * len(plan.val_pair_model)
+        for cell, g in enumerate(groups):
+            for j, k in enumerate(g):
+                positions[k] = cell * width + j
+        return self._val_reader_sparse(fut, plan, positions)
 
 
 # -- FedAvg executors -------------------------------------------------------

@@ -598,6 +598,260 @@ def shard_eval_pairs(pair_rows: "list[int]", pair_device: "list[int]",
     return m_idx, d_idx, groups, width
 
 
+# -- 2-D (model × data) mesh engine (DESIGN.md §11) -------------------------
+
+def shard_pairs_2d(pair_mrows: "list[int]", pair_drows: "list[int]",
+                   perm_rows: "list[np.ndarray]", rows_per_mshard: int,
+                   n_mshards: int, rows_per_dshard: int, n_dshards: int,
+                   minimum: int = 2
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              List[List[int]], int]:
+    """Bucket gathered work pairs per owning MESH CELL: pair k (model
+    bank row ``pair_mrows[k]``, data bank row ``pair_drows[k]``) can only
+    run on the cell holding both blocks — model shard
+    ``pair_mrows[k] // rows_per_mshard`` × data shard
+    ``pair_drows[k] // rows_per_dshard``. Cells are indexed model-major
+    (``cell = sm * n_dshards + sd``), matching the block order of a
+    ``P(("model", "data"))``-sharded leading axis on the launch mesh.
+    Every cell's pair list pads to ONE shared bucket ``B`` (padding
+    pairs point at local row 0 / local data row 0 with all-zero perms
+    and are masked out of aggregation by zero weight columns).
+
+    Returns ``(m_idx (C*B,), d_idx (C*B,), perms (C*B, T, b),
+    cell_groups, B)`` with ``C = n_mshards * n_dshards``; both index
+    arrays are shard-LOCAL. ``cell_groups[c]`` lists the original pair
+    positions assigned to cell c in bucket-column order. The partition
+    is a disjoint cover of the pairs with the documented <20% per-cell
+    padding-waste bound once the densest cell holds > 8 pairs
+    (property-tested in tests/test_property.py); at one data shard it
+    degenerates to ``shard_work_batch``'s per-model-shard bucketing."""
+    n_cells = n_mshards * n_dshards
+    groups: List[List[int]] = [[] for _ in range(n_cells)]
+    for k, (mr, dr) in enumerate(zip(pair_mrows, pair_drows)):
+        cell = (mr // rows_per_mshard) * n_dshards + dr // rows_per_dshard
+        groups[cell].append(k)
+    width = bucket_size(max((len(g) for g in groups), default=0), minimum)
+    m_idx = np.zeros(n_cells * width, np.int32)
+    d_idx = np.zeros(n_cells * width, np.int32)
+    perms = np.zeros((n_cells * width,) + perm_rows[0].shape, np.int32)
+    for c, g in enumerate(groups):
+        base = c * width
+        for j, k in enumerate(g):
+            m_idx[base + j] = pair_mrows[k] % rows_per_mshard
+            d_idx[base + j] = pair_drows[k] % rows_per_dshard
+            perms[base + j] = perm_rows[k]
+    return m_idx, d_idx, perms, groups, width
+
+
+def shard_eval_pairs_2d(pair_mrows: "list[int]", pair_drows: "list[int]",
+                        rows_per_mshard: int, n_mshards: int,
+                        rows_per_dshard: int, n_dshards: int,
+                        minimum: int = 2
+                        ) -> Tuple[np.ndarray, np.ndarray,
+                                   List[List[int]], int]:
+    """``shard_eval_pairs`` per mesh CELL (sparse holder-only eval on
+    the 2-D mesh): pair k goes to cell (model shard × data shard) with
+    shard-LOCAL row indices; the output slot of pair ``cell_groups[c][j]``
+    in the (C*P,) accuracy vector is ``c*P + j``."""
+    n_cells = n_mshards * n_dshards
+    groups: List[List[int]] = [[] for _ in range(n_cells)]
+    for k, (mr, dr) in enumerate(zip(pair_mrows, pair_drows)):
+        cell = (mr // rows_per_mshard) * n_dshards + dr // rows_per_dshard
+        groups[cell].append(k)
+    width = bucket_size(max((len(g) for g in groups), default=0), minimum)
+    m_idx = np.zeros(n_cells * width, np.int32)
+    d_idx = np.zeros(n_cells * width, np.int32)
+    for c, g in enumerate(groups):
+        base = c * width
+        for j, k in enumerate(g):
+            m_idx[base + j] = pair_mrows[k] % rows_per_mshard
+            d_idx[base + j] = pair_drows[k] % rows_per_dshard
+    return m_idx, d_idx, groups, width
+
+
+def _aggregate_rows_psum(trained, w, quantize_bits: int, axis: str):
+    """Steps 2-3 of the round body on the 2-D mesh: each cell reduces
+    eq-1 PARTIAL weighted sums over its own pair block, one ``psum``
+    over the ``data`` axis completes the average (a model's holders may
+    live on several data shards), then the in-jit quantize roundtrip.
+    Numerically this is ``multi_weighted_average``'s einsum with its B
+    columns split across the data shards — identical at one data shard,
+    reduction-order float drift otherwise (the 2-D equivalence tier
+    pins discrete state exactly and params to reduction order)."""
+    num = jax.tree.map(
+        lambda t: jnp.einsum("b...,ab->a...", t.astype(jnp.float32), w),
+        trained)
+    num = jax.lax.psum(num, axis)
+    den = jnp.maximum(jax.lax.psum(jnp.sum(w, axis=1), axis), 1e-12)
+    agg = jax.tree.map(
+        lambda n, t: (n / den.reshape((-1,) + (1,) * (n.ndim - 1))
+                      ).astype(t.dtype), num, trained)
+    if quantize_bits:
+        from repro.core import quantize as qz
+        agg = jax.vmap(lambda t: qz.roundtrip(t, quantize_bits))(agg)
+    return agg
+
+
+def make_sharded2d_round(loss_fn: Callable, acc_fn: Callable, lr: float,
+                         mesh: jax.sharding.Mesh, quantize_bits: int = 0
+                         ) -> Callable:
+    """``make_sharded_round`` on the full 2-D ``(model × data)`` mesh.
+
+    Returns fn(stacked [donated, model-row-sharded], m_idx (C*B,),
+    d_idx (C*B,), perms (C*B, T, b), w (Sm*A, Sd*B), agg_rows (Sm*A,),
+    agg_keep (Sm*A,), live_idx (Sm*L,), test_idx (Sm*R,), xs, ys, vx,
+    vy, tx, ty [data-row-sharded]) -> (new_stacked,
+    val (Sm*L, n_cap), test (Sm*R, n_cap)).
+
+    Layout (DESIGN.md §11): the bank's row axis over ``model`` (each
+    row replicated along ``data``), the data bank's row axis over
+    ``data`` (each block replicated along ``model``), pair arrays over
+    BOTH (one block per cell, model-major — ``shard_pairs_2d``), and
+    the weight matrix over both independently (cell (sm, sd) holds the
+    (A, B) block pairing its model rows with its pairs). Each cell
+    trains its resident (model row × data row) pairs, the ``data``-axis
+    psum completes eq 1 (``_aggregate_rows_psum``), and every data
+    slice then performs the IDENTICAL keep-masked scatter into its
+    (replicated-along-data) bank copy, so the bank stays consistent
+    without any parameter collective beyond that one psum. Eval rows
+    score only the LOCAL data block — the (Sm*L, n_cap) matrices are
+    the only row+column-sharded arrays the host reads back, and their
+    columns are data-bank ROWS (the executor resolves device ids
+    through ``DeviceDataBank.row_of`` at readback)."""
+    one_pair = _pair_train(loss_fn, lr)
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    drow = P("data")
+    cell = P(("model", "data"))
+    grid = P("model", "data")
+
+    def body(stacked, m_idx, d_idx, perms, w, agg_rows, agg_keep,
+             live_idx, test_idx, xs, ys, vx, vy, tx, ty):
+        trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+        agg = _aggregate_rows_psum(trained, w, quantize_bits, "data")
+        new_stacked = _scatter_rows(stacked, agg, agg_rows, keep=agg_keep)
+        val = _eval_gathered(eval_model, new_stacked, live_idx, vx, vy)
+        test = _eval_gathered(eval_model, new_stacked, test_idx, tx, ty)
+        return new_stacked, val, test
+
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(row, cell, cell, cell, grid, row, row, row, row,
+                  drow, drow, drow, drow, drow, drow),
+        out_specs=(row, grid, grid), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded2d_train(loss_fn: Callable, lr: float,
+                         mesh: jax.sharding.Mesh) -> Callable:
+    """The TRAIN phase of the 2-D round alone (pure bank+data read —
+    speculable, DESIGN.md §10): fn(stacked [model-row-sharded],
+    m_idx (C*B,), d_idx (C*B,), perms (C*B, T, b), xs, ys
+    [data-row-sharded]) -> trained (C*B, ...) cell-sharded."""
+    one_pair = _pair_train(loss_fn, lr)
+    row = P("model")
+    drow = P("data")
+    cell = P(("model", "data"))
+
+    def body(stacked, m_idx, d_idx, perms, xs, ys):
+        return jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(row, cell, cell, cell, drow, drow),
+        out_specs=cell, check_rep=False))
+
+
+def make_sharded2d_apply(mesh: jax.sharding.Mesh, quantize_bits: int = 0
+                         ) -> Callable:
+    """Aggregate + writeback of the 2-D round alone: fn(stacked
+    [donated], trained (C*B, ...) cell-sharded, w (Sm*A, Sd*B),
+    agg_rows (Sm*A,) LOCAL, agg_keep (Sm*A,)) -> new_stacked."""
+    row = P("model")
+    cell = P(("model", "data"))
+    grid = P("model", "data")
+
+    def body(stacked, trained, w, agg_rows, agg_keep):
+        agg = _aggregate_rows_psum(trained, w, quantize_bits, "data")
+        return _scatter_rows(stacked, agg, agg_rows, keep=agg_keep)
+
+    step = shard_map(body, mesh=mesh,
+                     in_specs=(row, cell, grid, row, row),
+                     out_specs=row, check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded2d_finish(acc_fn: Callable, mesh: jax.sharding.Mesh,
+                          quantize_bits: int = 0) -> Callable:
+    """Steps 2-5 of the 2-D round as their own dispatch (pipelined
+    split): fn(stacked [donated], trained (C*B, ...) cell-sharded,
+    w (Sm*A, Sd*B), agg_rows (Sm*A,) LOCAL, agg_keep (Sm*A,),
+    live_idx (Sm*L,), test_idx (Sm*R,), vx, vy, tx, ty) ->
+    (new_stacked, val (Sm*L, n_cap), test (Sm*R, n_cap))."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    drow = P("data")
+    cell = P(("model", "data"))
+    grid = P("model", "data")
+
+    def body(stacked, trained, w, agg_rows, agg_keep, live_idx, test_idx,
+             vx, vy, tx, ty):
+        agg = _aggregate_rows_psum(trained, w, quantize_bits, "data")
+        new_stacked = _scatter_rows(stacked, agg, agg_rows, keep=agg_keep)
+        val = _eval_gathered(eval_model, new_stacked, live_idx, vx, vy)
+        test = _eval_gathered(eval_model, new_stacked, test_idx, tx, ty)
+        return new_stacked, val, test
+
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(row, cell, grid, row, row, row, row,
+                  drow, drow, drow, drow),
+        out_specs=(row, grid, grid), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded2d_eval(acc_fn: Callable, mesh: jax.sharding.Mesh
+                        ) -> Callable:
+    """Standalone eval matrix on the 2-D mesh: fn(stacked, idx (Sm*L,)
+    LOCAL model rows, xs, ys [data-row-sharded]) -> (Sm*L, n_cap)
+    row+column-sharded accuracies (columns are data-bank rows)."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    row = P("model")
+    drow = P("data")
+    grid = P("model", "data")
+
+    def mat(stacked, idx, xs, ys):
+        return _eval_gathered(eval_model, stacked, idx, xs, ys)
+
+    return jax.jit(shard_map(mat, mesh=mesh,
+                             in_specs=(row, row, drow, drow),
+                             out_specs=grid, check_rep=False))
+
+
+def make_sharded2d_pair_eval(acc_fn: Callable, mesh: jax.sharding.Mesh
+                             ) -> Callable:
+    """Holder-only eval on the 2-D mesh: fn(stacked, m_idx (C*P,) LOCAL
+    model rows, d_idx (C*P,) LOCAL data rows, xs, ys) -> (C*P,)
+    cell-sharded accuracies (``shard_eval_pairs_2d`` slot order)."""
+    row = P("model")
+    drow = P("data")
+    cell = P(("model", "data"))
+
+    def one_pair(stacked, m, d, xs, ys):
+        params = jax.tree.map(lambda a: a[m], stacked)
+        return acc_fn(params, xs[d], ys[d])
+
+    def body(stacked, m_idx, d_idx, xs, ys):
+        return jax.vmap(one_pair, in_axes=(None, 0, 0, None, None))(
+            stacked, m_idx, d_idx, xs, ys)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(row, cell, cell, drow, drow),
+                             out_specs=cell, check_rep=False))
+
+
 def make_sharded_fedavg_round(loss_fn: Callable, acc_fn: Callable,
                               lr: float, mesh: jax.sharding.Mesh
                               ) -> Callable:
@@ -702,7 +956,8 @@ def make_perms(rng: np.random.Generator, n_devices: int, n_examples: int,
 
 def draw_round_sample(rng: np.random.Generator, n_devices: int,
                       devices_per_round: int, n_examples: int,
-                      batch_size: int, epochs: int
+                      batch_size: int, epochs: int,
+                      present: "np.ndarray | None" = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """One round's participation mask + shared minibatch perms.
 
@@ -710,9 +965,17 @@ def draw_round_sample(rng: np.random.Generator, n_devices: int,
     FedAvgServer both call exactly this with identically-seeded
     generators, so FedCD-vs-FedAvg comparisons train identical
     per-round cohorts and the stream walk stays engine-independent
-    (DESIGN.md §7)."""
+    (DESIGN.md §7). ``present`` (churn scenarios): sample only present
+    device ids, clamping the cohort to the population; the full-fleet
+    fast path consumes the BitGenerator exactly as the presence-free
+    form, so static-population runs keep their historical streams."""
     participating = np.zeros(n_devices, bool)
-    participating[rng.choice(n_devices, devices_per_round,
-                             replace=False)] = True
+    if present is None or present.all():
+        chosen = rng.choice(n_devices, devices_per_round, replace=False)
+    else:
+        ids = np.nonzero(present)[0]
+        k = min(devices_per_round, len(ids))
+        chosen = ids[rng.choice(len(ids), k, replace=False)]
+    participating[chosen] = True
     perms = make_perms(rng, n_devices, n_examples, batch_size, epochs)
     return participating, perms

@@ -33,18 +33,31 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     return _make_mesh((data, model), ("data", "model"))
 
 
-def make_model_mesh(n_shards: int) -> jax.sharding.Mesh:
-    """1-D mesh over the ``model`` axis — the sharded fused engine's
-    launch mesh (DESIGN.md §9). The stacked parameter bank's leading
-    ``max_models`` row axis and the gathered work-pair axis are both
-    laid out over this axis; ``n_shards`` must not exceed
+def make_launch_mesh(model: int = 1, data: int = 1) -> jax.sharding.Mesh:
+    """The federated engines' 2-D ``(model × data)`` launch mesh
+    (DESIGN.md §9/§11). The stacked parameter bank's leading
+    ``max_models`` row axis lays out over ``model``; the device data
+    bank's leading row axis lays out over ``data``; the gathered
+    work-pair axis buckets over BOTH (one block per mesh cell,
+    model-major). ``model * data`` must not exceed
     ``jax.device_count()`` (use ``XLA_FLAGS=--xla_force_host_platform_
     device_count=N`` for simulated CPU devices)."""
-    return _make_mesh((n_shards,), ("model",))
+    return _make_mesh((model, data), ("model", "data"))
+
+
+def make_model_mesh(n_shards: int) -> jax.sharding.Mesh:
+    """1-D model sharding: ``make_launch_mesh`` with a singleton data
+    axis — the PR 3 sharded engine's launch mesh (DESIGN.md §9), kept
+    as the 1-data-shard equivalence oracle for the 2-D data plane."""
+    return make_launch_mesh(model=n_shards, data=1)
 
 
 def model_axis_size(mesh: jax.sharding.Mesh) -> int:
     return mesh.shape.get("model", 1)
+
+
+def data_axis_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape.get("data", 1)
 
 
 def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -177,6 +177,36 @@ def jnp_ndim(x: Any) -> int:
     return getattr(x, "ndim", jax.numpy.ndim(x))
 
 
+def data_row_sharding(mesh: jax.sharding.Mesh, ndim: int) -> NamedSharding:
+    """Sharding for one device-data-bank leaf: the leading data-row axis
+    over the mesh's ``data`` axis, everything else replicated (each
+    model-axis slice keeps a full copy of its data block — the 2-D mesh
+    cell (sm, sd) holds model block sm × data block sd, DESIGN.md §11).
+    ``ndim`` is the leaf's rank WITHOUT the row axis."""
+    return NamedSharding(mesh, P("data", *([None] * ndim)))
+
+
+def data_bank_shardings(mesh: jax.sharding.Mesh, splits: Any) -> Any:
+    """Pytree of NamedSharding for a ``DeviceDataBank``'s stacked splits
+    (each leaf already carries its leading (n_cap,) row axis)."""
+    return jax.tree.map(
+        lambda a: data_row_sharding(mesh, jnp_ndim(a) - 1), splits)
+
+
+def data_rows_per_shard(n_cap: int, mesh: jax.sharding.Mesh) -> int:
+    """Data-bank rows each ``data``-axis shard owns; row ``r`` lives on
+    shard ``r // rows_per_shard`` (contiguous, matching jax's
+    partitioning of the leading axis). ``DeviceDataBank`` rounds its
+    capacity up to a multiple of the data axis BEFORE calling this, so
+    the divisibility error only fires on hand-built layouts."""
+    n = mesh.shape.get("data", 1)
+    if n_cap % n != 0:
+        raise ValueError(
+            f"data bank capacity={n_cap} must divide evenly over the "
+            f"mesh's data axis ({n} shards)")
+    return n_cap // n
+
+
 def bank_rows_per_shard(m_cap: int, mesh: jax.sharding.Mesh) -> int:
     """Rows each model-axis shard owns; row ``m`` lives on shard
     ``m // rows_per_shard`` (contiguous layout, matching jax's

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.data.partition import (HG_KS, hierarchical_devices,
-                                  hierarchical_probs, hypergeometric_devices,
+from repro.data.partition import (HG_KS, dirichlet_devices, dirichlet_probs,
+                                  hierarchical_devices, hierarchical_probs,
+                                  hypergeometric_devices,
                                   hypergeometric_probs, stack_devices)
 from repro.data.tokens import lm_batch
 
@@ -43,6 +44,49 @@ def test_hypergeometric_devices_have_all_archetypes():
                                   n_train=32, n_val=8, n_test=8)
     assert len(devs) == 12
     assert sorted({d.archetype for d in devs}) == list(range(6))
+
+
+def test_dirichlet_alpha_controls_label_skew():
+    """Hsu et al. 2019: α → 0 concentrates each device on few labels,
+    α → ∞ recovers IID. The per-device max label fraction (skew) must
+    fall monotonically across a wide α sweep."""
+    def mean_skew(alpha):
+        devs = dirichlet_devices(seed=0, n_devices=20, alpha=alpha,
+                                 n_train=400, n_val=8, n_test=8)
+        fracs = []
+        for d in devs:
+            _, y = d.train
+            fracs.append(np.bincount(y, minlength=10).max() / len(y))
+        return float(np.mean(fracs))
+
+    low, mid, high = mean_skew(0.01), mean_skew(1.0), mean_skew(100.0)
+    assert low > 0.85         # near-single-label devices
+    assert low > mid > high
+    assert high < 0.25        # close to the uniform 0.1
+
+
+def test_dirichlet_marginal_recovers_prior():
+    """Individual devices are skewed but the POPULATION label marginal
+    concentrates back around the uniform prior."""
+    rng = np.random.default_rng(0)
+    draws = np.stack([dirichlet_probs(rng, 0.3) for _ in range(400)])
+    assert (draws >= 0).all()
+    np.testing.assert_allclose(draws.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(draws.mean(axis=0), 0.1, atol=0.03)
+    # devices are individually skewed at this alpha (uniform would
+    # put the mean max near 0.15)
+    assert np.mean(draws.max(axis=1)) > 0.4
+
+
+def test_dirichlet_devices_stack_and_sweep_configs():
+    from repro.configs.fedcd_cifar import DIRICHLET, DIRICHLET_ALPHAS
+    devs = dirichlet_devices(seed=1, n_devices=6, alpha=0.5, n_train=16,
+                             n_val=8, n_test=4)
+    data = stack_devices(devs)
+    assert data["train"][0].shape == (6, 16, 32, 32, 3)
+    assert DIRICHLET.n_devices == 30
+    assert len(DIRICHLET_ALPHAS) >= 3
+    assert all(a > 0 for a in DIRICHLET_ALPHAS)
 
 
 def test_stack_devices_shapes():

@@ -1,0 +1,417 @@
+"""2-D (model × data) mesh data plane ≡ 1-data-shard path, and dynamic
+device populations ≡ across engines.
+
+The PR 5 sharded data plane (DESIGN.md §11) lays the device data bank's
+row axis over the launch mesh's ``data`` axis and buckets work pairs per
+mesh CELL. Like PR 3's model sharding it must be a pure layout
+refactor: a seeded 2-D run reproduces the single-device fused run's
+discrete state exactly and the params to reduction order (eq 1 now
+completes with a psum over per-data-shard partial sums). On top, churn
+scenarios (device join/leave/label drift) must walk identical
+population trajectories under the fused, sharded, and pipelined
+engines — the schedule is resolved host-side from dedicated RNG
+streams, never from dispatch order.
+
+Mesh tiers above ``jax.device_count()`` skip; CI's sharded leg runs
+this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+so the (1×2), (2×2) and (1×4) tiers execute.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.fedcd import FedCDServer
+from repro.data.bank import DeviceDataBank
+from repro.data.scenarios import (ChurnSchedule, DeviceJoin, DeviceLeave,
+                                  random_churn)
+from repro.launch.mesh import make_launch_mesh, make_model_mesh
+from repro.models.mlp import mlp_accuracy, mlp_loss
+from test_engine_equivalence import ROUNDS, _small_setup
+
+MESHES = ((1, 2), (2, 2), (1, 4))        # (model shards, data shards)
+
+
+def needs_devices(n):
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=f"needs {n} devices (XLA_FLAGS="
+               f"--xla_force_host_platform_device_count={n})")
+
+
+@pytest.fixture(
+    scope="module",
+    params=[pytest.param(s, marks=needs_devices(s[0] * s[1]))
+            for s in MESHES])
+def mesh_shape(request):
+    return request.param
+
+
+def _run(cfg, params, data, rounds=ROUNDS, mesh=None, pipeline=False,
+         scenario=None):
+    srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                      batch_size=16,
+                      engine="sharded" if mesh is not None else "fused",
+                      mesh=mesh, pipeline=pipeline, scenario=scenario)
+    srv.run(rounds)
+    return srv
+
+
+def _assert_discrete_state_equal(ref, srv):
+    assert ref.registry.live_ids() == srv.registry.live_ids()
+    assert ref.registry.genealogy() == srv.registry.genealogy()
+    np.testing.assert_array_equal(ref.state.active, srv.state.active)
+    np.testing.assert_array_equal(ref.state.alive, srv.state.alive)
+    np.testing.assert_array_equal(
+        np.isnan(ref.state.history), np.isnan(srv.state.history))
+    np.testing.assert_allclose(
+        np.nan_to_num(ref.state.history),
+        np.nan_to_num(srv.state.history), atol=1e-9)
+    for ms, mh in zip(ref.metrics, srv.metrics):
+        assert ms.round == mh.round
+        assert ms.live_models == mh.live_models
+        assert ms.active_models == mh.active_models
+        assert ms.comm_bytes == mh.comm_bytes
+        np.testing.assert_array_equal(ms.preferred, mh.preferred)
+        np.testing.assert_allclose(ms.test_acc, mh.test_acc, atol=1e-6)
+        np.testing.assert_allclose(ms.val_acc, mh.val_acc, atol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def single():
+    cfg, params, data = _small_setup()
+    return _run(cfg, params, data)
+
+
+@pytest.fixture(scope="module")
+def meshed(mesh_shape):
+    cfg, params, data = _small_setup()
+    sm, sd = mesh_shape
+    return _run(cfg, params, data, mesh=make_launch_mesh(sm, sd))
+
+
+def test_discrete_state_matches_single(single, meshed):
+    _assert_discrete_state_equal(single, meshed)
+
+
+def test_params_match_to_reduction_order(single, meshed):
+    for m in single.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(single.registry.params[m]),
+                        jax.tree.leaves(meshed.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_device_splits_not_replicated(meshed, mesh_shape):
+    """The acceptance claim: with S_data shards each device holds only
+    n_cap / S_data data rows — splits are no longer replicated per
+    model shard."""
+    sm, sd = mesh_shape
+    bank = meshed.executor.databank
+    assert bank.n_shards == sd
+    assert bank.bytes_per_shard() * sd == bank.nbytes()
+    for split in ("train", "val", "test"):
+        xs, ys = bank.splits[split]
+        if sd > 1:
+            assert xs.sharding.shard_shape(xs.shape)[0] == \
+                xs.shape[0] // sd
+            assert ys.sharding.shard_shape(ys.shape)[0] == \
+                ys.shape[0] // sd
+
+
+# -- dynamic device populations (churn) ------------------------------------
+
+def _churn_schedule(cfg, seed=3):
+    return random_churn(ROUNDS, cfg.n_devices, seed=seed, join_rate=0.5,
+                        leave_rate=0.4, drift_rate=0.3, min_devices=3,
+                        n_train=64, n_val=32, n_test=32)
+
+
+@pytest.fixture(scope="module")
+def churn_single():
+    cfg, params, data = _small_setup()
+    return _run(cfg, params, data, scenario=_churn_schedule(cfg))
+
+
+def test_churn_runs_and_population_moves(churn_single):
+    srv = churn_single
+    sched = _churn_schedule(srv.cfg)
+    joins = sched.total_joins
+    leaves = sum(1 for e in sched.events if isinstance(e, DeviceLeave))
+    assert joins > 0 and leaves > 0         # the schedule actually churns
+    assert int(srv.present.sum()) == srv.cfg.n_devices + joins - leaves
+    # joined ids extended the id space beyond the initial population
+    assert srv.n_devices == srv.cfg.n_devices + joins
+    # departed / not-yet-joined devices hold nothing
+    for d in np.nonzero(~srv.present)[0]:
+        assert not srv.state.active[d].any()
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_churn_equivalent_across_engines(churn_single, mesh_shape,
+                                         pipeline):
+    """The acceptance gate: the same churn schedule walks an identical
+    discrete trajectory under fused, sharded (2-D), and the pipelined
+    variants of both."""
+    cfg, params, data = _small_setup()
+    sm, sd = mesh_shape
+    srv = _run(cfg, params, data, mesh=make_launch_mesh(sm, sd),
+               pipeline=pipeline, scenario=_churn_schedule(cfg))
+    _assert_discrete_state_equal(churn_single, srv)
+
+
+def test_churn_equivalent_fused_pipelined(churn_single):
+    cfg, params, data = _small_setup()
+    srv = _run(cfg, params, data, pipeline=True,
+               scenario=_churn_schedule(cfg))
+    _assert_discrete_state_equal(churn_single, srv)
+
+
+@needs_devices(2)
+def test_emptied_data_shard_dispatches_cleanly():
+    """All devices resident on one data shard leave: the shard's cells
+    get all-padding buckets every round, yet the round trains and
+    scores the survivors identically to the single-device path."""
+    cfg, params, data = _small_setup()
+    # initial rows 0..7 are identity-placed: rows 4-7 live on data
+    # shard 1 of a (1, 2) mesh
+    events = tuple(DeviceLeave(2, d) for d in range(4, 8))
+    sched = ChurnSchedule(events=events, n_train=64, n_val=32, n_test=32)
+    ref = _run(cfg, params, data, rounds=5, scenario=sched)
+    srv = _run(cfg, params, data, rounds=5,
+               mesh=make_launch_mesh(1, 2), scenario=sched)
+    bank = srv.executor.databank
+    assert all(bank.shard_of(d) == 0 for d in bank.present_ids())
+    _assert_discrete_state_equal(ref, srv)
+
+
+def test_churn_sparse_val_matches_dense():
+    """Holder-only (sparse) validation under churn must resolve device
+    ids to data ROWS at dispatch — after a slot reuse id != row, and
+    scoring pair (m, id) against row ``id`` reads another device's
+    split (regression: the fused sparse-val path skipped ``_drows``)."""
+    cfg, params, data = _small_setup()
+
+    def sched():
+        return ChurnSchedule(events=(DeviceLeave(2, 0), DeviceJoin(3, 1)),
+                             n_train=64, n_val=32, n_test=32)
+
+    ref = _run(cfg, params, data, rounds=6, scenario=sched())
+    srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                      batch_size=16, engine="fused", sparse_eval=1.1,
+                      scenario=sched())         # always score sparse
+    srv.run(6)
+    assert srv.planner.sparse_rounds > 0
+    assert not srv.executor.databank.identity_map()   # slot was reused
+    _assert_discrete_state_equal(ref, srv)
+
+
+def test_join_during_extinction_round():
+    """A device joining while NO model is live: it activates nothing,
+    the round dispatches with empty shards, and the population metrics
+    stay coherent."""
+    sched = ChurnSchedule(events=(DeviceJoin(2, 0),),
+                          n_train=64, n_val=32, n_test=32)
+    cfg, params, data = _small_setup(quantize_bits=8)
+    srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                      batch_size=16, engine="fused", scenario=sched)
+    srv.run_round(1)
+    for m in list(srv.registry.live_ids()):
+        srv.registry.kill(m, 1)
+    srv.state.active[:] = False
+    srv.state.alive[:] = False
+    m = srv.run_round(2)                        # extinction + join
+    assert m.live_models == 0
+    joined = srv.cfg.n_devices                  # first join claims id N
+    assert srv.present[joined]
+    assert not srv.state.active[joined].any()
+    assert joined in srv.executor.databank
+
+
+def test_leave_mid_round_with_speculative_batch():
+    """An UNSCHEDULED device departure (no churn_next hint, so the
+    pipelined executor has already speculated round t+1's training
+    including the device's pairs) must be absorbed by plan repair: the
+    true pair set shrinks, dead pairs aggregate with zero weight, and
+    the run stays equivalent to a synchronous run subjected to the
+    same removal."""
+    cfg, params, data = _small_setup()
+    cfg = dataclasses.replace(cfg, milestones=(2,))
+
+    def removal(srv, d):
+        # simulate an unscheduled leave between rounds, mid-pipeline
+        srv.present[d] = False
+        srv.state.active[d, :] = False
+        srv.state.history[d] = np.nan
+        srv.executor.databank.remove(d)
+
+    def run(pipeline):
+        srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                          batch_size=16, engine="fused",
+                          pipeline=pipeline)
+        for t in range(1, 7):
+            srv.run_round(t)
+            if t == 4:
+                # remove a device that PARTICIPATES in round 5 (the
+                # prefetched sample both servers share), so its pairs
+                # are already inside the pipelined run's speculative
+                # train batch when the true plan drops them
+                d = int(np.nonzero(srv._prefetch[1][0])[0][0])
+                removal(srv, d)
+        return srv
+
+    sync, piped = run(False), run(True)
+    _assert_discrete_state_equal(sync, piped)
+    st = piped.pipeline_stats.as_dict()
+    assert st["speculated"] > 0
+    # the departure shrank at least one speculated pair set
+    assert st["repaired"] >= 1
+
+
+# -- DeviceDataBank unit behaviour ------------------------------------------
+
+def _toy_bank(n0=4, n_cap=8, id_cap=12, mesh=None):
+    rng = np.random.default_rng(0)
+    data = {k: (rng.normal(size=(n0, 6, 2)).astype(np.float32),
+                rng.integers(0, 3, (n0, 6)).astype(np.int32))
+            for k in ("train", "val", "test")}
+    return DeviceDataBank(data, n_cap=n_cap, id_cap=id_cap, mesh=mesh)
+
+
+def _toy_device(rng, val=None):
+    from repro.data.partition import DeviceData
+
+    def split():
+        x = rng.normal(size=(6, 2)).astype(np.float32)
+        if val is not None:
+            x[:] = val
+        return x, rng.integers(0, 3, 6).astype(np.int32)
+    return DeviceData(0, split(), split(), split())
+
+
+def test_bank_identity_until_churn_then_slot_reuse():
+    rng = np.random.default_rng(1)
+    bank = _toy_bank()
+    assert bank.identity_map()
+    assert bank.present_ids() == [0, 1, 2, 3]
+    v0 = bank.version
+    bank.remove(1)
+    assert 1 not in bank
+    assert bank.version == v0               # leaves rewrite nothing
+    d = bank.add(_toy_device(rng, val=7.0))
+    assert d == 4                           # ids are sequential, not reused
+    assert bank.row_of[d] == 1              # the freed ROW is reused
+    assert 1 not in bank.row_of             # stale mapping dropped
+    assert bank.version == v0 + 1           # joins rewrite rows
+    xs, _ = bank.splits["train"]
+    np.testing.assert_allclose(np.asarray(xs[1]), 7.0)
+    assert not bank.identity_map()
+
+
+def test_bank_least_loaded_placement_across_data_shards():
+    rng = np.random.default_rng(2)
+    bank = _toy_bank(n0=4, n_cap=8, id_cap=20,
+                     mesh=None)              # 1 shard: rows fill low-first
+    for _ in range(4):
+        bank.add(_toy_device(rng))
+    assert sorted(bank.row_of[d] for d in bank.present_ids()) == \
+        list(range(8))
+    with pytest.raises(IndexError):
+        bank.add(_toy_device(rng))          # n_cap rows exhausted
+
+
+@needs_devices(2)
+def test_bank_sharded_placement_and_write_routing():
+    rng = np.random.default_rng(3)
+    mesh = make_launch_mesh(1, 2)
+    bank = _toy_bank(n0=2, n_cap=8, id_cap=20, mesh=mesh)
+    # rows 0,1 on shard 0 -> next joins balance onto shard 1 first
+    d = bank.add(_toy_device(rng))
+    assert bank.shard_of(d) == 1
+    d2 = bank.add(_toy_device(rng))
+    assert bank.shard_of(d2) == 1            # shard 1 still emptier
+    for split in ("train", "val", "test"):
+        xs, _ = bank.splits[split]
+        assert xs.sharding.shard_shape(xs.shape)[0] == xs.shape[0] // 2
+
+
+def test_bank_rejects_mismatched_split_shapes():
+    rng = np.random.default_rng(4)
+    bank = _toy_bank()
+    from repro.data.partition import DeviceData
+    bad = DeviceData(0, (np.zeros((5, 2), np.float32),
+                         np.zeros(5, np.int32)),
+                     (np.zeros((6, 2), np.float32), np.zeros(6, np.int32)),
+                     (np.zeros((6, 2), np.float32), np.zeros(6, np.int32)))
+    with pytest.raises(ValueError):
+        bank.add(bad)
+    del rng
+
+
+# -- row migration (work rebalancing) ---------------------------------------
+
+@needs_devices(2)
+def test_forced_migration_is_discrete_state_identical():
+    """Migrating a hot row between rounds is pure layout: the run's
+    discrete state (and params, to reduction order) match a
+    no-migration run bit for bit."""
+    cfg, params, data = _small_setup()
+    mesh = make_model_mesh(2)
+
+    def run(migrate_at=None):
+        srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                          batch_size=16, engine="sharded", mesh=mesh)
+        for t in range(1, ROUNDS + 1):
+            srv.run_round(t)
+            if migrate_at == t:
+                bank = srv.registry.params
+                m = max(mm for mm in srv.registry.live_ids())
+                dest = 1 - bank.shard_of(m)
+                bank.migrate(m, dest)
+                assert bank.shard_of(m) == dest
+        return srv
+
+    ref = run()
+    mig = run(migrate_at=3)
+    assert ref.registry.params.row_of != mig.registry.params.row_of
+    _assert_discrete_state_equal(ref, mig)
+    for m in ref.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(ref.registry.params[m]),
+                        jax.tree.leaves(mig.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_rebalance_triggers_on_skewed_ewma():
+    """The EWMA threshold trigger: a shard sustaining >threshold× the
+    mean pair load drains its most recently placed model to the coldest
+    shard, then snaps its EWMA to the mean (no migration cascade)."""
+    from repro.core.registry import StackedParamBank
+    bank = StackedParamBank(8, {"w": np.zeros(2, np.float32)}, n_shards=4)
+    for m in range(6):
+        bank[m] = {"w": np.full(2, m, np.float32)}
+    # shards hold rows; make shard 0 hot for several rounds
+    for _ in range(4):
+        bank.note_pair_load([12.0, 1.0, 1.0, 1.0])
+    assert bank.load_ewma[0] > 2.0 * bank.load_ewma.mean()
+    v0 = bank.version
+    moves = bank.rebalance(threshold=2.0)
+    assert len(moves) == 1
+    m, src, dst = moves[0]
+    assert src == 0 and dst != 0
+    assert bank.shard_of(m) == dst
+    assert bank.version == v0 + 1            # speculation invalidation
+    np.testing.assert_array_equal(np.asarray(bank[m]["w"]),
+                                  np.full(2, m, np.float32))
+    # the EWMA reset: stale loads discarded, no migration cascade
+    assert (bank.load_ewma == 0).all()
+    assert bank.rebalance(threshold=2.0) == []
+    # balanced load never triggers
+    bank2 = StackedParamBank(8, {"w": np.zeros(2, np.float32)}, n_shards=4)
+    for m in range(8):
+        bank2[m] = {"w": np.zeros(2, np.float32)}
+    for _ in range(4):
+        bank2.note_pair_load([3.0, 3.0, 3.0, 3.0])
+    assert bank2.rebalance(threshold=2.0) == []

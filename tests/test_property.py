@@ -231,3 +231,55 @@ def test_weighted_average_permutation_invariant(ws):
     out_p = weighted_average({"x": jnp.asarray(u[perm])},
                              jnp.asarray(w[perm]))["x"]
     np.testing.assert_allclose(np.asarray(out), np.asarray(out_p), atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
+       st.integers(1, 4), st.data())
+@settings(max_examples=40, deadline=None)
+def test_shard_pairs_2d_partitions_by_cell(n_mshards, rows_per_mshard,
+                                           n_dshards, rows_per_dshard,
+                                           data):
+    """The 2-D mesh's dispatch bucketing (DESIGN.md §11): every work
+    pair lands on the ONE mesh cell owning both its model bank row and
+    its data bank row (disjoint cover), with shard-LOCAL indices whose
+    scatter/gather roundtrip reconstructs the global rows exactly, one
+    shared bucket with the <20% per-cell padding-waste bound past the
+    bucket_size threshold, and zeroed padding slots (masked out of
+    aggregation by zero weight columns)."""
+    from repro.federated.simulation import bucket_size, shard_pairs_2d
+    m_cap = n_mshards * rows_per_mshard
+    n_cap = n_dshards * rows_per_dshard
+    n_pairs = data.draw(st.integers(1, 24))
+    rng = np.random.default_rng(n_pairs * 13 + m_cap * 5 + n_cap)
+    pair_mrows = rng.integers(0, m_cap, n_pairs).tolist()
+    pair_drows = rng.integers(0, n_cap, n_pairs).tolist()
+    perm_rows = [rng.integers(0, 8, (3, 2)).astype(np.int32)
+                 for _ in range(n_pairs)]
+    m_idx, d_idx, perms, groups, width = shard_pairs_2d(
+        pair_mrows, pair_drows, perm_rows, rows_per_mshard, n_mshards,
+        rows_per_dshard, n_dshards, minimum=2)
+
+    n_cells = n_mshards * n_dshards
+    flat = [k for g in groups for k in g]
+    assert sorted(flat) == list(range(n_pairs))     # disjoint cover
+    assert len(groups) == n_cells
+    assert len(m_idx) == len(d_idx) == len(perms) == n_cells * width
+    assert (m_idx >= 0).all() and (m_idx < rows_per_mshard).all()
+    assert (d_idx >= 0).all() and (d_idx < rows_per_dshard).all()
+    densest = max(len(g) for g in groups)
+    assert width == bucket_size(densest, minimum=2)
+    if densest > 16:                                # 8 * minimum
+        assert (width - densest) / width < 0.2
+    for c, g in enumerate(groups):
+        sm, sd = divmod(c, n_dshards)               # model-major cells
+        assert len(g) <= width
+        for j, k in enumerate(g):
+            slot = c * width + j
+            # the cell owns BOTH rows, and the local-index roundtrip
+            # reconstructs the globals
+            assert m_idx[slot] + sm * rows_per_mshard == pair_mrows[k]
+            assert d_idx[slot] + sd * rows_per_dshard == pair_drows[k]
+            np.testing.assert_array_equal(perms[slot], perm_rows[k])
+        assert (m_idx[c * width + len(g):(c + 1) * width] == 0).all()
+        assert (d_idx[c * width + len(g):(c + 1) * width] == 0).all()
+        assert (perms[c * width + len(g):(c + 1) * width] == 0).all()
