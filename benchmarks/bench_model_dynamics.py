@@ -48,6 +48,7 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.core.fedcd import FedCDServer
+from repro.core.spec import EngineSpec
 
 
 def run(rounds: int = 30, model: str = "mlp", force: bool = False):
@@ -131,7 +132,7 @@ def compare_engines(rounds: int = 20, model: str = "mlp",
         total = {}
         for engine in ("legacy", "batched", "fused"):
             srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
-                              batch_size=C.BATCH, engine=engine)
+                              batch_size=C.BATCH, spec=engine)
             t0 = time.time()
             srv.run(rounds)
             total[engine] = time.time() - t0
@@ -212,10 +213,15 @@ def compare_mesh(rounds: int = 16, model: str = "mlp", shards: int = 4,
 
     servers = {}
     total = {}
-    for tag, mesh in (("single", None),
-                      (f"shard{shards}", make_model_mesh(shards))):
+    # shards may have clamped to 1 (pure shard_map overhead): inject the
+    # 1x1 mesh so the sharded plane still runs — the string presets
+    # can't spell that, EngineSpec(mesh=...) can
+    for tag, spec in (("single", EngineSpec()),
+                      (f"shard{shards}",
+                       EngineSpec(model_shards=shards,
+                                  mesh=make_model_mesh(shards)))):
         srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=C.BATCH, engine="fused", mesh=mesh)
+                          batch_size=C.BATCH, spec=spec)
         t0 = time.time()
         srv.run(rounds)
         total[tag] = time.time() - t0
@@ -263,7 +269,6 @@ def compare_datamesh(rounds: int = 12, model: str = "mlp",
     import jax
 
     from repro.data.scenarios import random_churn
-    from repro.launch.mesh import make_launch_mesh
 
     avail = jax.device_count()
     if avail < 2:
@@ -290,13 +295,13 @@ def compare_datamesh(rounds: int = 12, model: str = "mlp",
                         milestones=(1, 2, 3, 4),
                         late_delete_round=rounds + 5, **base)
 
-    variants = [("mesh1d", make_launch_mesh(sm * sd, 1)),
-                ("mesh2d", make_launch_mesh(sm, sd))]
+    variants = [("mesh1d", f"sharded@{sm * sd}"),
+                ("mesh2d", f"sharded@{sm}x{sd}")]
     servers = {}
     total = {}
-    for tag, mesh in variants:
+    for tag, spec in variants:
         srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=C.BATCH, engine="sharded", mesh=mesh)
+                          batch_size=C.BATCH, spec=spec)
         t0 = time.time()
         srv.run(rounds)
         total[tag] = time.time() - t0
@@ -307,7 +312,8 @@ def compare_datamesh(rounds: int = 12, model: str = "mlp",
     med = {t: float(np.median([servers[t].metrics[r - 1].wall_s
                                for r in steady])) for t in servers}
     lines = []
-    for tag, mesh in variants:
+    for tag, _ in variants:
+        mesh = servers[tag].mesh
         bank = servers[tag].executor.databank
         lines.append(C.csv_line(
             f"datamesh_round_wall_{tag}", med[tag] * 1e6,
@@ -339,11 +345,12 @@ def compare_datamesh(rounds: int = 12, model: str = "mlp",
                             n_train=C.N_TRAIN, n_val=C.N_VAL,
                             n_test=C.N_TEST)
     churn = {}
-    for tag, mesh in (("fused", None), ("mesh2d", make_launch_mesh(sm, sd))):
+    for tag, spec in (
+            ("fused", EngineSpec(scenario=sched())),
+            ("mesh2d", EngineSpec(model_shards=sm, data_shards=sd,
+                                  scenario=sched()))):
         srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=C.BATCH,
-                          engine="sharded" if mesh is not None else "fused",
-                          mesh=mesh, scenario=sched())
+                          batch_size=C.BATCH, spec=spec)
         t0 = time.time()
         srv.run(rounds)
         churn[tag] = (time.time() - t0, srv)
@@ -413,17 +420,18 @@ def compare_pipeline(rounds: int = 16, model: str = "mlp",
                         milestones=(1, 3, 5),
                         late_delete_round=max(4, rounds // 2), **base)
 
-    mesh = make_model_mesh(shards)
-    variants = [("sharded_sync", mesh, False),
-                ("sharded_pipelined", mesh, True),
-                ("fused_sync", None, False),
-                ("fused_pipelined", None, True)]
+    mesh = make_model_mesh(shards)   # shared across both sharded runs
+    variants = [
+        ("sharded_sync", EngineSpec(model_shards=shards, mesh=mesh)),
+        ("sharded_pipelined", EngineSpec(model_shards=shards, mesh=mesh,
+                                         pipeline=True)),
+        ("fused_sync", EngineSpec()),
+        ("fused_pipelined", EngineSpec(pipeline=True))]
     servers = {}
     total = {}
-    for tag, m, pipe in variants:
+    for tag, spec in variants:
         srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=C.BATCH, engine="fused", mesh=m,
-                          pipeline=pipe)
+                          batch_size=C.BATCH, spec=spec)
         t0 = time.time()
         srv.run(rounds)
         total[tag] = time.time() - t0
@@ -431,7 +439,7 @@ def compare_pipeline(rounds: int = 16, model: str = "mlp",
 
     live = [m.live_models for m in servers["sharded_sync"].metrics]
     lines = []
-    for tag, _, pipe in variants:
+    for tag, _ in variants:
         med = float(np.median([servers[tag].metrics[r - 1].wall_s
                                for r in range(rounds // 2 + 1,
                                               rounds + 1)]))
@@ -456,7 +464,7 @@ def compare_pipeline(rounds: int = 16, model: str = "mlp",
         f"skipped={st['skipped']};shards={shards}"))
     # pipelining must be a pure scheduling refactor: identical
     # population dynamics on the same seed
-    for tag, _, _ in variants[1:]:
+    for tag, _ in variants[1:]:
         other = [m.live_models for m in servers[tag].metrics]
         if other != live:
             raise AssertionError(
@@ -494,8 +502,8 @@ def measure_sparse_eval(rounds: int = 16, model: str = "mlp",
     total = {}
     for tag, sparse in (("dense", None), ("sparse", crossover)):
         srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=C.BATCH, engine="fused",
-                          sparse_eval=sparse)
+                          batch_size=C.BATCH,
+                          spec=EngineSpec(sparse_eval=sparse))
         t0 = time.time()
         srv.run(rounds)
         total[tag] = time.time() - t0
@@ -527,6 +535,78 @@ def measure_sparse_eval(rounds: int = 16, model: str = "mlp",
     return lines
 
 
+def compare_semisync(rounds: int = 16, model: str = "mlp",
+                     quick: bool = False):
+    """Semi-synchronous rounds vs the full barrier under a heavy-tail
+    straggler regime (DESIGN.md §12): identical seeded fused runs, one
+    synchronous, one with a lognormal latency model (σ=2, so the slowest
+    device in a cohort routinely takes several times the median), 75%
+    quorum, and 5% mid-round dropouts. The headline number is VIRTUAL
+    round time — Σ quorum-deadline waits vs Σ full-barrier waits on the
+    SAME latency draws (both accumulated by the coordinator, so the
+    ratio isolates the policy) — alongside the staleness histogram of
+    folded updates, the buffer accounting, and the accuracy cost of
+    discounted late folds."""
+    from repro.data.scenarios import StragglerModel
+
+    params, loss_fn, acc_fn = C.model_fns(model)
+    if quick:
+        rounds = max(rounds, 8)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65,
+                                 devices_per_archetype=1)
+        base = dict(n_devices=len(devs), devices_per_round=4,
+                    milestones=(1, 2), late_delete_round=3,
+                    local_epochs=1)
+    else:
+        rounds = max(rounds, 12)
+        devs, data = C.make_data("hierarchical", seed=0, bias=0.65)
+        base = dict(devices_per_round=6, milestones=(1, 2, 3),
+                    late_delete_round=5, local_epochs=1)
+    cfg = C.default_cfg(quantize_bits=8, **base)
+    straggler = StragglerModel(distribution="lognormal", sigma=2.0,
+                               quorum=0.75, dropout_rate=0.05,
+                               seed=cfg.seed)
+
+    servers = {}
+    total = {}
+    for tag, spec in (("sync", EngineSpec()),
+                      ("semisync", EngineSpec(straggler=straggler))):
+        srv = FedCDServer(cfg, params, loss_fn, acc_fn, data,
+                          batch_size=C.BATCH, spec=spec)
+        t0 = time.time()
+        srv.run(rounds)
+        total[tag] = time.time() - t0
+        servers[tag] = srv
+
+    st = servers["semisync"].semisync_stats.as_dict()
+    if not st["folded"]:
+        raise AssertionError(
+            f"semisync bench never folded a straggler: {st}")
+    speedup = st["t_sync"] / max(st["t_semisync"], 1e-12)
+    acc = {t: float(servers[t].metrics[-1].test_acc.mean())
+           for t in servers}
+    lines = []
+    for tag in ("sync", "semisync"):
+        med = float(np.median([servers[tag].metrics[r - 1].wall_s
+                               for r in range(rounds // 2 + 1,
+                                              rounds + 1)]))
+        lines.append(C.csv_line(
+            f"semisync_round_wall_{tag}", total[tag] / rounds * 1e6,
+            f"median_steady_us={med * 1e6:.0f};rounds={rounds};"
+            f"devices={cfg.n_devices};acc={acc[tag]:.3f}"))
+    hist = ";".join(f"tau{k}={v}"
+                    for k, v in st["staleness_hist"].items())
+    lines.append(C.csv_line(
+        "semisync_virtual_speedup", 0.0,
+        f"sync_over_semisync={speedup:.2f}x;"
+        f"t_sync={st['t_sync']:.1f};t_semisync={st['t_semisync']:.1f};"
+        f"stragglers={st['stragglers']}/{st['dispatched']};"
+        f"folded={st['folded']};expired={st['expired']};"
+        f"dropouts={st['dropouts']};{hist or 'tau_none=0'};"
+        f"acc_delta={acc['semisync'] - acc['sync']:+.3f}"))
+    return lines
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare-engines", action="store_true",
@@ -539,6 +619,9 @@ if __name__ == "__main__":
                          "the synchronous engines (uses --mesh shards)")
     ap.add_argument("--sparse-eval", action="store_true",
                     help="time dense vs holder-only validation scoring")
+    ap.add_argument("--semisync", action="store_true",
+                    help="semi-synchronous rounds vs the full barrier "
+                         "under a heavy-tail straggler regime")
     ap.add_argument("--data-mesh", action="store_true",
                     help="time the 2-D (model x data) mesh vs the 1-D "
                          "model mesh at 4 simulated devices (2x2 vs "
@@ -569,6 +652,9 @@ if __name__ == "__main__":
         out += measure_sparse_eval(args.rounds or (8 if args.quick
                                                    else 16),
                                    args.model, quick=args.quick)
+    if args.semisync:
+        out += compare_semisync(args.rounds or (8 if args.quick else 16),
+                                args.model, quick=args.quick)
     if args.data_mesh:
         out += compare_datamesh(args.rounds or (8 if args.quick else 12),
                                 args.model, quick=args.quick)

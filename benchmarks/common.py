@@ -65,9 +65,9 @@ def run_pair(setup: str, rounds: int, cfg: FedCDConfig, model: str = "mlp",
     devs, data = make_data(setup, seed=cfg.seed, bias=bias)
     params, loss_fn, acc_fn = model_fns(model)
     fedcd = FedCDServer(cfg, params, loss_fn, acc_fn, data, batch_size=BATCH,
-                        engine=engine)
+                        spec=engine)
     fedavg = FedAvgServer(cfg, params, loss_fn, acc_fn, data,
-                          batch_size=BATCH, engine=engine)
+                          batch_size=BATCH, spec=engine)
     fedcd.run(rounds)
     fedavg.run(rounds)
     return fedcd, fedavg, devs

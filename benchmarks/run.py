@@ -83,6 +83,8 @@ def main() -> None:
             8 if args.fast else 12, args.model, quick=args.fast),
         "sparse": lambda: bench_model_dynamics.measure_sparse_eval(
             8 if args.fast else 16, args.model, quick=args.fast),
+        "semisync": lambda: bench_model_dynamics.compare_semisync(
+            8 if args.fast else 16, args.model, quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),

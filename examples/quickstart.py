@@ -19,10 +19,13 @@ def main() -> None:
                       milestones=(3, 8), late_delete_round=10, lr=0.08)
     params = init_mlp_classifier(jax.random.PRNGKey(0), hidden=64)
 
+    # spec= picks the engine ("fused" is the default; try
+    # "fused+semisync" for semi-synchronous rounds or "sharded@2x2"
+    # on a multi-device host — see repro.core.spec.EngineSpec)
     fedcd = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                        batch_size=32)
+                        batch_size=32, spec="fused")
     fedavg = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                          batch_size=32)
+                          batch_size=32, spec="fused")
     print(f"{'round':>5} {'FedCD acc':>10} {'FedAvg acc':>10} "
           f"{'live models':>12}")
     for t in range(1, 16):

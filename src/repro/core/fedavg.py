@@ -21,18 +21,20 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.config import FedCDConfig
-from repro.core.fedcd import ENGINES
-from repro.core.plan import RoundPlan
+from repro.core.plan import RoundPlan, SemiSyncCoordinator
+from repro.core.spec import resolve_spec
 from repro.federated.executors import (FedAvgFusedExecutor,
                                        FedAvgHostExecutor,
+                                       FedAvgSharded2DExecutor,
                                        FedAvgShardedExecutor)
 from repro.federated.simulation import draw_round_sample
+from repro.launch.mesh import data_axis_size
 
 
 @dataclass
@@ -48,29 +50,34 @@ class FedAvgServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 engine: str = "fused", mesh: Any = None,
-                 pipeline: bool = False):
-        """``mesh``: a 1-D ``model``-axis mesh shards the fused round's
-        work-PAIR axis (FedAvg has one global model, so the parallel
-        dimension is the participating devices; eq 1 completes with one
-        psum — DESIGN.md §9). Requires ``engine="fused"``.
-        ``pipeline``: split-phase dispatch with the next round's
-        training enqueued before this round's readback (DESIGN.md §10).
-        """
-        if engine not in ENGINES + ("sharded",):
-            raise ValueError(
-                f"engine must be one of {ENGINES + ('sharded',)}: "
-                f"{engine!r}")
-        if engine == "sharded":
-            if mesh is None:
-                raise ValueError("engine='sharded' requires mesh=")
-            engine = "fused"
-        if mesh is not None and engine != "fused":
-            raise ValueError(
-                f"mesh sharding requires engine='fused', got {engine!r}")
-        if pipeline and engine != "fused":
-            raise ValueError(
-                f"pipeline=True requires engine='fused', got {engine!r}")
+                 spec: Any = None, engine: Optional[str] = None,
+                 mesh: Any = None, pipeline: Optional[bool] = None,
+                 straggler: Any = None):
+        """``spec``: an :class:`~repro.core.spec.EngineSpec` (or preset
+        string) — FedAvg supports the fused/batched/legacy planes,
+        mesh sharding of the work-PAIR axis over ``model`` (one global
+        model, so the parallel dimension is the participating devices;
+        DESIGN.md §9), the 2-D mesh with the DEVICE axis sharded over
+        ``data`` (a psum over both axes completes eq 1 — DESIGN.md
+        §11), ``pipeline`` split-phase dispatch, and a semi-synchronous
+        ``straggler`` model (DESIGN.md §12). FedCD-only capabilities
+        (``scenario``, ``sparse_eval``, ``migrate_threshold``,
+        ``use_agg_kernel``) are rejected here. The ``engine=``/
+        ``mesh=``/``pipeline=``/``straggler=`` kwargs are the pre-spec
+        spellings (one-release deprecation shim)."""
+        spec = resolve_spec(
+            spec, dict(engine=engine, mesh=mesh, pipeline=pipeline,
+                       straggler=straggler), "FedAvgServer")
+        for name, on in (("scenario churn", spec.scenario is not None),
+                         ("sparse_eval", spec.sparse_eval is not None),
+                         ("migrate_threshold",
+                          spec.migrate_threshold is not None),
+                         ("use_agg_kernel", spec.use_agg_kernel)):
+            if on:
+                raise ValueError(
+                    f"FedAvgServer does not support {name} (FedCD only)")
+        engine, mesh = spec.engine, spec.resolve_mesh()
+        self.spec = spec
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.data = data
@@ -78,20 +85,27 @@ class FedAvgServer:
         self.n_devices = data["train"][0].shape[0]
         self.engine = engine
         self.mesh = mesh
-        self.pipeline = pipeline
+        self.pipeline = spec.pipeline
         if engine == "fused":
-            if mesh is not None:
+            if mesh is not None and data_axis_size(mesh) > 1:
+                self.executor = FedAvgSharded2DExecutor(
+                    cfg, data, init_params, loss_fn, acc_fn, mesh,
+                    pipeline=self.pipeline)
+            elif mesh is not None:
                 self.executor = FedAvgShardedExecutor(
                     cfg, data, init_params, loss_fn, acc_fn, mesh,
-                    pipeline=pipeline)
+                    pipeline=self.pipeline)
             else:
                 self.executor = FedAvgFusedExecutor(
                     cfg, data, init_params, loss_fn, acc_fn,
-                    pipeline=pipeline)
+                    pipeline=self.pipeline)
         else:
             self.executor = FedAvgHostExecutor(
                 cfg, data, init_params, loss_fn, acc_fn, batch_size,
                 batched=(engine == "batched"))
+        self.semisync = (SemiSyncCoordinator(spec.straggler,
+                                             self.n_devices)
+                         if spec.straggler is not None else None)
         self.metrics: List[FedAvgRound] = []
         self._model_bytes = sum(
             leaf.size * leaf.dtype.itemsize
@@ -102,6 +116,13 @@ class FedAvgServer:
     def pipeline_stats(self):
         """Speculation accounting (pipelined executors; None otherwise)."""
         return self.executor.stats
+
+    @property
+    def semisync_stats(self):
+        """Semi-synchronous round accounting
+        (:class:`~repro.core.plan.SemiSyncStats`; None when the spec
+        has no straggler model)."""
+        return self.semisync.stats if self.semisync is not None else None
 
     @property
     def params(self) -> Any:
@@ -136,6 +157,8 @@ class FedAvgServer:
                 self.data["train"][0].shape[1], self.batch_size,
                 cfg.local_epochs)
         plan = self._plan(t, participating, perms)
+        if self.semisync is not None:
+            self.semisync.resolve(plan, live=[0])
         self.executor.launch(plan)
         if self.pipeline:
             # FedAvg's next round depends on nothing this round computes:

@@ -49,6 +49,7 @@ from repro.core import quantize as qz
 from repro.core.lifecycle import apply_deletions, clone_at_milestone
 from repro.core.plan import RoundPlanner
 from repro.core.registry import ModelRegistry
+from repro.core.spec import resolve_spec
 from repro.core.scores import (init_scores, normalized_scores,
                                push_accuracies)
 from repro.data.bank import DeviceDataBank
@@ -85,68 +86,40 @@ class FedCDServer:
     def __init__(self, cfg: FedCDConfig, init_params: Any,
                  loss_fn: Callable, acc_fn: Callable,
                  data: Dict[str, Any], batch_size: int = 64,
-                 use_agg_kernel: bool = False, engine: str = "fused",
-                 mesh: Any = None, pipeline: bool = False,
+                 spec: Any = None,
+                 use_agg_kernel: Optional[bool] = None,
+                 engine: Optional[str] = None,
+                 mesh: Any = None, pipeline: Optional[bool] = None,
                  sparse_eval: Optional[float] = None,
                  scenario: Any = None,
-                 migrate_threshold: Optional[float] = None):
+                 migrate_threshold: Optional[float] = None,
+                 straggler: Any = None):
         """data: stacked device splits from ``partition.stack_devices``:
         {"train": (xs (N,n,...), ys), "val": ..., "test": ...}. The
         fused-family engines wrap it into a device-resident
         :class:`~repro.data.bank.DeviceDataBank` (DESIGN.md §11).
 
-        ``mesh``: a launch mesh (``launch.mesh.make_launch_mesh`` /
-        ``make_model_mesh``) selects the SHARDED data plane: the param
-        bank's rows over the ``model`` axis (DESIGN.md §9) and, when
-        the mesh's ``data`` axis is >1, the data bank's rows over
-        ``data`` with work pairs bucketed per mesh cell (DESIGN.md
-        §11). ``engine="sharded"`` names this plane explicitly (it
-        requires ``mesh=``); ``engine="fused"`` with a mesh is the
-        back-compat spelling. ``max_models`` must divide over the
-        model axis and the data-bank rows over the data axis.
+        ``spec``: an :class:`~repro.core.spec.EngineSpec` (or preset
+        string like ``"sharded@2x2+pipeline"``) — the one validated
+        description of the engine: data plane, mesh shape, pipelining,
+        sparse eval, churn scenario, row migration, aggregation kernel
+        and the semi-synchronous straggler model (DESIGN.md §12). Every
+        invalid combination fails here, at construction.
 
-        ``pipeline``: cross-round pipelined dispatch (fused/sharded
-        engines): round t+1's training is speculatively enqueued while
-        round t's eval matrices are in flight (DESIGN.md §10).
-
-        ``sparse_eval``: density crossover below which validation
-        scoring goes holder-only instead of the dense (stale, N)
-        matrix (DESIGN.md §10).
-
-        ``scenario``: a :class:`~repro.data.scenarios.ChurnSchedule`
-        makes the device population DYNAMIC — joins/leaves/label drift
-        apply at each round's start as device-lifecycle intents
-        alongside the model clone/delete intents (DESIGN.md §11).
-        Fused-family engines only.
-
-        ``migrate_threshold``: sharded engines — migrate a hot bank row
-        between rounds when a shard's pair-load EWMA exceeds this
-        multiple of the mean (``StackedParamBank.rebalance``)."""
-        if engine not in ENGINES + ("sharded",):
-            raise ValueError(
-                f"engine must be one of {ENGINES + ('sharded',)}: "
-                f"{engine!r}")
-        if engine == "sharded":
-            if mesh is None:
-                raise ValueError("engine='sharded' requires mesh=")
-            engine = "fused"             # one fused data plane, meshed
-        if mesh is not None and engine != "fused":
-            raise ValueError(
-                f"mesh sharding requires engine='fused', got {engine!r}")
-        if pipeline and engine != "fused":
-            raise ValueError(
-                f"pipeline=True requires engine='fused', got {engine!r}")
-        if sparse_eval is not None and engine != "fused":
-            raise ValueError(
-                f"sparse_eval requires engine='fused', got {engine!r}")
-        if scenario is not None and engine != "fused":
-            raise ValueError(
-                f"scenario churn requires engine='fused', got {engine!r}")
-        if migrate_threshold is not None and mesh is None:
-            raise ValueError("migrate_threshold requires mesh=")
-        if use_agg_kernel and mesh is not None and data_axis_size(mesh) > 1:
-            raise ValueError(
-                "use_agg_kernel is unsupported with a sharded data axis")
+        The remaining engine kwargs (``engine=``, ``mesh=``,
+        ``pipeline=``, ``sparse_eval=``, ``scenario=``,
+        ``migrate_threshold=``, ``use_agg_kernel=``, ``straggler=``)
+        are the pre-spec spellings, kept one release as a deprecation
+        shim — they translate through ``EngineSpec.from_legacy`` and
+        may not be combined with ``spec=``."""
+        spec = resolve_spec(
+            spec, dict(engine=engine, mesh=mesh, pipeline=pipeline,
+                       sparse_eval=sparse_eval, scenario=scenario,
+                       migrate_threshold=migrate_threshold,
+                       use_agg_kernel=use_agg_kernel,
+                       straggler=straggler), "FedCDServer")
+        engine, mesh = spec.engine, spec.resolve_mesh()
+        self.spec = spec
         self.cfg = cfg
         # Two host RNG streams (DESIGN.md §7): ``rng`` drives round
         # sampling (participation + perms) ONLY, so the fused engine can
@@ -160,10 +133,10 @@ class FedCDServer:
         assert n_initial == cfg.n_devices, (n_initial, cfg.n_devices)
         self.mesh = mesh
         self.engine = engine
-        self.pipeline = pipeline
-        self.use_agg_kernel = use_agg_kernel
-        self.scenario = scenario
-        self.migrate_threshold = migrate_threshold
+        self.pipeline = spec.pipeline
+        self.use_agg_kernel = spec.use_agg_kernel
+        self.scenario = scenario = spec.scenario
+        self.migrate_threshold = spec.migrate_threshold
         self._n_shards = model_axis_size(mesh) if mesh is not None else 0
         self._rows_per_shard = (bank_rows_per_shard(cfg.max_models, mesh)
                                 if mesh is not None else 0)
@@ -196,7 +169,9 @@ class FedCDServer:
                                  cfg.score_window)
         # ids beyond the initial population haven't joined yet
         self.state.active[n_initial:, :] = False
-        self.planner = RoundPlanner(cfg, sparse_eval=sparse_eval)
+        self.planner = RoundPlanner(cfg, sparse_eval=spec.sparse_eval,
+                                    straggler=spec.straggler,
+                                    n_devices=self.n_devices)
         self.executor = self._make_executor(loss_fn, acc_fn)
         self.metrics: List[RoundMetrics] = []
         self._model_bytes = sum(
@@ -235,6 +210,14 @@ class FedCDServer:
     def pipeline_stats(self):
         """Speculation accounting (pipelined executors; None otherwise)."""
         return self.executor.stats
+
+    @property
+    def semisync_stats(self):
+        """Semi-synchronous round accounting
+        (:class:`~repro.core.plan.SemiSyncStats`; None when the spec has
+        no straggler model)."""
+        coord = self.planner.semisync
+        return coord.stats if coord is not None else None
 
     # -- transport accounting (paper §3.6) --------------------------------
     def _transport_bytes(self, n_transfers: int) -> int:
@@ -352,6 +335,7 @@ class FedCDServer:
             transfers += sum(int(self.state.active[:, m2].sum())
                              for m2 in self.registry.live_ids())
             self.executor.on_clones(cloned)
+            self.planner.on_clones(cloned)   # clones inherit fold mass
 
         metrics = self._collect(t, transfers, time.time() - t0)
         self.metrics.append(metrics)

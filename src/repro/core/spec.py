@@ -1,0 +1,255 @@
+"""EngineSpec: one typed, validated description of a server's engine.
+
+PR 1-5 grew the ``FedCDServer``/``FedAvgServer`` constructors a kwarg
+per capability (``engine=``, ``mesh=``, ``pipeline=``, ``sparse_eval=``,
+``scenario=``, ``migrate_threshold=``, ``use_agg_kernel=`` — and two
+spellings for the sharded plane). :class:`EngineSpec` collapses them
+into one frozen dataclass with a string preset grammar, validates every
+combination at CONSTRUCTION (not mid-round), and owns mesh creation, so
+every entry point — tests, benches, examples — fails fast on an invalid
+combination. The old kwargs survive one release as a deprecation shim
+(``FedCDServer(..., engine=..., mesh=...)`` warns and builds the
+equivalent spec).
+
+String grammar (``EngineSpec.parse``)::
+
+    spec      := engine [ "@" shards ] ( "+" flag )*
+    engine    := "fused" | "batched" | "legacy" | "sharded"
+    shards    := INT | INT "x" INT            # model [x data]
+    flag      := "pipeline" | "semisync" | "kernel"
+               | "sparse" ":" FLOAT | "migrate" ":" FLOAT
+
+``"sharded"`` is the canonical name for the fused data plane on a
+launch mesh (``sharded@4`` = 4 model shards; ``sharded@2x2`` = the 2-D
+model × data mesh); ``"fused"`` is the single-device plane. ``semisync``
+attaches a default :class:`~repro.data.scenarios.StragglerModel` —
+construct the spec directly to tune latency/quorum/staleness knobs.
+
+Examples::
+
+    EngineSpec.parse("fused")
+    EngineSpec.parse("sharded@2x2+pipeline")
+    EngineSpec.parse("fused+semisync+sparse:0.25")
+    EngineSpec(engine="fused", straggler=StragglerModel(sigma=2.0))
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+MESHLESS_ENGINES = ("fused", "batched", "legacy")
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """One engine configuration (module docstring for the grammar).
+
+    ``engine`` is one of the MESHLESS engines; sharding is expressed by
+    ``model_shards``/``data_shards`` (>1 selects the sharded planes and
+    requires ``engine="fused"``). ``mesh`` optionally injects a
+    prebuilt launch mesh (tests sharing one mesh across servers);
+    otherwise :meth:`resolve_mesh` builds it from the shard counts.
+    """
+    engine: str = "fused"
+    model_shards: int = 1
+    data_shards: int = 1
+    pipeline: bool = False
+    sparse_eval: Optional[float] = None
+    migrate_threshold: Optional[float] = None
+    use_agg_kernel: bool = False
+    scenario: Any = None             # ChurnSchedule (FedCD only)
+    straggler: Any = None            # StragglerModel (semi-sync rounds)
+    mesh: Any = field(default=None, compare=False)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def parse(cls, text: str) -> "EngineSpec":
+        """Build a spec from the preset grammar (module docstring)."""
+        parts = text.strip().split("+")
+        head, flags = parts[0], parts[1:]
+        engine, _, shard_txt = head.partition("@")
+        kw: dict = {}
+        if engine == "sharded":
+            engine = "fused"
+            if not shard_txt:
+                raise ValueError(
+                    f"{text!r}: 'sharded' needs shard counts — "
+                    "e.g. 'sharded@4' or 'sharded@2x2'")
+        elif shard_txt:
+            raise ValueError(
+                f"{text!r}: shard counts ('@{shard_txt}') only apply to "
+                "'sharded'")
+        if shard_txt:
+            m, _, d = shard_txt.partition("x")
+            try:
+                kw["model_shards"] = int(m)
+                kw["data_shards"] = int(d) if d else 1
+            except ValueError:
+                raise ValueError(
+                    f"{text!r}: bad shard counts {shard_txt!r} "
+                    "(want INT or INTxINT)") from None
+        for flag in flags:
+            name, _, value = flag.partition(":")
+            if name == "pipeline" and not value:
+                kw["pipeline"] = True
+            elif name == "kernel" and not value:
+                kw["use_agg_kernel"] = True
+            elif name == "semisync" and not value:
+                from repro.data.scenarios import StragglerModel
+                kw["straggler"] = StragglerModel()
+            elif name == "sparse" and value:
+                kw["sparse_eval"] = float(value)
+            elif name == "migrate" and value:
+                kw["migrate_threshold"] = float(value)
+            else:
+                raise ValueError(f"{text!r}: unknown flag {flag!r}")
+        return cls(engine=engine, **kw).validate()
+
+    @classmethod
+    def coerce(cls, spec: "EngineSpec | str") -> "EngineSpec":
+        if isinstance(spec, str):
+            return cls.parse(spec)
+        if not isinstance(spec, EngineSpec):
+            raise TypeError(f"spec must be an EngineSpec or preset "
+                            f"string: {spec!r}")
+        return spec.validate()
+
+    @classmethod
+    def from_legacy(cls, engine: str = "fused", mesh: Any = None,
+                    pipeline: bool = False,
+                    sparse_eval: Optional[float] = None,
+                    scenario: Any = None,
+                    migrate_threshold: Optional[float] = None,
+                    use_agg_kernel: bool = False,
+                    straggler: Any = None) -> "EngineSpec":
+        """The deprecation shim's translation of the PR 1-5 kwargs
+        (including the ``engine="sharded"``/``engine="fused", mesh=``
+        double spelling)."""
+        if engine == "sharded" and mesh is None:
+            raise ValueError("engine='sharded' requires mesh=")
+        if engine == "sharded":
+            engine = "fused"
+        from repro.launch.mesh import data_axis_size, model_axis_size
+        spec = cls(
+            engine=engine,
+            model_shards=model_axis_size(mesh) if mesh is not None else 1,
+            data_shards=data_axis_size(mesh) if mesh is not None else 1,
+            pipeline=pipeline, sparse_eval=sparse_eval,
+            scenario=scenario, migrate_threshold=migrate_threshold,
+            use_agg_kernel=use_agg_kernel, straggler=straggler,
+            mesh=mesh)
+        return spec.validate()
+
+    # -- validation --------------------------------------------------------
+    def validate(self) -> "EngineSpec":
+        """Every cross-field rule the servers used to scatter across
+        their constructors, checked up front. Returns self (chainable).
+        """
+        if self.engine not in MESHLESS_ENGINES:
+            raise ValueError(
+                f"engine must be one of {MESHLESS_ENGINES}: "
+                f"{self.engine!r}")
+        if self.model_shards < 1 or self.data_shards < 1:
+            raise ValueError(
+                f"shard counts must be >= 1: "
+                f"{self.model_shards}x{self.data_shards}")
+        if self.engine != "fused":
+            for name, on in (("mesh sharding", self.sharded),
+                             ("pipeline=True", self.pipeline),
+                             ("sparse_eval", self.sparse_eval is not None),
+                             ("scenario churn", self.scenario is not None),
+                             ("a straggler model",
+                              self.straggler is not None)):
+                if on:
+                    raise ValueError(
+                        f"{name} requires engine='fused', got "
+                        f"{self.engine!r}")
+        if self.migrate_threshold is not None and not self.sharded:
+            raise ValueError(
+                "migrate_threshold requires a sharded spec (mesh)")
+        if self.use_agg_kernel and self.data_shards > 1:
+            raise ValueError(
+                "use_agg_kernel is unsupported with a sharded data axis "
+                "(eq 1 completes with a psum over partial sums)")
+        if self.mesh is not None:
+            from repro.launch.mesh import data_axis_size, model_axis_size
+            if (model_axis_size(self.mesh) != self.model_shards
+                    or data_axis_size(self.mesh) != self.data_shards):
+                raise ValueError(
+                    f"mesh shape {dict(self.mesh.shape)} does not match "
+                    f"spec {self.model_shards}x{self.data_shards}")
+        return self
+
+    # -- derived views -----------------------------------------------------
+    @property
+    def sharded(self) -> bool:
+        return self.model_shards > 1 or self.data_shards > 1
+
+    @property
+    def semisync(self) -> bool:
+        return self.straggler is not None
+
+    def resolve_mesh(self) -> Any:
+        """The launch mesh this spec runs on (``None`` for meshless
+        engines): the injected one, or a fresh
+        ``make_launch_mesh(model_shards, data_shards)``."""
+        if not self.sharded:
+            return self.mesh
+        if self.mesh is not None:
+            return self.mesh
+        from repro.launch.mesh import make_launch_mesh
+        return make_launch_mesh(model=self.model_shards,
+                                data=self.data_shards)
+
+    def with_mesh(self, mesh: Any) -> "EngineSpec":
+        return replace(self, mesh=mesh)
+
+    @property
+    def canonical(self) -> str:
+        """The preset string this spec round-trips through ``parse``
+        (object-valued fields — scenario, tuned straggler models, an
+        injected mesh — have no string form and are omitted)."""
+        if self.sharded:
+            head = f"sharded@{self.model_shards}"
+            if self.data_shards > 1:
+                head += f"x{self.data_shards}"
+        else:
+            head = self.engine
+        flags = []
+        if self.pipeline:
+            flags.append("pipeline")
+        if self.straggler is not None:
+            flags.append("semisync")
+        if self.sparse_eval is not None:
+            flags.append(f"sparse:{self.sparse_eval:g}")
+        if self.migrate_threshold is not None:
+            flags.append(f"migrate:{self.migrate_threshold:g}")
+        if self.use_agg_kernel:
+            flags.append("kernel")
+        return "+".join([head] + flags)
+
+
+def resolve_spec(spec: "EngineSpec | str | None", legacy: dict,
+                 owner: str) -> EngineSpec:
+    """The servers' constructor entry point: coerce ``spec`` (EngineSpec
+    or preset string), or translate explicitly-passed legacy kwargs
+    through the one-release deprecation shim. Passing both is an error —
+    there would be two sources of truth."""
+    used = {k: v for k, v in legacy.items() if v is not None}
+    if spec is not None and used:
+        raise TypeError(
+            f"{owner}: pass either spec= or the legacy kwargs "
+            f"({', '.join(sorted(used))}), not both")
+    if spec is not None:
+        return EngineSpec.coerce(spec)
+    if used:
+        warnings.warn(
+            f"{owner}: the {', '.join(sorted(used))} kwargs are "
+            "deprecated — pass spec=EngineSpec(...) or a preset string "
+            "like 'sharded@2x2+pipeline' instead",
+            DeprecationWarning, stacklevel=3)
+    defaults = dict(engine="fused", pipeline=False,
+                    use_agg_kernel=False)
+    kw = {**defaults, **used}
+    return EngineSpec.from_legacy(**kw)

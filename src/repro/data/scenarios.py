@@ -32,6 +32,7 @@ from repro.data.partition import (DeviceData, dirichlet_probs,
                                   make_device)
 
 CHURN_STREAM = 0xC4A12   # keys the churn-data RNG off the schedule seed
+STRAGGLER_STREAM = 0x57A66   # keys the latency/dropout RNG off the model seed
 
 
 @dataclass(frozen=True)
@@ -120,6 +121,105 @@ class ChurnSchedule:
         return make_device(rng, archetype, self.archetype_probs(archetype),
                            self.n_train, self.n_val, self.n_test,
                            self.noise)
+
+
+@dataclass(frozen=True)
+class DeviceDropout:
+    """A scripted mid-round failure: the device's dispatched update for
+    ``round`` never arrives (its pairs aggregate with zero weight and
+    are never buffered — unlike a straggler, there is nothing to fold)."""
+    round: int
+    device: int
+
+
+@dataclass
+class StragglerModel:
+    """Per-device latency + mid-round dropout model for semi-synchronous
+    rounds (DESIGN.md §12). Latencies are VIRTUAL time: the planner uses
+    them to resolve which pairs make the round's aggregation deadline,
+    not to delay any real dispatch.
+
+    Determinism contract (mirrors :class:`ChurnSchedule`): each round's
+    latencies and random dropouts are drawn host-side from a dedicated
+    RNG stream seeded ``[seed, STRAGGLER_STREAM, round]`` as whole
+    per-device vectors in a fixed order, never off an engine's dispatch
+    order — every engine sees the identical arrival trajectory. A
+    device's persistent speed factor (``hetero``) comes from the
+    round-independent stream ``[seed, STRAGGLER_STREAM]``.
+
+    * ``distribution``: ``"zero"`` (the synchronous gate — all arrivals
+      instantaneous), ``"exponential"``, or ``"lognormal"`` (heavy tail;
+      ``sigma`` is the log-space spread).
+    * ``quorum``: fraction of this round's arriving pairs the server
+      waits for before aggregating (FedBuff's K). The round's deadline
+      is the K-th smallest arrival; later pairs become stragglers.
+    * ``gamma`` / ``max_staleness``: a straggler folding in after τ
+      rounds carries eq-1 weight ``c·γ^τ``; buffered updates staler
+      than ``max_staleness`` rounds are discarded.
+    * ``dropout_rate`` / ``dropouts``: random per-(device, round) and
+      scripted mid-round failures.
+    """
+    distribution: str = "lognormal"   # zero|exponential|lognormal
+    scale: float = 1.0                # latency scale (virtual seconds)
+    sigma: float = 1.0                # lognormal log-space spread
+    hetero: float = 0.0               # persistent per-device speed spread
+    quorum: float = 0.75              # aggregate at this arrival fraction
+    gamma: float = 0.5                # staleness discount base
+    max_staleness: int = 2            # rounds buffered before expiry
+    dropout_rate: float = 0.0         # random mid-round failure rate
+    dropouts: Tuple[DeviceDropout, ...] = ()
+    seed: int = 0
+    _drops_by_round: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.distribution not in ("zero", "exponential", "lognormal"):
+            raise ValueError(
+                f"unknown latency distribution {self.distribution!r}")
+        if not 0.0 < self.quorum <= 1.0:
+            raise ValueError(f"quorum must be in (0, 1]: {self.quorum}")
+        if not 0.0 <= self.gamma <= 1.0:
+            raise ValueError(f"gamma must be in [0, 1]: {self.gamma}")
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0: {self.max_staleness}")
+        for e in self.dropouts:
+            self._drops_by_round.setdefault(e.round, set()).add(e.device)
+
+    @classmethod
+    def zero(cls, **kw) -> "StragglerModel":
+        """The zero-latency gate: every pair arrives instantly, so a
+        semi-synchronous run is pinned bit-exact to the synchronous one
+        (the equivalence tier's reference point)."""
+        return cls(distribution="zero", dropout_rate=0.0, **kw)
+
+    def speeds(self, id_cap: int) -> np.ndarray:
+        """Persistent per-device latency multipliers (lognormal around 1
+        with log-space spread ``hetero``; all-ones when disabled)."""
+        if self.hetero <= 0.0:
+            return np.ones(id_cap)
+        rng = np.random.default_rng([self.seed, STRAGGLER_STREAM])
+        return np.exp(self.hetero * rng.standard_normal(id_cap))
+
+    def resolve(self, t: int, id_cap: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Round ``t``'s per-device ``(latency, dropped)`` vectors —
+        drawn order-independently for the whole id space so the result
+        never depends on which devices participate or how an engine
+        buckets them."""
+        rng = np.random.default_rng([self.seed, STRAGGLER_STREAM, t])
+        if self.distribution == "zero":
+            lat = np.zeros(id_cap)
+        elif self.distribution == "exponential":
+            lat = self.scale * rng.exponential(size=id_cap)
+        else:
+            lat = self.scale * rng.lognormal(mean=0.0, sigma=self.sigma,
+                                             size=id_cap)
+        lat = lat * self.speeds(id_cap)
+        dropped = rng.random(id_cap) < self.dropout_rate
+        for d in self._drops_by_round.get(t, ()):
+            if d < id_cap:
+                dropped[d] = True
+        return lat, dropped
 
 
 def random_churn(rounds: int, n_initial: int, seed: int = 0,

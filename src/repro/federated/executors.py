@@ -53,6 +53,10 @@ from repro.federated.simulation import (bucket_size, make_eval,
                                         make_pair_eval, make_pair_train,
                                         make_sharded2d_apply,
                                         make_sharded2d_eval,
+                                        make_sharded2d_fedavg_eval,
+                                        make_sharded2d_fedavg_finish,
+                                        make_sharded2d_fedavg_round,
+                                        make_sharded2d_fedavg_train,
                                         make_sharded2d_finish,
                                         make_sharded2d_pair_eval,
                                         make_sharded2d_round,
@@ -103,12 +107,68 @@ class TrainMeta:
     """Which (model, device) pairs a dispatched train batch covers, in
     bucket-column order (the repair contract: aggregation weights are
     addressed by these columns, so a superset batch aggregates
-    identically once dead pairs get zero weight)."""
+    identically once dead pairs get zero weight). ``positions[k]`` is
+    pair k's row in the trained batch's leading axis (identity for the
+    unsharded engines, bucket-slot for the sharded ones) — the harvest
+    path reads straggler pairs' trained rows through it."""
     pair_model: List[int]
     pair_device: List[int]
     b_pad: int
     pair_groups: Optional[List[List[int]]] = None    # sharded only
-    weights: Optional[np.ndarray] = None             # FedAvg sharded only
+    positions: Optional[List[int]] = None
+
+
+def _group_positions(groups: List[List[int]], width: int,
+                     n_pairs: int) -> List[int]:
+    """Pair k's trained-batch row under a grouped bucketing: group g's
+    j-th member sits at ``g * width + j`` (the shard/cell block
+    layout of ``shard_work_batch`` / ``shard_pairs_2d``)."""
+    pos = [0] * n_pairs
+    for g, members in enumerate(groups):
+        for j, k in enumerate(members):
+            pos[k] = g * width + j
+    return pos
+
+
+def _harvest_rows(stale_updates: Dict[Tuple[int, int, int], Any],
+                  plan: RoundPlan, trained: Any, meta: TrainMeta) -> None:
+    """Pull straggler pairs' trained rows to the host (at readback, when
+    the batch has materialized anyway) into the carry-over buffer keyed
+    (dispatch round, model, device). Addressed by (model, device)
+    through META's positions — on a repaired speculation the batch is a
+    superset in its own column order, so plan indices must not be used
+    directly."""
+    pos_of = {(m, d): meta.positions[k]
+              for k, (m, d) in enumerate(zip(meta.pair_model,
+                                             meta.pair_device))}
+    for k in plan.straggler_pairs:
+        m, d = plan.pair_model[k], plan.pair_device[k]
+        p = pos_of.get((m, d))
+        if p is None:
+            continue
+        stale_updates[(plan.round, m, d)] = jax.tree.map(
+            lambda a: np.asarray(a[p]), trained)
+
+
+def _blend_stale(current: Any, mass: float,
+                 updates: List[Tuple[float, Any]]) -> Any:
+    """The eq-1 fold (DESIGN.md §12): blend staleness-discounted stale
+    updates into a model's params as a mass-weighted average —
+    ``(M·w + Σ c̃_j·v_j) / (M + Σ c̃_j)``. With M = 0 (a model that
+    never aggregated) this degenerates to the plain eq-1 average of the
+    late arrivals, exactly what the synchronous round would have
+    computed were they the only contributions. Accumulates in float32
+    and casts back per leaf, mirroring ``aggregate.weighted_average``."""
+    total = mass + sum(w for w, _ in updates)
+    weights = [w for w, _ in updates]
+
+    def blend(cur, *stale):
+        acc = np.asarray(cur, np.float32) * np.float32(mass)
+        for w, s in zip(weights, stale):
+            acc = acc + np.float32(w) * np.asarray(s, np.float32)
+        return (acc / np.float32(total)).astype(np.asarray(cur).dtype)
+
+    return jax.tree.map(blend, current, *[t for _, t in updates])
 
 
 class RoundExecutor:
@@ -322,6 +382,12 @@ class FusedExecutor(RoundExecutor):
                                    Tuple[int, int]]] = None
         self._spec_graveyard: List[Any] = []
         self._last_plan: Optional[RoundPlan] = None
+        # semi-synchronous carry-over buffer (DESIGN.md §12): harvested
+        # straggler trained rows keyed (dispatch round, model, device),
+        # blended back in by ``_fold_stale`` when the planner says so
+        self._stale_updates: Dict[Tuple[int, int, int], Any] = {}
+        self._pending_harvest: Optional[
+            Tuple[RoundPlan, Any, TrainMeta]] = None
         self.stats = PipelineStats() if pipeline else None
         # pipelined dispatch pads row schedules to a coarser floor so
         # the finish program's (A, L, R) shape key stops changing every
@@ -438,7 +504,8 @@ class FusedExecutor(RoundExecutor):
         m_idx, d_idx, pperms = pad_work_batch(
             pair_model, self._drows(pair_device),
             [perms[d] for d in pair_device])
-        meta = TrainMeta(list(pair_model), list(pair_device), len(m_idx))
+        meta = TrainMeta(list(pair_model), list(pair_device), len(m_idx),
+                         positions=list(range(len(pair_model))))
         return m_idx, d_idx, pperms, meta
 
     def _dispatch_train(self, tree: Any, pair_model: List[int],
@@ -512,9 +579,35 @@ class FusedExecutor(RoundExecutor):
             pend["test"] = self._dispatch_dense(plan.test_stale, "test")
         return pend
 
+    # -- semi-synchronous fold + harvest (DESIGN.md §12) -------------------
+    def _fold_stale(self, plan: RoundPlan) -> None:
+        """Blend the plan's matured straggler updates into their models'
+        bank rows — a host-side row read/modify/write through the bank's
+        item protocol, so it is engine-independent (the sharded banks
+        re-pin the written row to its owning shard) and bumps the bank
+        ``version``, which correctly invalidates any speculation built
+        on pre-fold params. Runs at launch, BEFORE dispatch: this
+        round's training and eval see post-fold params. The quantize
+        roundtrip mirrors the aggregate→quantize→scatter order of the
+        round programs."""
+        for key in plan.fold_drops:
+            self._stale_updates.pop(key, None)
+        for m, (mass, entries) in plan.folds.items():
+            updates = []
+            for e in entries:
+                tree = self._stale_updates.pop(
+                    (e.dispatch_round, m, e.device), None)
+                if tree is not None:
+                    updates.append((e.weight, tree))
+            if not updates or m not in self.registry.params:
+                continue
+            new = _blend_stale(self.registry.params[m], mass, updates)
+            self.registry.params[m] = self._maybe_compress(new)
+
     # -- launch -----------------------------------------------------------
     def launch(self, plan: RoundPlan) -> None:
         self._last_plan = plan
+        self._fold_stale(plan)
         self._note_load(plan)
         if self.pipeline:
             self._launch_split(plan)
@@ -526,7 +619,8 @@ class FusedExecutor(RoundExecutor):
 
     def _launch_sync(self, plan: RoundPlan) -> None:
         bank = self.registry.params
-        if plan.pair_model and not plan.sparse_val:
+        if plan.pair_model and not plan.sparse_val \
+                and not plan.semisync_work():
             # the whole round as ONE donated dispatch (DESIGN.md §2)
             m_idx, d_idx, pperms, meta = self._batch_args(
                 plan.pair_model, plan.pair_device, plan.perms)
@@ -546,13 +640,20 @@ class FusedExecutor(RoundExecutor):
                 pend["test"] = self._val_reader_dense(test_mat,
                                                       plan.test_stale)
         else:
-            # sparse-val rounds use the split phases (train+apply, then
-            # holder-only val scoring); no-pair rounds are eval-only
-            if plan.pair_model:
+            # sparse-val and semi-sync rounds use the split phases
+            # (train + apply, then eval dispatches; semi-sync needs the
+            # materialized train batch for the straggler harvest and
+            # skips apply when no pair made the deadline); no-pair
+            # rounds are eval-only
+            if plan.pair_model and (plan.agg_models
+                                    or plan.straggler_pairs):
                 trained, meta = self._dispatch_train(
                     bank.tree, plan.pair_model, plan.pair_device,
                     plan.perms)
-                self._dispatch_apply(trained, meta, plan)
+                if plan.agg_models:
+                    self._dispatch_apply(trained, meta, plan)
+                if plan.straggler_pairs:
+                    self._pending_harvest = (plan, trained, meta)
             pend = self._dispatch_evals(plan)
         self._pending = (plan, pend)
 
@@ -581,7 +682,7 @@ class FusedExecutor(RoundExecutor):
 
     def _launch_split(self, plan: RoundPlan) -> None:
         bank = self.registry.params
-        if plan.pair_model:
+        if plan.pair_model and (plan.agg_models or plan.straggler_pairs):
             spec = self._take_speculation(plan)
             if spec is None:
                 trained, meta = self._dispatch_train(
@@ -589,8 +690,11 @@ class FusedExecutor(RoundExecutor):
                     plan.perms)
             else:
                 trained, meta = spec
-            if plan.sparse_val:
-                self._dispatch_apply(trained, meta, plan)
+            if plan.straggler_pairs:
+                self._pending_harvest = (plan, trained, meta)
+            if plan.sparse_val or not plan.agg_models:
+                if plan.agg_models:
+                    self._dispatch_apply(trained, meta, plan)
                 pend = self._dispatch_evals(plan)
             else:
                 pend = self._finish_round(trained, meta, plan)
@@ -651,10 +755,12 @@ class FusedExecutor(RoundExecutor):
         self._drop_speculation()
         if self._last_plan is not None and (
                 self._last_plan.clone_milestone
-                or self._last_plan.churn_next):
+                or self._last_plan.churn_next
+                or self._last_plan.fold_next):
             # pending lifecycle intent: milestone clones rewrite param
             # rows and add pairs; next-round device churn rewrites data
-            # rows / changes the cohort — don't burn a dispatch
+            # rows / changes the cohort; a next-round stale fold
+            # rewrites param rows at launch — don't burn a dispatch
             self.stats.skipped += 1
             return
         if not plan.pair_model:
@@ -671,13 +777,17 @@ class FusedExecutor(RoundExecutor):
     def readback(self) -> RoundResult:
         plan, pend = self._pending
         self._pending = None
+        if self._pending_harvest is not None:
+            hplan, trained, meta = self._pending_harvest
+            self._pending_harvest = None
+            _harvest_rows(self._stale_updates, hplan, trained, meta)
         if "val" in pend:
             self._val_cache.update(pend["val"]())
         if "test" in pend:
             self._test_cache.update(pend["test"]())
-        # a trained model's old test row is stale: drop it unless it
-        # was just re-evaluated
-        for m in plan.agg_models:
+        # a changed model's (aggregated or stale-folded) old test row is
+        # stale: drop it unless it was just re-evaluated
+        for m in plan.changed_models():
             if m not in plan.test_stale:
                 self._test_cache.pop(m, None)
         accs = np.zeros((self.n_devices, self.cfg.max_models))
@@ -819,7 +929,9 @@ class ShardedExecutor(FusedExecutor):
             [perms[d] for d in pair_device], self._rows_per_shard,
             self._n_shards, minimum=max(8 // self._n_shards, 2))
         meta = TrainMeta(list(pair_model), list(pair_device), b_pad,
-                         pair_groups)
+                         pair_groups,
+                         positions=_group_positions(pair_groups, b_pad,
+                                                    len(pair_model)))
         return m_idx, d_idx, pperms, meta
 
     def _dispatch_train(self, tree: Any, pair_model: List[int],
@@ -920,7 +1032,8 @@ class ShardedExecutor(FusedExecutor):
 
     def _launch_sync(self, plan: RoundPlan) -> None:
         bank = self.registry.params
-        if plan.pair_model and not plan.sparse_val:
+        if plan.pair_model and not plan.sparse_val \
+                and not plan.semisync_work():
             m_idx, d_idx, pperms, meta = self._batch_args(
                 plan.pair_model, plan.pair_device, plan.perms)
             agg_idx, keep, w = self._shard_agg_plan(
@@ -943,11 +1056,15 @@ class ShardedExecutor(FusedExecutor):
                                                     plan.test_stale,
                                                     tpos)
         else:
-            if plan.pair_model:
+            if plan.pair_model and (plan.agg_models
+                                    or plan.straggler_pairs):
                 trained, meta = self._dispatch_train(
                     bank.tree, plan.pair_model, plan.pair_device,
                     plan.perms)
-                self._dispatch_apply(trained, meta, plan)
+                if plan.agg_models:
+                    self._dispatch_apply(trained, meta, plan)
+                if plan.straggler_pairs:
+                    self._pending_harvest = (plan, trained, meta)
             pend = self._dispatch_evals(plan)
         self._pending = (plan, pend)
 
@@ -1015,7 +1132,9 @@ class Sharded2DExecutor(ShardedExecutor):
             self._n_shards, self.databank.rows_per_shard,
             self._n_dshards, minimum=max(8 // self._n_cells, 2))
         meta = TrainMeta(list(pair_model), list(pair_device), b_pad,
-                         cell_groups)
+                         cell_groups,
+                         positions=_group_positions(cell_groups, b_pad,
+                                                    len(pair_model)))
         return m_idx, d_idx, pperms, meta
 
     def _shard_agg_plan(self, agg_rows: List[int], meta: TrainMeta,
@@ -1176,6 +1295,12 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
         self._spec: Optional[Tuple[int, Any, TrainMeta]] = None
         self._retired: List[Any] = []     # see StackedParamBank.swap
         self.stats = PipelineStats() if pipeline else None
+        # semi-sync state (DESIGN.md §12): buffered straggler updates
+        # keyed (dispatch round, model, device) + the deferred harvest
+        self._stale_updates: Dict[Tuple[int, int, int], Any] = {}
+        self._pending_harvest: Optional[
+            Tuple[RoundPlan, Any, TrainMeta]] = None
+        self._last_plan: Optional[RoundPlan] = None
 
     def _swap(self, new_stacked: Any) -> None:
         self._retired.append(self._stacked)
@@ -1186,6 +1311,7 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
         self._round = make_fused_round(loss_fn, acc_fn, cfg.lr)
         self._train = make_pair_train(loss_fn, cfg.lr)
         self._finish = make_fused_finish(acc_fn)
+        self._evalp = make_fused_eval(acc_fn)
 
     def get_params(self) -> Any:
         return jax.tree.map(lambda a: a[0], self._stacked)
@@ -1203,6 +1329,23 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
             self._retired.append(self._spec[1])
             self._spec = None
 
+    # -- semi-sync fold (DESIGN.md §12) -----------------------------------
+    def _fold_stale(self, plan: RoundPlan) -> None:
+        """Blend buffered straggler updates into the global model BEFORE
+        this round's dispatch (FedAvg has one model, id 0)."""
+        for key in plan.fold_drops:
+            self._stale_updates.pop(key, None)
+        for m, (mass, entries) in plan.folds.items():
+            updates = []
+            for e in entries:
+                tree = self._stale_updates.pop(
+                    (e.dispatch_round, m, e.device), None)
+                if tree is not None:
+                    updates.append((e.weight, tree))
+            if updates:
+                self.set_params(_blend_stale(self.get_params(), mass,
+                                             updates))
+
     # -- split-phase pieces (overridden by the sharded variant) -----------
     def _dispatch_train(self, plan: RoundPlan) -> Tuple[Any, TrainMeta]:
         d_ids = plan.pair_device
@@ -1212,12 +1355,16 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
         trained = self._train(self._stacked, m_idx, *self._dev["train"],
                               d_idx, pp)
         return trained, TrainMeta([0] * len(d_ids), list(d_ids),
-                                  len(m_idx))
+                                  len(m_idx),
+                                  positions=list(range(len(d_ids))))
 
-    def _dispatch_finish(self, trained: Any, meta: TrainMeta
-                         ) -> Tuple[Any, Any]:
+    def _dispatch_finish(self, trained: Any, meta: TrainMeta,
+                         plan: RoundPlan) -> Tuple[Any, Any]:
+        # weights come from the TRUE plan (eq-1 for FedAvg: 1 per
+        # on-time pair, 0 for weight-zeroed straggler/dropout pairs)
         w = np.zeros((1, meta.b_pad), np.float32)
-        w[0, :len(meta.pair_device)] = 1.0
+        for d, p in zip(meta.pair_device, meta.positions):
+            w[0, p] = plan.scores[d, 0]
         new_stacked, val_mat, test_mat = self._finish(
             self._stacked, trained, w, np.zeros(1, np.int32),
             np.zeros(1, np.int32), np.zeros(1, np.int32),
@@ -1225,13 +1372,20 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
         self._swap(new_stacked)
         return val_mat, test_mat
 
+    def _dispatch_eval_only(self) -> Tuple[Any, Any]:
+        """A round whose every pair straggled or dropped: the global
+        model keeps its (post-fold) params; only the eval rows run."""
+        row = np.zeros(1, np.int32)
+        return (self._evalp(self._stacked, row, *self._dev["val"]),
+                self._evalp(self._stacked, row, *self._dev["test"]))
+
     def _launch_sync(self, plan: RoundPlan) -> None:
         d_ids = plan.pair_device
         b = len(d_ids)
         m_idx, d_idx, pp = pad_work_batch(
             [0] * b, list(d_ids), [plan.perms[d] for d in d_ids])
         w = np.zeros((1, len(m_idx)), np.float32)
-        w[0, :b] = 1.0
+        w[0, :b] = plan.scores[np.asarray(d_ids, np.int64), 0]
         new_stacked, val_mat, test_mat = self._round(
             self._stacked, m_idx, d_idx, pp, w, np.zeros(1, np.int32),
             np.zeros(1, np.int32), np.zeros(1, np.int32),
@@ -1240,26 +1394,44 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
         self._pending = (val_mat, test_mat)
 
     def launch(self, plan: RoundPlan) -> None:
-        if not self.pipeline:
+        self._last_plan = plan
+        self._fold_stale(plan)           # parks any (pre-fold) spec
+        if not self.pipeline and not plan.semisync_work():
             self._launch_sync(plan)
             return
-        if self._spec is not None and self._spec[0] == plan.round:
-            _, trained, meta = self._spec
-            self._spec = None
-            self.stats.hit += 1
+        trained = meta = None
+        if plan.agg_models or plan.straggler_pairs:
+            if self._spec is not None and self._spec[0] == plan.round:
+                _, trained, meta = self._spec
+                self._spec = None
+                self.stats.hit += 1
+            else:
+                self._park_spec()
+                trained, meta = self._dispatch_train(plan)
+        if plan.agg_models:
+            self._pending = self._dispatch_finish(trained, meta, plan)
         else:
-            self._park_spec()
-            trained, meta = self._dispatch_train(plan)
-        self._pending = self._dispatch_finish(trained, meta)
+            self._pending = self._dispatch_eval_only()
+        if plan.straggler_pairs and trained is not None:
+            self._pending_harvest = (plan, trained, meta)
 
     def speculate(self, plan: RoundPlan) -> None:
         if not self.pipeline:
+            return
+        if self._last_plan is not None and self._last_plan.fold_next:
+            # round t+1 starts by folding buffered updates into the
+            # bank — training against pre-fold params would be wasted
+            self.stats.skipped += 1
             return
         trained, meta = self._dispatch_train(plan)
         self._spec = (plan.round, trained, meta)
         self.stats.speculated += 1
 
     def readback(self) -> FedAvgResult:
+        if self._pending_harvest is not None:
+            hplan, trained, meta = self._pending_harvest
+            self._pending_harvest = None
+            _harvest_rows(self._stale_updates, hplan, trained, meta)
         val_mat, test_mat = self._pending
         self._pending = None
         result = FedAvgResult(val_acc=np.asarray(val_mat)[0],
@@ -1288,13 +1460,15 @@ class FedAvgShardedExecutor(FedAvgFusedExecutor):
         self._train = make_sharded_fedavg_train(loss_fn, cfg.lr,
                                                 self.mesh)
         self._finish = make_sharded_fedavg_finish(acc_fn, self.mesh)
+        self._evalp = make_fused_eval(acc_fn)
 
     def _shard_batch(self, plan: RoundPlan
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                 np.ndarray, int]:
         """Deal the participating devices round-robin over the mesh and
         pad each shard's block to one shared bucket (zero-weight
-        padding pairs), mirroring the FedCD sharded work batch."""
+        padding pairs), mirroring the FedCD sharded work batch. Pair
+        weights come from ``plan.scores`` (1 on time, 0 weight-zeroed)."""
         S = self._n_shards
         d_ids = np.asarray(plan.pair_device, np.int64)
         chunks = [d_ids[s::S] for s in range(S)]
@@ -1307,10 +1481,15 @@ class FedAvgShardedExecutor(FedAvgFusedExecutor):
         for s, ch in enumerate(chunks):
             base = s * width
             d_idx[base:base + len(ch)] = ch
-            w[base:base + len(ch)] = 1.0
+            w[base:base + len(ch)] = plan.scores[ch, 0]
             for j, d in enumerate(ch):
                 pp[base + j] = plan.perms[d]
         return m_idx, d_idx, pp, w, width
+
+    def _positions(self, n_pairs: int, width: int) -> List[int]:
+        """Pair k deals to shard ``k % S`` slot ``k // S``."""
+        S = self._n_shards
+        return [(k % S) * width + (k // S) for k in range(n_pairs)]
 
     def _launch_sync(self, plan: RoundPlan) -> None:
         m_idx, d_idx, pp, w, _ = self._shard_batch(plan)
@@ -1321,17 +1500,119 @@ class FedAvgShardedExecutor(FedAvgFusedExecutor):
         self._pending = (val_mat, test_mat)
 
     def _dispatch_train(self, plan: RoundPlan) -> Tuple[Any, TrainMeta]:
-        m_idx, d_idx, pp, w, width = self._shard_batch(plan)
+        m_idx, d_idx, pp, _, width = self._shard_batch(plan)
         trained = self._train(self._stacked, m_idx, d_idx, pp,
                               *self._dev["train"])
-        meta = TrainMeta([0] * len(plan.pair_device),
-                         list(plan.pair_device), width, weights=w)
+        b = len(plan.pair_device)
+        meta = TrainMeta([0] * b, list(plan.pair_device), width,
+                         positions=self._positions(b, width))
         return trained, meta
 
-    def _dispatch_finish(self, trained: Any, meta: TrainMeta
-                         ) -> Tuple[Any, Any]:
+    def _dispatch_finish(self, trained: Any, meta: TrainMeta,
+                         plan: RoundPlan) -> Tuple[Any, Any]:
+        w = np.zeros(self._n_shards * meta.b_pad, np.float32)
+        for d, p in zip(meta.pair_device, meta.positions):
+            w[p] = plan.scores[d, 0]
         new_stacked, val_mat, test_mat = self._finish(
-            self._stacked, trained, meta.weights,
+            self._stacked, trained, w,
             *self._dev["val"], *self._dev["test"])
         self._swap(new_stacked)
         return val_mat, test_mat
+
+
+class FedAvgSharded2DExecutor(FedAvgFusedExecutor):
+    """FedAvg on the full 2-D (model × data) launch mesh (DESIGN.md
+    §11): the device data's row axis shards over ``data``, each
+    participating device's pair runs on a cell in its owning data slice
+    (dealt round-robin over the ``model`` axis within the slice — one
+    global model, so the model axis is pure extra work parallelism),
+    and one psum over BOTH axes completes eq 1. This is the baseline's
+    sharded data plane: device populations scale past one slice's
+    memory exactly as FedCD's do."""
+
+    def __init__(self, cfg, data, init_params, loss_fn, acc_fn, mesh,
+                 pipeline: bool = False):
+        self.mesh = mesh
+        self._n_mshards = model_axis_size(mesh)
+        self._n_dshards = data_axis_size(mesh)
+        n = data["train"][0].shape[0]
+        if n % self._n_dshards:
+            raise ValueError(
+                f"n_devices={n} must divide evenly over the data axis "
+                f"({self._n_dshards} shards)")
+        self._rows_per_dshard = n // self._n_dshards
+        super().__init__(cfg, data, init_params, loss_fn, acc_fn,
+                         pipeline)
+
+    def _build_programs(self, loss_fn, acc_fn) -> None:
+        cfg = self.cfg
+        self._round = make_sharded2d_fedavg_round(loss_fn, acc_fn,
+                                                  cfg.lr, self.mesh)
+        self._train = make_sharded2d_fedavg_train(loss_fn, cfg.lr,
+                                                  self.mesh)
+        self._finish = make_sharded2d_fedavg_finish(acc_fn, self.mesh)
+        self._eval2d = make_sharded2d_fedavg_eval(acc_fn, self.mesh)
+
+    def _cell_batch(self, plan: RoundPlan
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, List[List[int]], int]:
+        """Bucket pairs per owning mesh cell: device d lives in data
+        shard ``d // rows_per_dshard``; within the slice pairs deal
+        round-robin over the model axis. Cells are model-major
+        (``cell = sm * Sd + sd``, the ``P(("model", "data"))`` block
+        order); padding pairs carry zero weight."""
+        Sm, Sd = self._n_mshards, self._n_dshards
+        groups: List[List[int]] = [[] for _ in range(Sm * Sd)]
+        dealt = [0] * Sd
+        for k, d in enumerate(plan.pair_device):
+            sd = d // self._rows_per_dshard
+            groups[(dealt[sd] % Sm) * Sd + sd].append(k)
+            dealt[sd] += 1
+        width = bucket_size(max((len(g) for g in groups), default=0),
+                            minimum=2)
+        m_idx = np.zeros(Sm * Sd * width, np.int32)
+        d_idx = np.zeros(Sm * Sd * width, np.int32)
+        pp = np.zeros((Sm * Sd * width,) + plan.perms[0].shape, np.int32)
+        w = np.zeros(Sm * Sd * width, np.float32)
+        for c, g in enumerate(groups):
+            base = c * width
+            for j, k in enumerate(g):
+                d = plan.pair_device[k]
+                d_idx[base + j] = d % self._rows_per_dshard
+                pp[base + j] = plan.perms[d]
+                w[base + j] = plan.scores[d, 0]
+        return m_idx, d_idx, pp, w, groups, width
+
+    def _launch_sync(self, plan: RoundPlan) -> None:
+        m_idx, d_idx, pp, w, _, _ = self._cell_batch(plan)
+        new_stacked, val_mat, test_mat = self._round(
+            self._stacked, m_idx, d_idx, pp, w,
+            *self._dev["train"], *self._dev["val"], *self._dev["test"])
+        self._swap(new_stacked)
+        self._pending = (val_mat, test_mat)
+
+    def _dispatch_train(self, plan: RoundPlan) -> Tuple[Any, TrainMeta]:
+        m_idx, d_idx, pp, _, groups, width = self._cell_batch(plan)
+        trained = self._train(self._stacked, m_idx, d_idx, pp,
+                              *self._dev["train"])
+        b = len(plan.pair_device)
+        meta = TrainMeta([0] * b, list(plan.pair_device), width,
+                         pair_groups=groups,
+                         positions=_group_positions(groups, width, b))
+        return trained, meta
+
+    def _dispatch_finish(self, trained: Any, meta: TrainMeta,
+                         plan: RoundPlan) -> Tuple[Any, Any]:
+        w = np.zeros(self._n_mshards * self._n_dshards * meta.b_pad,
+                     np.float32)
+        for d, p in zip(meta.pair_device, meta.positions):
+            w[p] = plan.scores[d, 0]
+        new_stacked, val_mat, test_mat = self._finish(
+            self._stacked, trained, w,
+            *self._dev["val"], *self._dev["test"])
+        self._swap(new_stacked)
+        return val_mat, test_mat
+
+    def _dispatch_eval_only(self) -> Tuple[Any, Any]:
+        return (self._eval2d(self._stacked, *self._dev["val"]),
+                self._eval2d(self._stacked, *self._dev["test"]))

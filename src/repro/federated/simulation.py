@@ -933,6 +933,128 @@ def make_sharded_fedavg_finish(acc_fn: Callable,
     return jax.jit(step, donate_argnums=(0,))
 
 
+def _fedavg_psum_avg(stacked, trained, w, axes):
+    """FedAvg's eq 1 on a mesh: partial weighted sums per shard, one
+    ``psum`` over ``axes`` completes the average, leaving the global
+    model replicated everywhere."""
+    num = jax.tree.map(
+        lambda t: jnp.einsum("b...,b->...", t.astype(jnp.float32), w),
+        trained)
+    num = jax.lax.psum(num, axes)
+    den = jnp.maximum(jax.lax.psum(jnp.sum(w), axes), 1e-12)
+    return jax.tree.map(
+        lambda n, o: (n / den).astype(o.dtype)[None], num, stacked)
+
+
+def make_sharded2d_fedavg_round(loss_fn: Callable, acc_fn: Callable,
+                                lr: float, mesh: jax.sharding.Mesh
+                                ) -> Callable:
+    """FedAvg on the full 2-D ``(model × data)`` launch mesh: the device
+    data's row axis shards over ``data`` (each device's pair can only
+    run in its owning data slice), pairs deal round-robin over the
+    ``model`` axis WITHIN each slice (one global model — the model axis
+    is pure extra work parallelism), and a psum over BOTH axes completes
+    eq 1 (DESIGN.md §11's sharded data plane for the baseline).
+
+    Returns fn(stacked (1, ...) [donated, replicated], m_idx (C*B,)
+    zeros, d_idx (C*B,) LOCAL data rows, perms (C*B, T, b), w (C*B,),
+    xs, ys, vx, vy, tx, ty [data-row-sharded]) -> (new_stacked,
+    val (1, N), test (1, N) [column data-sharded]). Cells are
+    model-major (``cell = sm * Sd + sd``, the block order of a
+    ``P(("model", "data"))`` leading axis). Eval scores the updated
+    global model against each data slice's LOCAL device block — the
+    (1, N) matrices' columns are device rows, data-sharded."""
+    one_pair = _pair_train(loss_fn, lr)
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    cell = P(("model", "data"))
+    drow = P("data")
+    rep = P()
+    vcol = P(None, "data")
+
+    def body(stacked, m_idx, d_idx, perms, w, xs, ys, vx, vy, tx, ty):
+        trained = jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+        new_stacked = _fedavg_psum_avg(stacked, trained, w,
+                                       ("model", "data"))
+        model = jax.tree.map(lambda a: a[0], new_stacked)
+        val = eval_model(model, vx, vy)[None]
+        test = eval_model(model, tx, ty)[None]
+        return new_stacked, val, test
+
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, cell, cell, cell, cell,
+                  drow, drow, drow, drow, drow, drow),
+        out_specs=(rep, vcol, vcol), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded2d_fedavg_train(loss_fn: Callable, lr: float,
+                                mesh: jax.sharding.Mesh) -> Callable:
+    """The TRAIN phase of ``make_sharded2d_fedavg_round`` alone (pure
+    read — speculable): fn(stacked (1, ...) replicated, m_idx (C*B,),
+    d_idx (C*B,) LOCAL, perms (C*B, T, b), xs, ys [data-row-sharded])
+    -> trained (C*B, ...) cell-sharded."""
+    one_pair = _pair_train(loss_fn, lr)
+    cell = P(("model", "data"))
+    drow = P("data")
+    rep = P()
+
+    def body(stacked, m_idx, d_idx, perms, xs, ys):
+        return jax.vmap(one_pair, in_axes=(None, 0, None, None, 0, 0))(
+            stacked, m_idx, xs, ys, d_idx, perms)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, cell, cell, cell, drow, drow),
+        out_specs=cell, check_rep=False))
+
+
+def make_sharded2d_fedavg_finish(acc_fn: Callable,
+                                 mesh: jax.sharding.Mesh) -> Callable:
+    """Aggregate + evaluate phases of ``make_sharded2d_fedavg_round``
+    as their own dispatch: fn(stacked (1, ...) [donated, replicated],
+    trained (C*B, ...) cell-sharded, w (C*B,), vx, vy, tx, ty) ->
+    (new_stacked, val (1, N), test (1, N) [column data-sharded])."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    cell = P(("model", "data"))
+    drow = P("data")
+    rep = P()
+    vcol = P(None, "data")
+
+    def body(stacked, trained, w, vx, vy, tx, ty):
+        new_stacked = _fedavg_psum_avg(stacked, trained, w,
+                                       ("model", "data"))
+        model = jax.tree.map(lambda a: a[0], new_stacked)
+        val = eval_model(model, vx, vy)[None]
+        test = eval_model(model, tx, ty)[None]
+        return new_stacked, val, test
+
+    step = shard_map(body, mesh=mesh,
+                     in_specs=(rep, cell, cell, drow, drow, drow, drow),
+                     out_specs=(rep, vcol, vcol), check_rep=False)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_sharded2d_fedavg_eval(acc_fn: Callable,
+                               mesh: jax.sharding.Mesh) -> Callable:
+    """Eval of the current global model alone (a semi-sync round whose
+    every pair straggled or dropped): fn(stacked (1, ...) replicated,
+    xs, ys [data-row-sharded]) -> (1, N) column data-sharded."""
+    eval_model = jax.vmap(acc_fn, in_axes=(None, 0, 0))
+    drow = P("data")
+    rep = P()
+    vcol = P(None, "data")
+
+    def body(stacked, xs, ys):
+        model = jax.tree.map(lambda a: a[0], stacked)
+        return eval_model(model, xs, ys)[None]
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(rep, drow, drow),
+                             out_specs=vcol, check_rep=False))
+
+
 def make_perms(rng: np.random.Generator, n_devices: int, n_examples: int,
                batch_size: int, epochs: int) -> np.ndarray:
     """(N, epochs*steps, batch) minibatch index matrices.

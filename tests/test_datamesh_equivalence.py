@@ -24,10 +24,12 @@ import pytest
 import jax
 
 from repro.core.fedcd import FedCDServer
+from repro.core.spec import EngineSpec
 from repro.data.bank import DeviceDataBank
 from repro.data.scenarios import (ChurnSchedule, DeviceJoin, DeviceLeave,
                                   random_churn)
-from repro.launch.mesh import make_launch_mesh, make_model_mesh
+from repro.launch.mesh import (data_axis_size, make_launch_mesh,
+                               make_model_mesh, model_axis_size)
 from repro.models.mlp import mlp_accuracy, mlp_loss
 from test_engine_equivalence import ROUNDS, _small_setup
 
@@ -51,10 +53,12 @@ def mesh_shape(request):
 
 def _run(cfg, params, data, rounds=ROUNDS, mesh=None, pipeline=False,
          scenario=None):
+    spec = EngineSpec(
+        model_shards=model_axis_size(mesh) if mesh is not None else 1,
+        data_shards=data_axis_size(mesh) if mesh is not None else 1,
+        mesh=mesh, pipeline=pipeline, scenario=scenario)
     srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                      batch_size=16,
-                      engine="sharded" if mesh is not None else "fused",
-                      mesh=mesh, pipeline=pipeline, scenario=scenario)
+                      batch_size=16, spec=spec)
     srv.run(rounds)
     return srv
 
@@ -200,8 +204,9 @@ def test_churn_sparse_val_matches_dense():
 
     ref = _run(cfg, params, data, rounds=6, scenario=sched())
     srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                      batch_size=16, engine="fused", sparse_eval=1.1,
-                      scenario=sched())         # always score sparse
+                      batch_size=16,
+                      spec=EngineSpec(sparse_eval=1.1,
+                                      scenario=sched()))  # always sparse
     srv.run(6)
     assert srv.planner.sparse_rounds > 0
     assert not srv.executor.databank.identity_map()   # slot was reused
@@ -216,7 +221,7 @@ def test_join_during_extinction_round():
                           n_train=64, n_val=32, n_test=32)
     cfg, params, data = _small_setup(quantize_bits=8)
     srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                      batch_size=16, engine="fused", scenario=sched)
+                      batch_size=16, spec=EngineSpec(scenario=sched))
     srv.run_round(1)
     for m in list(srv.registry.live_ids()):
         srv.registry.kill(m, 1)
@@ -249,8 +254,8 @@ def test_leave_mid_round_with_speculative_batch():
 
     def run(pipeline):
         srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                          batch_size=16, engine="fused",
-                          pipeline=pipeline)
+                          batch_size=16,
+                          spec=EngineSpec(pipeline=pipeline))
         for t in range(1, 7):
             srv.run_round(t)
             if t == 4:
@@ -362,7 +367,8 @@ def test_forced_migration_is_discrete_state_identical():
 
     def run(migrate_at=None):
         srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                          batch_size=16, engine="sharded", mesh=mesh)
+                          batch_size=16,
+                          spec=EngineSpec(model_shards=2, mesh=mesh))
         for t in range(1, ROUNDS + 1):
             srv.run_round(t)
             if migrate_at == t:

@@ -32,6 +32,7 @@ from repro.configs.fedcd_cifar import HIERARCHICAL
 from repro.core.aggregate import multi_weighted_average, weighted_average
 from repro.core.fedavg import FedAvgServer
 from repro.core.fedcd import ENGINES, FedCDServer
+from repro.core.spec import EngineSpec
 from repro.data.partition import hierarchical_devices, stack_devices
 from repro.federated.simulation import bucket_size
 from repro.models.mlp import init_mlp_classifier, mlp_accuracy, mlp_loss
@@ -55,7 +56,7 @@ def _small_setup(n_devices=8, seed=0, **cfg_kw):
 
 def _run(engine, cfg, params, data, rounds=ROUNDS):
     srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                      batch_size=16, engine=engine)
+                      batch_size=16, spec=engine)
     srv.run(rounds)
     return srv
 
@@ -145,7 +146,7 @@ def test_transport_accounting_survives_population_extinction():
     and crashed under quantized transport once every model was dead."""
     cfg, params, data = _small_setup(quantize_bits=8)
     srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                      batch_size=16, engine="fused")
+                      batch_size=16, spec="fused")
     srv.run_round(1)
     for m in list(srv.registry.live_ids()):
         srv.registry.kill(m, 1)
@@ -161,7 +162,7 @@ def test_fedavg_engines_match():
     out = {}
     for engine in ENGINES:
         srv = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                           batch_size=16, engine=engine)
+                           batch_size=16, spec=engine)
         srv.run(4)
         out[engine] = srv
     for name in ("batched", "fused"):
@@ -181,9 +182,9 @@ def test_fedcd_fedavg_share_sampling_stream():
     train identical per-round cohorts."""
     cfg, params, data = _small_setup()
     fedcd = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                        batch_size=16, engine="fused")
+                        batch_size=16, spec="fused")
     fedavg = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                          batch_size=16, engine="fused")
+                          batch_size=16, spec="fused")
     from repro.federated.simulation import draw_round_sample
     for t in (1, 2, 3):
         p_cd, perms_cd = fedcd._round_sample(t)
@@ -210,7 +211,7 @@ def test_non_holder_data_never_influences_aggregate():
             xs[7] = xs[7] * 100.0 + 7.0   # device 7's data becomes garbage
             data = dict(data, train=(xs, ys))
         srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                          batch_size=16, engine="fused")
+                          batch_size=16, spec="fused")
         # two live models; device 7 holds ONLY model 1
         clone = srv.registry.clone(0, 0, jax.tree.map(np.array, params))
         srv.state.active[:, clone] = True
@@ -256,8 +257,9 @@ def test_engine_with_pallas_agg_kernel(engine):
     out = {}
     for use_kernel in (False, True):
         srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                          batch_size=16, engine=engine,
-                          use_agg_kernel=use_kernel)
+                          batch_size=16,
+                          spec=EngineSpec(engine=engine,
+                                          use_agg_kernel=use_kernel))
         srv.run(3)
         out[use_kernel] = srv
     assert (out[False].registry.live_ids()

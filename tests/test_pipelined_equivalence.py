@@ -29,15 +29,19 @@ import jax
 
 from repro.core.fedavg import FedAvgServer
 from repro.core.fedcd import FedCDServer
-from repro.launch.mesh import make_model_mesh
+from repro.core.spec import EngineSpec
+from repro.launch.mesh import make_model_mesh, model_axis_size
 from repro.models.mlp import mlp_accuracy, mlp_loss
 from test_engine_equivalence import ROUNDS, _small_setup
 from test_sharded_equivalence import SHARD_COUNTS, needs_devices
 
 
-def _server(cfg, params, data, **kw):
+def _server(cfg, params, data, mesh=None, **kw):
+    spec = EngineSpec(
+        model_shards=model_axis_size(mesh) if mesh is not None else 1,
+        mesh=mesh, **kw)
     return FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                       batch_size=16, engine="fused", **kw)
+                       batch_size=16, spec=spec)
 
 
 def _run(cfg, params, data, rounds=ROUNDS, **kw):
@@ -174,10 +178,10 @@ def test_extinction_round_discards_speculation():
 def test_pipelined_fedavg_matches_sync():
     cfg, params, data = _small_setup()
     ref = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                       batch_size=16, engine="fused")
+                       batch_size=16, spec="fused")
     ref.run(4)
     pip = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                       batch_size=16, engine="fused", pipeline=True)
+                       batch_size=16, spec="fused+pipeline")
     pip.run(4)
     for ms, mp in zip(ref.metrics, pip.metrics):
         assert ms.comm_bytes == mp.comm_bytes
@@ -193,12 +197,13 @@ def test_pipelined_fedavg_matches_sync():
 def test_pipeline_requires_fused_engine():
     cfg, params, data = _small_setup()
     for engine in ("batched", "legacy"):
+        spec = EngineSpec(engine=engine, pipeline=True)
         with pytest.raises(ValueError):
             FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                        batch_size=16, engine=engine, pipeline=True)
+                        batch_size=16, spec=spec)
         with pytest.raises(ValueError):
             FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                         batch_size=16, engine=engine, pipeline=True)
+                         batch_size=16, spec=spec)
 
 
 # -- sparse (holder-only) validation scoring ------------------------------

@@ -1,0 +1,224 @@
+"""Semi-synchronous rounds (DESIGN.md §12): the zero-latency gate and
+the bounded-staleness buffer.
+
+The semi-sync plane must degrade EXACTLY to the synchronous engines
+when every latency is zero: same launch path, same programs, so the
+run is bit-identical (discrete state AND params) — pinned here for the
+plain, quantized, and churn fixtures. Under a real straggler regime
+the trajectory is engine-INDEPENDENT: latencies, dropouts, and fold
+weights are drawn host-side from dedicated RNG streams keyed only by
+(seed, round), so fused, sharded, 2-D, and pipelined runs walk the
+identical discrete trajectory and fold the identical buffered updates.
+
+Mesh tiers above ``jax.device_count()`` skip; CI's sharded leg runs
+this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.fedavg import FedAvgServer
+from repro.core.fedcd import FedCDServer
+from repro.core.spec import EngineSpec
+from repro.data.scenarios import DeviceDropout, StragglerModel
+from repro.models.mlp import mlp_accuracy, mlp_loss
+from test_datamesh_equivalence import _assert_discrete_state_equal
+from test_engine_equivalence import ROUNDS, _small_setup
+from test_sharded_equivalence import needs_devices
+
+# heavy-tail regime: quorum 60% + lognormal sigma 2 makes ~40% of each
+# cohort straggle; 5% random dropouts exercise the never-arrived path
+STRAGGLER = StragglerModel(distribution="lognormal", sigma=2.0,
+                           quorum=0.6, dropout_rate=0.05, seed=0)
+
+
+def _run(spec, rounds=ROUNDS, server=FedCDServer, **setup_kw):
+    cfg, params, data = _small_setup(**setup_kw)
+    srv = server(cfg, params, mlp_loss, mlp_accuracy, data,
+                 batch_size=16, spec=spec)
+    srv.run(rounds)
+    return srv
+
+
+def _assert_params_bit_identical(ref, srv):
+    for m in ref.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(ref.registry.params[m]),
+                        jax.tree.leaves(srv.registry.params[m])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- the zero-latency gate: semi-sync off == synchronous, bit for bit ----
+
+def test_zero_latency_is_bit_identical_to_sync():
+    ref = _run(EngineSpec())
+    srv = _run(EngineSpec(straggler=StragglerModel.zero()))
+    _assert_discrete_state_equal(ref, srv)
+    _assert_params_bit_identical(ref, srv)
+    st = srv.semisync_stats.as_dict()
+    assert st["stragglers"] == 0 and st["folded"] == 0
+    assert st["dropouts"] == 0 and st["expired"] == 0
+    assert st["ontime"] == st["dispatched"] > 0
+    assert st["t_semisync"] == st["t_sync"] == 0.0
+
+
+def test_zero_latency_quantized_bit_identical():
+    ref = _run(EngineSpec(), rounds=5, quantize_bits=8)
+    srv = _run(EngineSpec(straggler=StragglerModel.zero()), rounds=5,
+               quantize_bits=8)
+    _assert_discrete_state_equal(ref, srv)
+    _assert_params_bit_identical(ref, srv)
+
+
+def test_zero_latency_churn_bit_identical():
+    from repro.data.scenarios import random_churn
+
+    def sched():
+        return random_churn(ROUNDS, 8, seed=3, join_rate=0.5,
+                            leave_rate=0.4, drift_rate=0.3, min_devices=3,
+                            n_train=64, n_val=32, n_test=32)
+
+    ref = _run(EngineSpec(scenario=sched()))
+    srv = _run(EngineSpec(scenario=sched(),
+                          straggler=StragglerModel.zero()))
+    _assert_discrete_state_equal(ref, srv)
+    _assert_params_bit_identical(ref, srv)
+
+
+def test_fedavg_zero_latency_matches_sync():
+    ref = _run("fused", rounds=4, server=FedAvgServer)
+    srv = _run(EngineSpec(straggler=StragglerModel.zero()), rounds=4,
+               server=FedAvgServer)
+    for ms, mz in zip(ref.metrics, srv.metrics):
+        assert ms.comm_bytes == mz.comm_bytes
+        np.testing.assert_allclose(ms.test_acc, mz.test_acc, atol=1e-6)
+        np.testing.assert_allclose(ms.val_acc, mz.val_acc, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(srv.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- the straggler regime: buffering, folding, accounting ----------------
+
+@pytest.fixture(scope="module")
+def straggled():
+    return _run(EngineSpec(straggler=STRAGGLER))
+
+
+def test_straggler_regime_buffers_and_folds(straggled):
+    st = straggled.semisync_stats.as_dict()
+    assert st["rounds"] == ROUNDS
+    assert st["stragglers"] > 0
+    assert st["folded"] > 0
+    assert st["staleness_hist"]                      # non-empty
+    # folds happen at round start, BEFORE that round's clock advance:
+    # an arrival past round t's deadline can only fold at t+2, so every
+    # observed staleness is >= 2 and within the expiry bound
+    assert all(2 <= tau <= STRAGGLER.max_staleness
+               for tau in st["staleness_hist"])
+    assert sum(st["staleness_hist"].values()) == st["folded"]
+    assert st["ontime"] + st["stragglers"] + st["dropouts"] \
+        == st["dispatched"]
+    # the point of the policy: the quorum deadline beats the barrier
+    assert st["t_semisync"] < st["t_sync"]
+
+
+def test_straggler_trajectory_is_deterministic(straggled):
+    again = _run(EngineSpec(straggler=STRAGGLER))
+    _assert_discrete_state_equal(straggled, again)
+    assert again.semisync_stats.as_dict() \
+        == straggled.semisync_stats.as_dict()
+    _assert_params_bit_identical(straggled, again)
+
+
+@needs_devices(2)
+def test_straggler_trajectory_engine_independent_sharded(straggled):
+    srv = _run(EngineSpec(model_shards=2, straggler=STRAGGLER))
+    _assert_discrete_state_equal(straggled, srv)
+    assert srv.semisync_stats.as_dict() \
+        == straggled.semisync_stats.as_dict()
+
+
+@needs_devices(4)
+def test_straggler_trajectory_engine_independent_2d(straggled):
+    srv = _run(EngineSpec(model_shards=2, data_shards=2,
+                          straggler=STRAGGLER))
+    _assert_discrete_state_equal(straggled, srv)
+    assert srv.semisync_stats.as_dict() \
+        == straggled.semisync_stats.as_dict()
+
+
+def test_straggler_trajectory_engine_independent_pipelined(straggled):
+    srv = _run(EngineSpec(pipeline=True, straggler=STRAGGLER))
+    _assert_discrete_state_equal(straggled, srv)
+    assert srv.semisync_stats.as_dict() \
+        == straggled.semisync_stats.as_dict()
+    # fold rounds must suppress speculation (the speculative train
+    # would read pre-fold params)
+    assert srv.pipeline_stats.skipped > 0
+
+
+def test_max_staleness_zero_expires_every_straggler():
+    model = StragglerModel(distribution="lognormal", sigma=2.0,
+                           quorum=0.6, max_staleness=0, seed=0)
+    srv = _run(EngineSpec(straggler=model))
+    st = srv.semisync_stats.as_dict()
+    assert st["stragglers"] > 0
+    assert st["folded"] == 0                       # min fold tau is 2
+    # every straggler whose fold came due was discarded; the rest are
+    # still in flight when the run ends
+    assert st["expired"] > 0
+    assert st["expired"] + len(srv.planner.semisync.pending) \
+        == st["stragglers"]
+    assert not st["staleness_hist"]
+
+
+def test_scripted_dropout_never_arrives():
+    # drop a device on every round: none of its dispatches may ever
+    # aggregate OR fold
+    victim = 3
+    model = StragglerModel.zero(
+        dropouts=tuple(DeviceDropout(t, victim)
+                       for t in range(1, ROUNDS + 1)))
+    srv = _run(EngineSpec(straggler=model))
+    st = srv.semisync_stats.as_dict()
+    assert st["dropouts"] > 0                      # the victim was sampled
+    assert st["folded"] == 0 and st["stragglers"] == 0
+    assert st["dropouts"] + st["ontime"] == st["dispatched"]
+
+
+def test_total_dropout_round_dispatches_cleanly():
+    """dropout_rate=1: no pair ever arrives, no aggregation happens,
+    yet every round still evaluates and the run completes."""
+    model = StragglerModel(distribution="zero", dropout_rate=1.0)
+    srv = _run(EngineSpec(straggler=model), rounds=3)
+    st = srv.semisync_stats.as_dict()
+    assert st["dropouts"] == st["dispatched"] > 0
+    assert st["ontime"] == 0 and st["folded"] == 0
+    assert len(srv.metrics) == 3
+    assert all(np.isfinite(m.test_acc).all() for m in srv.metrics)
+
+
+def test_fedavg_straggler_engine_independent():
+    ref = _run(EngineSpec(straggler=STRAGGLER), rounds=6,
+               server=FedAvgServer)
+    st = ref.semisync_stats.as_dict()
+    assert st["stragglers"] > 0 and st["folded"] > 0
+    assert st["t_semisync"] < st["t_sync"]
+    variants = [EngineSpec(pipeline=True, straggler=STRAGGLER)]
+    if jax.device_count() >= 2:
+        variants.append(EngineSpec(model_shards=2, straggler=STRAGGLER))
+    if jax.device_count() >= 4:
+        variants.append(EngineSpec(model_shards=2, data_shards=2,
+                                   straggler=STRAGGLER))
+    for spec in variants:
+        srv = _run(spec, rounds=6, server=FedAvgServer)
+        assert srv.semisync_stats.as_dict() == st
+        for ms, mv in zip(ref.metrics, srv.metrics):
+            assert ms.comm_bytes == mv.comm_bytes
+            np.testing.assert_allclose(ms.test_acc, mv.test_acc,
+                                       atol=1e-5)
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(srv.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)

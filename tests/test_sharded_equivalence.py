@@ -25,11 +25,19 @@ import jax
 
 from repro.core.fedavg import FedAvgServer
 from repro.core.fedcd import FedCDServer
+from repro.core.spec import EngineSpec
 from repro.launch.mesh import make_model_mesh
 from repro.models.mlp import mlp_accuracy, mlp_loss
 from test_engine_equivalence import ROUNDS, _small_setup
 
 SHARD_COUNTS = (1, 2, 4)
+
+
+def _mesh_spec(n_shards):
+    """A model-sharded spec on a freshly built mesh — injected so the
+    1-shard tier still exercises the sharded plane (the string preset
+    'sharded@1' would canonicalize to meshless fused)."""
+    return EngineSpec(model_shards=n_shards, mesh=make_model_mesh(n_shards))
 
 
 def needs_devices(n):
@@ -46,9 +54,9 @@ def n_shards(request):
     return request.param
 
 
-def _run(cfg, params, data, rounds=ROUNDS, mesh=None):
+def _run(cfg, params, data, rounds=ROUNDS, spec="fused"):
     srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                      batch_size=16, engine="fused", mesh=mesh)
+                      batch_size=16, spec=spec)
     srv.run(rounds)
     return srv
 
@@ -68,7 +76,7 @@ def quantized_single():
 @pytest.fixture(scope="module")
 def sharded(n_shards):
     cfg, params, data = _small_setup()
-    return _run(cfg, params, data, mesh=make_model_mesh(n_shards))
+    return _run(cfg, params, data, spec=_mesh_spec(n_shards))
 
 
 def test_discrete_state_matches_exactly(single, sharded):
@@ -106,8 +114,7 @@ def test_quantized_sharded_matches_single(n_shards, quantized_single):
     params within one int8 step (mirrors the 3-engine quantized test)."""
     cfg, params, data = _small_setup(quantize_bits=8)
     ref = quantized_single
-    srv = _run(cfg, params, data, rounds=5,
-               mesh=make_model_mesh(n_shards))
+    srv = _run(cfg, params, data, rounds=5, spec=_mesh_spec(n_shards))
     step = 1.0 / 127
     for ms, mh in zip(ref.metrics, srv.metrics):
         assert ms.live_models == mh.live_models
@@ -129,11 +136,10 @@ def test_fedavg_sharded_pair_axis_matches(n_shards):
     tracks the single-device fused round."""
     cfg, params, data = _small_setup()
     ref = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                       batch_size=16, engine="fused")
+                       batch_size=16, spec="fused")
     ref.run(4)
     srv = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                       batch_size=16, engine="fused",
-                       mesh=make_model_mesh(n_shards))
+                       batch_size=16, spec=_mesh_spec(n_shards))
     srv.run(4)
     for ms, mh in zip(ref.metrics, srv.metrics):
         assert ms.comm_bytes == mh.comm_bytes
@@ -180,8 +186,7 @@ def test_row_placement_balances_shards():
 def _sharded_server(n_shards, **cfg_kw):
     cfg, params, data = _small_setup(**cfg_kw)
     return FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
-                       batch_size=16, engine="fused",
-                       mesh=make_model_mesh(n_shards))
+                       batch_size=16, spec=_mesh_spec(n_shards))
 
 
 def test_extinction_dispatches_cleanly_sharded(n_shards):

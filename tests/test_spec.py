@@ -1,0 +1,189 @@
+"""EngineSpec: the typed engine configuration and its preset grammar.
+
+Validation must fire at CONSTRUCTION (resolve_spec -> coerce ->
+validate), never mid-round; the legacy per-capability kwargs survive
+one release as a deprecation shim that warns and builds the equivalent
+spec; passing both spellings is a TypeError (two sources of truth).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.fedavg import FedAvgServer
+from repro.core.fedcd import FedCDServer
+from repro.core.spec import EngineSpec, resolve_spec
+from repro.data.scenarios import StragglerModel
+from repro.models.mlp import mlp_accuracy, mlp_loss
+from test_engine_equivalence import _small_setup
+
+
+# -- grammar ---------------------------------------------------------------
+
+@pytest.mark.parametrize("text", [
+    "fused", "batched", "legacy",
+    "sharded@4", "sharded@2x2",
+    "fused+pipeline", "fused+semisync",
+    "sharded@2x2+pipeline", "fused+sparse:0.25",
+    "sharded@2+migrate:1.5", "fused+kernel",
+    "sharded@4+pipeline+semisync+sparse:0.5+migrate:2+kernel",
+])
+def test_parse_roundtrips_through_canonical(text):
+    spec = EngineSpec.parse(text)
+    assert EngineSpec.parse(spec.canonical) == spec
+
+
+def test_parse_maps_sharded_to_fused_plane():
+    spec = EngineSpec.parse("sharded@2x2+pipeline")
+    assert spec.engine == "fused"
+    assert (spec.model_shards, spec.data_shards) == (2, 2)
+    assert spec.pipeline and spec.sharded
+    assert EngineSpec.parse("sharded@4").data_shards == 1
+
+
+def test_parse_semisync_attaches_default_straggler():
+    spec = EngineSpec.parse("fused+semisync")
+    assert isinstance(spec.straggler, StragglerModel)
+    assert spec.semisync
+    assert not EngineSpec.parse("fused").semisync
+
+
+@pytest.mark.parametrize("text", [
+    "sharded",                # shard counts required
+    "fused@2",                # counts only apply to 'sharded'
+    "sharded@two",            # non-integer counts
+    "sharded@2x2x2",          # bad count shape
+    "fused+bogus",            # unknown flag
+    "fused+sparse",           # sparse needs a value
+    "fused+pipeline:1",       # pipeline takes no value
+    "batched+pipeline",       # pipeline requires the fused plane
+    "warp",                   # unknown engine
+])
+def test_parse_rejects_bad_presets(text):
+    with pytest.raises(ValueError):
+        EngineSpec.parse(text)
+
+
+# -- validation ------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(engine="nope"),
+    dict(model_shards=0),
+    dict(data_shards=-1),
+    dict(engine="batched", model_shards=2),
+    dict(engine="legacy", pipeline=True),
+    dict(engine="batched", sparse_eval=0.5),
+    dict(engine="legacy", scenario=object()),
+    dict(engine="batched", straggler=StragglerModel()),
+    dict(migrate_threshold=1.5),              # migration needs a mesh
+    dict(model_shards=1, data_shards=2, use_agg_kernel=True),
+])
+def test_validate_rejects_bad_combos(bad):
+    with pytest.raises(ValueError):
+        EngineSpec(**bad).validate()
+
+
+def test_validate_rejects_mismatched_injected_mesh():
+    from repro.launch.mesh import make_model_mesh
+    mesh = make_model_mesh(1)
+    with pytest.raises(ValueError):
+        EngineSpec(model_shards=4, mesh=mesh).validate()
+
+
+def test_coerce_accepts_spec_and_string_only():
+    assert EngineSpec.coerce("fused") == EngineSpec()
+    spec = EngineSpec(pipeline=True)
+    assert EngineSpec.coerce(spec) is spec
+    with pytest.raises(TypeError):
+        EngineSpec.coerce({"engine": "fused"})
+
+
+def test_resolve_mesh_owns_creation_and_injection():
+    assert EngineSpec().resolve_mesh() is None
+    from repro.launch.mesh import make_model_mesh
+    mesh = make_model_mesh(1)
+    injected = EngineSpec().with_mesh(mesh)
+    assert injected.resolve_mesh() is mesh     # 1x1 injection respected
+
+
+# -- the deprecation shim --------------------------------------------------
+
+def test_from_legacy_translates_sharded_double_spelling():
+    from repro.launch.mesh import make_model_mesh
+    mesh = make_model_mesh(1)
+    spec = EngineSpec.from_legacy(engine="sharded", mesh=mesh)
+    assert spec.engine == "fused" and spec.mesh is mesh
+    with pytest.raises(ValueError):
+        EngineSpec.from_legacy(engine="sharded")      # mesh required
+
+
+def test_resolve_spec_rejects_both_spellings():
+    with pytest.raises(TypeError):
+        resolve_spec("fused", dict(engine="fused"), "Srv")
+
+
+def test_resolve_spec_warns_on_legacy_kwargs():
+    with pytest.warns(DeprecationWarning):
+        spec = resolve_spec(None, dict(pipeline=True), "Srv")
+    assert spec == EngineSpec(pipeline=True)
+    # no kwargs used -> default spec, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_spec(None, dict(engine=None), "Srv") == EngineSpec()
+
+
+def test_server_shim_warns_and_builds_equivalent_spec():
+    cfg, params, data = _small_setup()
+    with pytest.warns(DeprecationWarning):
+        srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                          batch_size=16, engine="batched")
+    assert srv.spec == EngineSpec(engine="batched")
+    with pytest.warns(DeprecationWarning):
+        fa = FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                          batch_size=16, engine="batched")
+    assert fa.spec == EngineSpec(engine="batched")
+
+
+def test_server_rejects_spec_plus_legacy_kwargs():
+    cfg, params, data = _small_setup()
+    with pytest.raises(TypeError):
+        FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                    batch_size=16, spec="fused", pipeline=True)
+    with pytest.raises(TypeError):
+        FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                     batch_size=16, spec="fused", engine="fused")
+
+
+def test_server_construction_fails_fast_on_invalid_spec():
+    cfg, params, data = _small_setup()
+    with pytest.raises(ValueError):
+        FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                    batch_size=16, spec="batched+pipeline")
+    with pytest.raises(ValueError):
+        FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                    batch_size=16,
+                    spec=EngineSpec(engine="legacy",
+                                    sparse_eval=0.5))
+
+
+@pytest.mark.parametrize("spec", [
+    EngineSpec(sparse_eval=0.5),
+    EngineSpec(use_agg_kernel=True),
+    EngineSpec(scenario=object()),
+    EngineSpec(model_shards=2, migrate_threshold=2.0),
+])
+def test_fedavg_rejects_fedcd_only_capabilities(spec):
+    cfg, params, data = _small_setup()
+    with pytest.raises(ValueError):
+        FedAvgServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                     batch_size=16, spec=spec)
+
+
+def test_spec_string_runs_a_round():
+    """The preset string is a full construction path, not just sugar:
+    a one-round run through spec='fused' produces finite metrics."""
+    cfg, params, data = _small_setup()
+    srv = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                      batch_size=16, spec="fused")
+    m = srv.run_round(1)
+    assert np.isfinite(m.test_acc).all()
