@@ -1,0 +1,89 @@
+"""Elastic-checkpoint overhead (DESIGN.md §13): what a snapshot costs
+relative to a round of training, at realistic cadences.
+
+Measures, on the fused engine at the default 30-device config:
+
+* ``ckpt_save``    — one full ``save_server_state`` (quiesce + host
+  gather + atomic npz + manifest), with the snapshot's on-disk size and
+  the save cost as a percentage of round wall-clock at snapshot
+  cadences 1 / 5 / 20 (the derived column CI tracks);
+* ``ckpt_restore`` — one ``restore_server_state`` into a freshly
+  constructed server (verify checksums + re-place ids + re-upload).
+
+Run directly or via ``python -m benchmarks.run --only checkpoint``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks import common as C
+
+CADENCES = (1, 5, 20)
+
+
+def run(rounds: int = 16, model: str = "mlp", quick: bool = False):
+    from repro.checkpoint.state import (ARRAYS, MANIFEST,
+                                        restore_server_state,
+                                        save_server_state)
+    from repro.core.fedcd import FedCDServer
+    from repro.core.spec import EngineSpec
+
+    params, loss, acc = C.model_fns(model)
+    _, data = C.make_data("hierarchical")
+    cfg = C.default_cfg(milestones=(3, 6),
+                        late_delete_round=max(rounds // 2, 8))
+
+    srv = FedCDServer(cfg, params, loss, acc, data, batch_size=C.BATCH,
+                      spec=EngineSpec())
+    srv.run(2)                                   # compile + warm caches
+    n = rounds - 2
+    t0 = time.perf_counter()
+    srv.run(rounds)                              # continues from round 3
+    t_round = (time.perf_counter() - t0) / max(n, 1)
+
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        reps = 2 if quick else 4
+        t_saves = []
+        for i in range(reps):
+            t1 = time.perf_counter()
+            save_server_state(srv, os.path.join(tmp, f"s{i}"))
+            t_saves.append(time.perf_counter() - t1)
+        t_save = min(t_saves)
+        nbytes = sum(os.path.getsize(os.path.join(tmp, "s0", f))
+                     for f in (ARRAYS, MANIFEST))
+
+        fresh = FedCDServer(cfg, params, loss, acc, data,
+                            batch_size=C.BATCH, spec=EngineSpec())
+        t_restores = []
+        for i in range(reps):
+            t1 = time.perf_counter()
+            restore_server_state(fresh, os.path.join(tmp, f"s{i % reps}"))
+            t_restores.append(time.perf_counter() - t1)
+        t_restore = min(t_restores)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    pct = ";".join(
+        f"pct_round@{c}={100.0 * t_save / (c * t_round):.2f}"
+        for c in CADENCES)
+    return [
+        C.csv_line("ckpt_save", t_save * 1e6,
+                   f"bytes={nbytes};round_us={t_round * 1e6:.0f};{pct}"),
+        C.csv_line("ckpt_restore", t_restore * 1e6,
+                   f"save_us={t_save * 1e6:.0f}"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for ln in run(args.rounds, args.model, quick=args.quick):
+        print(ln)

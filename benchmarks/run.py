@@ -50,10 +50,10 @@ def main() -> None:
                     help="write results to this JSON artifact path")
     args = ap.parse_args()
 
-    from benchmarks import (bench_comm, bench_hierarchical,
-                            bench_hypergeometric, bench_kernels,
-                            bench_model_dynamics, bench_quantization,
-                            bench_wallclock)
+    from benchmarks import (bench_checkpoint, bench_comm,
+                            bench_hierarchical, bench_hypergeometric,
+                            bench_kernels, bench_model_dynamics,
+                            bench_quantization, bench_wallclock)
 
     long_rounds = 16 if args.fast else 40
     short_rounds = 10 if args.fast else 25
@@ -84,6 +84,8 @@ def main() -> None:
         "sparse": lambda: bench_model_dynamics.measure_sparse_eval(
             8 if args.fast else 16, args.model, quick=args.fast),
         "semisync": lambda: bench_model_dynamics.compare_semisync(
+            8 if args.fast else 16, args.model, quick=args.fast),
+        "checkpoint": lambda: bench_checkpoint.run(
             8 if args.fast else 16, args.model, quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),

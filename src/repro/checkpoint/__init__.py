@@ -1,1 +1,13 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, save_registry, load_registry
+from repro.checkpoint.io import (CheckpointError, load_checkpoint,
+                                 load_registry, save_checkpoint,
+                                 save_registry)
+from repro.checkpoint.state import (CheckpointManager, latest_checkpoint,
+                                    restore_server_state,
+                                    save_server_state, verify_checkpoint)
+
+__all__ = [
+    "CheckpointError", "CheckpointManager", "latest_checkpoint",
+    "load_checkpoint", "load_registry", "restore_server_state",
+    "save_checkpoint", "save_registry", "save_server_state",
+    "verify_checkpoint",
+]

@@ -1,18 +1,33 @@
-"""Checkpoint IO: pytree -> flat npz (+ JSON treedef), registry -> JSON.
+"""Checkpoint IO: pytree -> flat npz (+ JSON meta), registry -> JSON.
 
 No orbax in the container; this covers the framework's needs: periodic
 train-state snapshots, FedCD model-population snapshots (one file per
 global model + registry state), and resume.
+
+Crash consistency (DESIGN.md §13): every file is written to a ``.tmp``
+sibling and committed with ``os.replace``, and the meta/manifest file —
+the only thing a loader trusts — is written LAST. A crash at any point
+therefore leaves either the previous complete checkpoint or a torn one
+the loader rejects; it never half-accepts. ``load_checkpoint`` is
+strict: the npz key set must equal the template's AND the meta's, and
+every array must match its recorded crc32 — mismatches raise
+:class:`CheckpointError` naming the offending keys.
 """
 from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """A checkpoint is torn, corrupt, or does not match its consumer
+    (missing/extra/mismatched keys, checksum failures, wrong config)."""
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
@@ -22,34 +37,96 @@ def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
                        for p in path)
         arr = np.asarray(leaf)
         if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
-            # npz cannot store ml_dtypes; widen (load_checkpoint casts back
-            # to the template leaf's dtype)
+            # npz cannot store ml_dtypes; widen (bf16 ⊂ f32, so the
+            # widen/cast-back roundtrip is exact — load_checkpoint casts
+            # back to the template leaf's dtype)
             arr = arr.astype(np.float32)
         flat[key] = arr
     return flat
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def atomic_write_bytes(path: str, payload: bytes) -> None:
+    """Write-to-tmp + fsync + ``os.replace``: after this returns (or
+    crashes) ``path`` holds either its previous content or ``payload``,
+    never a prefix."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def atomic_write_json(path: str, obj: Any) -> None:
+    atomic_write_bytes(path, json.dumps(obj, indent=2).encode())
+
+
+def atomic_savez(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """npz written via the same tmp + replace commit."""
+    import io as _io
+
+    buf = _io.BytesIO()
+    np.savez(buf, **arrays)
+    atomic_write_bytes(path, buf.getvalue())
 
 
 def save_checkpoint(path: str, tree: Any, step: int = 0,
                     extra: Dict[str, Any] | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
-    meta = {"step": step, "keys": sorted(flat), "extra": extra or {}}
-    with open(path.removesuffix(".npz") + ".meta.json", "w") as f:
-        json.dump(meta, f)
-
-
-def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (template pytree)."""
     base = path.removesuffix(".npz")
-    data = np.load(base + ".npz")
-    with open(base + ".meta.json") as f:
-        meta = json.load(f)
+    atomic_savez(base + ".npz", flat)
+    # meta commits LAST: a crash between the two leaves the npz without
+    # its meta, which load_checkpoint treats as no checkpoint at all
+    meta = {"step": step, "keys": sorted(flat),
+            "checksums": {k: _crc(v) for k, v in flat.items()},
+            "extra": extra or {}}
+    atomic_write_json(base + ".meta.json", meta)
+
+
+def load_checkpoint(path: str, like: Any, strict: bool = True
+                    ) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (template pytree).
+
+    ``strict`` (default) validates the npz key set against BOTH the
+    template and ``meta["keys"]``, and verifies every array's crc32
+    against the meta's record; any mismatch raises
+    :class:`CheckpointError` naming the keys."""
+    base = path.removesuffix(".npz")
+    try:
+        data = np.load(base + ".npz")
+        with open(base + ".meta.json") as f:
+            meta = json.load(f)
+    except (FileNotFoundError, zlib.error, ValueError, OSError) as e:
+        raise CheckpointError(f"unreadable checkpoint {base!r}: {e}") from e
     flat_like = _flatten_with_paths(like)
     leaves_by_key = {k: data[k] for k in data.files}
     missing = set(flat_like) - set(leaves_by_key)
     if missing:
-        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+        raise CheckpointError(
+            f"checkpoint {base!r} missing keys: {sorted(missing)}")
+    if strict:
+        extra_keys = set(leaves_by_key) - set(flat_like)
+        if extra_keys:
+            raise CheckpointError(
+                f"checkpoint {base!r} has extra keys not in the "
+                f"template: {sorted(extra_keys)}")
+        recorded = set(meta.get("keys", []))
+        if recorded != set(leaves_by_key):
+            raise CheckpointError(
+                f"checkpoint {base!r} npz/meta key mismatch: "
+                f"npz-only={sorted(set(leaves_by_key) - recorded)} "
+                f"meta-only={sorted(recorded - set(leaves_by_key))}")
+        bad = [k for k, want in meta.get("checksums", {}).items()
+               if _crc(leaves_by_key[k]) != want]
+        if bad:
+            raise CheckpointError(
+                f"checkpoint {base!r} checksum mismatch "
+                f"(corrupt arrays): {sorted(bad)}")
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []
     for path_, leaf in paths:
@@ -62,8 +139,7 @@ def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
 
 def save_registry(path: str, registry_state: Dict[str, Any]) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(registry_state, f, indent=2)
+    atomic_write_json(path, registry_state)
 
 
 def load_registry(path: str) -> Dict[str, Any]:

@@ -26,6 +26,10 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.checkpoint.io import CheckpointError
+from repro.checkpoint.state import (CheckpointManager, latest_checkpoint,
+                                    restore_server_state,
+                                    save_server_state)
 from repro.config import FedCDConfig
 from repro.core.plan import RoundPlan, SemiSyncCoordinator
 from repro.core.spec import resolve_spec
@@ -111,6 +115,19 @@ class FedAvgServer:
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(init_params))
         self._prefetch = None
+        # elastic checkpoint/resume + fault injection (DESIGN.md §13)
+        self._faults = spec.faults
+        self._ckpt = (CheckpointManager(spec.checkpoint_dir,
+                                        spec.save_every,
+                                        faults=spec.faults)
+                      if spec.checkpoint_dir else None)
+        if spec.resume_from:
+            path = latest_checkpoint(spec.resume_from)
+            if path is None:
+                raise CheckpointError(
+                    f"resume_from={spec.resume_from!r}: no valid "
+                    "checkpoint found (torn/corrupt steps are skipped)")
+            restore_server_state(self, path)
 
     @property
     def pipeline_stats(self):
@@ -145,6 +162,23 @@ class FedAvgServer:
             pair_device=d_ids, transfers=2 * len(d_ids),
             val_stale=[0], test_stale=[0])
 
+    # -- elastic checkpoint/resume (DESIGN.md §13) -------------------------
+    def _fault(self, t: int, phase: str) -> None:
+        if self._faults is not None:
+            self._faults.check(t, phase)
+
+    def save(self, path: str) -> str:
+        """Snapshot the complete logical round state (between rounds)."""
+        return save_server_state(self, path)
+
+    def restore(self, path: str) -> int:
+        """Restore from a checkpoint directory (or root — resolves to
+        its latest valid step); returns the last completed round."""
+        resolved = latest_checkpoint(path)
+        if resolved is None:
+            raise CheckpointError(f"no valid checkpoint under {path!r}")
+        return restore_server_state(self, resolved)
+
     def run_round(self, t: int) -> FedAvgRound:
         t0 = time.time()
         cfg = self.cfg
@@ -159,6 +193,7 @@ class FedAvgServer:
         plan = self._plan(t, participating, perms)
         if self.semisync is not None:
             self.semisync.resolve(plan, live=[0])
+        self._fault(t, "post-plan")
         self.executor.launch(plan)
         if self.pipeline:
             # FedAvg's next round depends on nothing this round computes:
@@ -168,16 +203,21 @@ class FedAvgServer:
                 self.data["train"][0].shape[1], self.batch_size,
                 cfg.local_epochs))
             self.executor.speculate(self._plan(t + 1, *self._prefetch[1]))
+        self._fault(t, "mid-dispatch")
         result = self.executor.readback()
         m = FedAvgRound(
             round=t, test_acc=result.test_acc, val_acc=result.val_acc,
             comm_bytes=2 * int(participating.sum()) * self._model_bytes,
             wall_s=time.time() - t0)
         self.metrics.append(m)
+        self._fault(t, "post-readback")
+        if self._ckpt is not None:
+            self._ckpt.maybe_save(self, t)
         return m
 
     def run(self, rounds: int, log_every: int = 0) -> List[FedAvgRound]:
-        for t in range(1, rounds + 1):
+        # a resumed server continues from the round after its checkpoint
+        for t in range(len(self.metrics) + 1, rounds + 1):
             m = self.run_round(t)
             if log_every and t % log_every == 0:
                 print(f"[fedavg] round {t:3d} "

@@ -44,6 +44,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.checkpoint.state import (CheckpointManager, latest_checkpoint,
+                                    restore_server_state,
+                                    save_server_state)
+from repro.checkpoint.io import CheckpointError
 from repro.config import FedCDConfig
 from repro.core import quantize as qz
 from repro.core.lifecycle import apply_deletions, clone_at_milestone
@@ -184,6 +188,19 @@ class FedCDServer:
             qz.compressed_bytes(init_params, cfg.quantize_bits)
             if cfg.quantize_bits else self._model_bytes)
         self._prefetch: Tuple[int, Tuple[np.ndarray, np.ndarray]] = None
+        # elastic checkpoint/resume + fault injection (DESIGN.md §13)
+        self._faults = spec.faults
+        self._ckpt = (CheckpointManager(spec.checkpoint_dir,
+                                        spec.save_every,
+                                        faults=spec.faults)
+                      if spec.checkpoint_dir else None)
+        if spec.resume_from:
+            path = latest_checkpoint(spec.resume_from)
+            if path is None:
+                raise CheckpointError(
+                    f"resume_from={spec.resume_from!r}: no valid "
+                    "checkpoint found (torn/corrupt steps are skipped)")
+            restore_server_state(self, path)
 
     def _make_executor(self, loss_fn: Callable, acc_fn: Callable):
         if self.engine == "fused":
@@ -299,6 +316,26 @@ class FedCDServer:
         self.executor.on_churn(joined, left, drifted)
         return joined, left
 
+    # -- elastic checkpoint/resume (DESIGN.md §13) -------------------------
+    def _fault(self, t: int, phase: str) -> None:
+        """Fault-injection hook: raise SimulatedCrash when the spec's
+        FaultSchedule scripts a crash at (round, phase)."""
+        if self._faults is not None:
+            self._faults.check(t, phase)
+
+    def save(self, path: str) -> str:
+        """Snapshot the complete logical round state (between rounds)."""
+        return save_server_state(self, path)
+
+    def restore(self, path: str) -> int:
+        """Restore from a checkpoint directory (or a checkpoint root,
+        resolving to its latest valid step). Returns the last completed
+        round; ``run`` continues from the next one."""
+        resolved = latest_checkpoint(path)
+        if resolved is None:
+            raise CheckpointError(f"no valid checkpoint under {path!r}")
+        return restore_server_state(self, resolved)
+
     # -- Algorithm 1 -------------------------------------------------------
     def run_round(self, t: int) -> RoundMetrics:
         t0 = time.time()
@@ -313,6 +350,7 @@ class FedCDServer:
                                   self.executor.plan_hints(),
                                   churn=(joined, left),
                                   churn_next=churn_next)
+        self._fault(t, "post-plan")
         self.executor.launch(plan)
         # overlap: draw round t+1's participation + perms while the
         # dispatched work is still executing (ROADMAP: async sampling)
@@ -323,6 +361,7 @@ class FedCDServer:
             spec = self.planner.build_speculative(
                 t + 1, self._prefetch[1], self.state, self.registry)
             self.executor.speculate(spec)
+        self._fault(t, "mid-dispatch")
         result = self.executor.readback()
 
         transfers = plan.transfers
@@ -339,6 +378,9 @@ class FedCDServer:
 
         metrics = self._collect(t, transfers, time.time() - t0)
         self.metrics.append(metrics)
+        self._fault(t, "post-readback")
+        if self._ckpt is not None:
+            self._ckpt.maybe_save(self, t)
         return metrics
 
     # -- metrics -----------------------------------------------------------
@@ -359,7 +401,8 @@ class FedCDServer:
             wall_s=wall, preferred=preferred)
 
     def run(self, rounds: int, log_every: int = 0) -> List[RoundMetrics]:
-        for t in range(1, rounds + 1):
+        # a resumed server continues from the round after its checkpoint
+        for t in range(len(self.metrics) + 1, rounds + 1):
             m = self.run_round(t)
             if log_every and t % log_every == 0:
                 print(f"[fedcd] round {t:3d} live={m.live_models} "

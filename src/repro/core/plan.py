@@ -209,6 +209,36 @@ class SemiSyncCoordinator:
             if parent in self.mass:
                 self.mass[clone] = self.mass[parent]
 
+    # -- elastic checkpoint (DESIGN.md §13) --------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """The coordinator's complete logical state (JSON-safe): the
+        virtual clock, every in-flight straggler, each model's
+        aggregation mass, and the accounting stats — everything a
+        resumed run needs to fold the identical buffered updates."""
+        return {
+            "clock": self.clock,
+            "pending": [[p.dispatch_round, p.model, p.device,
+                         p.weight, p.arrival] for p in self.pending],
+            "mass": {str(m): v for m, v in self.mass.items()},
+            "stats": self.stats.as_dict(),
+        }
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.clock = float(state["clock"])
+        self.pending = [_Pending(int(r), int(m), int(d), float(w),
+                                 float(a))
+                        for r, m, d, w, a in state["pending"]]
+        self.mass = {int(m): float(v) for m, v in state["mass"].items()}
+        st = state["stats"]
+        self.stats = SemiSyncStats(
+            rounds=st["rounds"], dispatched=st["dispatched"],
+            ontime=st["ontime"], stragglers=st["stragglers"],
+            dropouts=st["dropouts"], folded=st["folded"],
+            expired=st["expired"],
+            staleness_hist={int(k): v
+                            for k, v in st["staleness_hist"].items()},
+            t_semisync=st["t_semisync"], t_sync=st["t_sync"])
+
     def _fold_ready(self, plan: RoundPlan, live: Set[int]) -> None:
         st = self.stats
         ready = [p for p in self.pending if p.arrival <= self.clock]

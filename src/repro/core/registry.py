@@ -248,6 +248,46 @@ class StackedParamBank:
         self.load_ewma[:] = 0.0
         return [(m, hot, dest[1])]
 
+    # -- elastic restore (DESIGN.md §13) -----------------------------------
+    def restore(self, rows: Dict[int, Any],
+                row_of: Optional[Dict[int, int]] = None,
+                used_rows: Optional[set] = None,
+                load_ewma: Optional[np.ndarray] = None) -> None:
+        """Adopt a checkpoint's id-keyed param rows, re-placing them on
+        THIS bank's shard layout. With ``row_of``/``used_rows`` (a
+        checkpoint whose shard layout matches — same ``n_shards`` and
+        ``rows_per_shard``) placement restores verbatim, so the resumed
+        run's programs and float results are bit-identical to the
+        uninterrupted one's. Without them (resume onto a different mesh
+        shape) each id is re-placed in sorted order through the normal
+        least-loaded :meth:`_alloc_row` — the id↔row decoupling is what
+        makes cross-shape resume a pure relayout. All rows land in one
+        host stack + one (re-pinned) upload."""
+        self._present = set()
+        self.row_of = dict(row_of) if row_of is not None else {}
+        self._used_rows = (set(used_rows) if used_rows is not None
+                           else set(self.row_of.values()))
+        self.load_ewma = (np.asarray(load_ewma, float).copy()
+                          if load_ewma is not None
+                          else np.zeros(max(self.n_shards, 1)))
+        host = jax.tree.map(
+            lambda a: np.zeros(a.shape, a.dtype), self.tree)
+        for m in sorted(rows):
+            r = self.row_of.get(m)
+            if r is None:
+                r = self._alloc_row(m)
+                self.row_of[m] = r
+                self._used_rows.add(r)
+            self._present.add(m)
+            host = jax.tree.map(
+                lambda a, v, r=r: (a.__setitem__(r, np.asarray(v)) or a),
+                host, rows[m])
+        self._retired.append(self.tree)
+        self.tree = jax.tree.map(jnp.asarray, host)
+        if self.shardings is not None:
+            self.tree = jax.device_put(self.tree, self.shardings)
+        self.version += 1
+
     def swap(self, new_tree: Any) -> None:
         """Adopt ``new_tree`` as the bank (the fused step's output; the
         previous tree was donated into that step and is dead). Row
@@ -344,3 +384,22 @@ class ModelRegistry:
                 for e in self.entries.values()
             ],
         }
+
+    def load_json(self, state: Dict[str, Any]) -> None:
+        """Rebuild the genealogy from :meth:`to_json` output (params are
+        restored separately — deleted ids keep their entry, never their
+        params). ``m_cap`` must match: id allocation counts entries."""
+        if state["m_cap"] != self.m_cap:
+            raise ValueError(
+                f"registry m_cap mismatch: checkpoint {state['m_cap']} "
+                f"!= server {self.m_cap}")
+        self.entries = {
+            e["id"]: ModelEntry(e["id"], e["parent"], e["birth"],
+                                alive=e["alive"], death_round=e["death"])
+            for e in state["entries"]}
+
+    @classmethod
+    def from_json(cls, state: Dict[str, Any]) -> "ModelRegistry":
+        reg = cls(m_cap=state["m_cap"])
+        reg.load_json(state)
+        return reg

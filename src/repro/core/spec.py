@@ -60,6 +60,18 @@ class EngineSpec:
     use_agg_kernel: bool = False
     scenario: Any = None             # ChurnSchedule (FedCD only)
     straggler: Any = None            # StragglerModel (semi-sync rounds)
+    # elastic checkpoint/resume (DESIGN.md §13): snapshot the complete
+    # logical round state every ``save_every`` rounds into
+    # ``checkpoint_dir`` (atomic, manifest-last); ``resume_from`` points
+    # at a checkpoint directory — or a checkpoint_dir root, resolving to
+    # its latest VALID step — and may carry a different mesh shape than
+    # the run that saved it (ids re-place via least-loaded placement).
+    # ``faults``: a data.scenarios.FaultSchedule scripting process
+    # crashes at round phases (the fault-injection harness).
+    save_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    resume_from: Optional[str] = None
+    faults: Any = None               # FaultSchedule (crash injection)
     mesh: Any = field(default=None, compare=False)
 
     # -- construction ------------------------------------------------------
@@ -172,6 +184,11 @@ class EngineSpec:
             raise ValueError(
                 "use_agg_kernel is unsupported with a sharded data axis "
                 "(eq 1 completes with a psum over partial sums)")
+        if self.save_every < 0:
+            raise ValueError(f"save_every must be >= 0: {self.save_every}")
+        if self.save_every and not self.checkpoint_dir:
+            raise ValueError(
+                "save_every requires checkpoint_dir (nowhere to save)")
         if self.mesh is not None:
             from repro.launch.mesh import data_axis_size, model_axis_size
             if (model_axis_size(self.mesh) != self.model_shards

@@ -188,6 +188,43 @@ class DeviceDataBank:
             raise KeyError(device_id)
         self._write_row(self.row_of[device_id], device)
 
+    # -- elastic restore (DESIGN.md §13) ------------------------------------
+    def restore(self, devices: Dict[int, Dict[str, Tuple[np.ndarray,
+                                                         np.ndarray]]],
+                next_id: int,
+                row_of: Optional[Dict[int, int]] = None) -> None:
+        """Adopt a checkpoint's id-keyed device splits, re-placing them
+        on THIS bank's data-shard layout. With ``row_of`` (a checkpoint
+        whose layout matches — same ``n_shards``/``rows_per_shard``)
+        placement restores verbatim; otherwise each present id re-places
+        in sorted order through :meth:`_alloc_row` (least-loaded data
+        shard), exactly like a fresh join — the id↔row decoupling makes
+        resume onto a different mesh shape a pure relayout. Rows not
+        named keep their (unreachable) content. One host pass + one
+        (re-pinned) upload per split."""
+        self._present = set()
+        self.row_of = dict(row_of) if row_of is not None else {}
+        self._next_id = next_id
+        host = {k: (np.array(xs), np.array(ys))       # writable copies
+                for k, (xs, ys) in self.splits.items()}
+        for d in sorted(devices):
+            r = self.row_of.get(d)
+            if r is None:
+                r = self._alloc_row()      # counts already-placed rows
+                self.row_of[d] = r
+            self._present.add(d)
+            for k in SPLITS:
+                x, y = devices[d][k]
+                host[k][0][r] = np.asarray(x, host[k][0].dtype)
+                host[k][1][r] = np.asarray(y, host[k][1].dtype)
+        self._row_owner = {r: d for d, r in self.row_of.items()
+                           if d in self._present}
+        self.splits = {k: (jnp.asarray(xs), jnp.asarray(ys))
+                       for k, (xs, ys) in host.items()}
+        if self.shardings is not None:
+            self.splits = jax.device_put(self.splits, self.shardings)
+        self.version += 1
+
     def remove(self, device_id: int) -> None:
         """A device leaves: free its slot for reuse. Its rows keep their
         (now unreachable) data — in-flight speculative batches may still

@@ -209,6 +209,13 @@ class RoundExecutor:
                  drifted: List[int]) -> None:
         pass                             # device-lifecycle hook
 
+    def quiesce(self) -> None:
+        """Snapshot barrier (DESIGN.md §13): drain-and-discard any
+        in-flight speculation and release retired buffers so a
+        checkpoint reads settled state. Safe because speculative batches
+        are repairable — the next launch simply trains synchronously.
+        No-op for the synchronous engines."""
+
     def collect(self, preferred: np.ndarray
                 ) -> Tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError
@@ -722,6 +729,17 @@ class FusedExecutor(RoundExecutor):
         if self._spec is not None:
             self._discard_spec(invalidated=False)
 
+    def quiesce(self) -> None:
+        """Snapshot barrier (DESIGN.md §13): discard the in-flight
+        speculative batch (repairable, so drain-and-discard is safe —
+        the resumed round trains synchronously and computes identical
+        params) and free the graveyard + retired bank trees. May block
+        on the speculation's pending execution; a snapshot blocks on
+        the bank pull anyway."""
+        self._drop_speculation()
+        self._spec_graveyard.clear()
+        self.registry.params.release_retired()
+
     def _take_speculation(self, plan: RoundPlan
                           ) -> Optional[Tuple[Any, TrainMeta]]:
         """Consume the pending speculative train batch if it still
@@ -1222,6 +1240,9 @@ class FedAvgExecutorBase:
     def speculate(self, plan: RoundPlan) -> None:
         pass
 
+    def quiesce(self) -> None:
+        pass                             # snapshot barrier (DESIGN.md §13)
+
     def readback(self) -> FedAvgResult:
         result, self._result = self._result, None
         return result
@@ -1321,6 +1342,12 @@ class FedAvgFusedExecutor(FedAvgExecutorBase):
         self._stacked = jax.tree.map(lambda a: jnp.asarray(a)[None],
                                      value)
         self._park_spec()                # the bank was rewritten
+
+    def quiesce(self) -> None:
+        """Snapshot barrier (DESIGN.md §13): park any speculative round
+        and free retired trees before the bank is serialized."""
+        self._park_spec()
+        self._retired.clear()
 
     def _park_spec(self) -> None:
         """Drop a pending speculation without destructing its

@@ -129,8 +129,26 @@ class FedLLMTrainer:
         self.metrics.append(m)
         return m
 
+    # -- elastic checkpoint/resume (DESIGN.md §13) -------------------------
+    def save(self, path: str) -> str:
+        """Snapshot the complete logical round state (between rounds)."""
+        from repro.checkpoint.state import save_server_state
+        return save_server_state(self, path)
+
+    def restore(self, path: str) -> int:
+        """Restore from a checkpoint directory (or root — resolves to
+        its latest valid step); returns the last completed round."""
+        from repro.checkpoint.io import CheckpointError
+        from repro.checkpoint.state import (latest_checkpoint,
+                                            restore_server_state)
+        resolved = latest_checkpoint(path)
+        if resolved is None:
+            raise CheckpointError(f"no valid checkpoint under {path!r}")
+        return restore_server_state(self, resolved)
+
     def run(self, rounds: int, log_every: int = 0):
-        for t in range(1, rounds + 1):
+        # a resumed trainer continues from the round after its checkpoint
+        for t in range(len(self.metrics) + 1, rounds + 1):
             m = self.run_round(t)
             if log_every and t % log_every == 0:
                 print(f"[fedcd-llm] round {t:3d} loss={m.mean_loss:.3f} "

@@ -8,6 +8,17 @@ architecture, with archetype-conditioned synthetic token streams, score
 bookkeeping, clone/delete milestones, and checkpointing. ``--reduced``
 shrinks the architecture for single-host runs (full configs are exercised
 on the production mesh via dryrun.py).
+
+Elastic resume (DESIGN.md §13): ``--save-every N`` snapshots the
+complete trainer state (params, registry, scores, RNG stream position,
+metrics) under ``<out>/ckpts/step_*`` every N rounds — atomically, so a
+kill mid-save never leaves a loadable torn checkpoint — and ``--resume
+<dir>`` continues a preempted run from the latest valid step:
+
+  python -m repro.launch.train --rounds 50 --save-every 5
+  # ...preempted at round 23...
+  python -m repro.launch.train --rounds 50 --save-every 5 \
+      --resume experiments/train/ckpts
 """
 from __future__ import annotations
 
@@ -15,7 +26,7 @@ import argparse
 import json
 import os
 
-from repro.checkpoint import save_checkpoint, save_registry
+from repro.checkpoint import CheckpointManager, save_checkpoint, save_registry
 from repro.config import FedCDConfig
 from repro.configs import get_arch, reduced
 from repro.federated.llm import FedLLMTrainer
@@ -35,6 +46,12 @@ def main() -> None:
     ap.add_argument("--max-models", type=int, default=8)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save-every", type=int, default=0, metavar="N",
+                    help="snapshot full trainer state every N rounds "
+                         "under <out>/ckpts (0 = off)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from a checkpoint directory (or a "
+                         "ckpts root — picks the latest valid step)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -49,7 +66,20 @@ def main() -> None:
 
     trainer = FedLLMTrainer(arch, fed, args.clients, args.per_client,
                             args.seq, args.archetypes, seed=args.seed)
-    trainer.run(args.rounds, log_every=5)
+    if args.resume:
+        start = trainer.restore(args.resume)
+        print(f"resumed from round {start} ({args.resume})")
+    mgr = (CheckpointManager(os.path.join(args.out, "ckpts"),
+                             args.save_every)
+           if args.save_every else None)
+    for t in range(len(trainer.metrics) + 1, args.rounds + 1):
+        m = trainer.run_round(t)
+        if t % 5 == 0:
+            print(f"[fedcd-llm] round {t:3d} loss={m.mean_loss:.3f} "
+                  f"live={m.live_models} acc={m.client_acc.mean():.3f}",
+                  flush=True)
+        if mgr is not None:
+            mgr.maybe_save(trainer, t)
 
     os.makedirs(args.out, exist_ok=True)
     for m in trainer.registry.live_ids():

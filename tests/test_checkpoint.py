@@ -1,11 +1,21 @@
-"""Checkpoint IO round-trips params and registry state."""
+"""Checkpoint IO round-trips params and registry state.
+
+Atomic-commit rules (DESIGN.md §13): every file commits via tmp +
+``os.replace`` with the meta written LAST, loads are strict (key sets
+and per-array crc32 validated, errors name the offending keys), and
+non-f32 dtypes round-trip exactly — bf16 through the f32 widen/cast-back
+(bf16 ⊂ f32) and int8 quantized transport buffers verbatim.
+"""
+import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import (load_checkpoint, load_registry, save_checkpoint,
+from repro.checkpoint import (CheckpointError, load_checkpoint,
+                              load_registry, save_checkpoint,
                               save_registry)
 from repro.core.registry import ModelRegistry
 
@@ -35,3 +45,107 @@ def test_registry_roundtrip(tmp_path):
     entries = {e["id"]: e for e in state["entries"]}
     assert entries[0]["alive"] is False and entries[0]["death"] == 9
     assert entries[1]["parent"] == 0
+
+
+def test_registry_json_roundtrip_with_deleted_ids(tmp_path):
+    """Dead entries survive the JSON roundtrip — id allocation counts
+    ALL entries, so dropping them would re-issue a dead model's id."""
+    reg = ModelRegistry.create({"w": np.zeros(2)}, m_cap=8)
+    reg.clone(0, 2, {"w": np.ones(2)})
+    reg.clone(0, 2, {"w": np.ones(2)})
+    reg.kill(1, 4)
+    back = ModelRegistry.from_json(reg.to_json())
+    assert back.genealogy() == reg.genealogy()
+    assert back.live_ids() == [0, 2]
+    assert back.entries[1].death_round == 4
+    # next id allocates PAST the dead entry, exactly like the original
+    assert back.allocate(0, 5) == reg.allocate(0, 5) == 3
+    with pytest.raises(ValueError, match="m_cap"):
+        ModelRegistry.create({"w": np.zeros(2)}, m_cap=4).load_json(
+            reg.to_json())
+
+
+def test_bf16_roundtrip_is_exact(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.bfloat16),
+            "b": jnp.asarray(rng.normal(size=(8,)), jnp.bfloat16)}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, step=1)
+    restored, _ = load_checkpoint(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert b.dtype == jnp.bfloat16
+        # bf16 -> f32 -> bf16 is lossless (bf16 values are a subset)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_int8_roundtrip_is_exact(tmp_path):
+    """int8 quantized transport buffers store verbatim, no widening."""
+    rng = np.random.default_rng(1)
+    tree = {"q": jnp.asarray(rng.integers(-128, 128, size=(32,), dtype=np.int8)),
+            "scale": jnp.asarray(rng.normal(size=()), jnp.float32)}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, step=2)
+    restored, _ = load_checkpoint(path, tree)
+    assert restored["q"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(tree["q"]),
+                                  np.asarray(restored["q"]))
+
+
+# -- atomicity + strict validation (DESIGN.md §13) -----------------------
+
+@pytest.fixture()
+def ckpt(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((4,))}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, step=3)
+    return path, tree
+
+
+def test_no_tmp_residue(ckpt):
+    path, _ = ckpt
+    d = os.path.dirname(path) or "."
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_missing_meta_is_a_torn_checkpoint(ckpt):
+    path, tree = ckpt
+    os.remove(path + ".meta.json")
+    with pytest.raises(CheckpointError, match="unreadable"):
+        load_checkpoint(path, tree)
+
+
+def test_missing_key_names_it(ckpt):
+    path, tree = ckpt
+    with pytest.raises(CheckpointError, match="missing keys.*'c'"):
+        load_checkpoint(path, {**tree, "c": jnp.zeros(2)})
+
+
+def test_extra_key_names_it(ckpt):
+    path, tree = ckpt
+    with pytest.raises(CheckpointError, match="extra keys.*'b'"):
+        load_checkpoint(path, {"a": tree["a"]})
+
+
+def test_checksum_mismatch_names_the_key(ckpt):
+    path, tree = ckpt
+    data = dict(np.load(path + ".npz"))
+    data["a"] = data["a"] + 1.0        # corrupt one array in place
+    np.savez(path + ".npz", **data)
+    with pytest.raises(CheckpointError, match="checksum.*'a'"):
+        load_checkpoint(path, tree)
+    # non-strict skips validation (salvage mode) and loads the bytes
+    restored, _ = load_checkpoint(path, tree, strict=False)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]) + 1.0)
+
+
+def test_npz_meta_key_drift_is_rejected(ckpt):
+    path, tree = ckpt
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    meta["keys"].append("ghost")
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CheckpointError, match="ghost"):
+        load_checkpoint(path, tree)

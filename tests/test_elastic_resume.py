@@ -1,0 +1,288 @@
+"""Elastic checkpoint/resume + fault injection (DESIGN.md §13).
+
+The claim under test: killing a run at ANY scripted phase of a round
+(post-plan, mid-dispatch, post-readback, mid-save) and resuming a
+freshly-constructed server from the latest valid checkpoint reproduces
+the uninterrupted run EXACTLY — bit-identical discrete state (scores,
+registry genealogy, metrics, preferences, transport accounting) and
+bit-identical params when the resumed server has the same layout, or
+params to reduction order when it resumes onto a DIFFERENT mesh shape
+(ids re-place via least-loaded placement — the id↔row decoupling the
+mesh tiers already pin).
+
+Torn saves (a crash between the arrays commit and the manifest commit)
+must be invisible: ``latest_checkpoint`` falls back to the previous
+step. Corrupt checkpoints (flipped bytes, dropped keys) must raise
+:class:`CheckpointError` naming the offending keys — never load.
+
+Mesh tiers above ``jax.device_count()`` skip; CI's sharded leg runs
+this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.io import CheckpointError
+from repro.checkpoint.state import (ARRAYS, MANIFEST, latest_checkpoint,
+                                    verify_checkpoint)
+from repro.core.fedavg import FedAvgServer
+from repro.core.fedcd import FedCDServer
+from repro.core.spec import EngineSpec
+from repro.data.scenarios import (FAULT_PHASES, FaultEvent, FaultSchedule,
+                                  SimulatedCrash, random_churn)
+from repro.models.mlp import mlp_accuracy, mlp_loss
+from test_datamesh_equivalence import _assert_discrete_state_equal
+from test_engine_equivalence import ROUNDS, _small_setup
+from test_semisync_equivalence import (STRAGGLER,
+                                       _assert_params_bit_identical)
+from test_sharded_equivalence import needs_devices
+
+
+def _run(spec, rounds=ROUNDS, server=FedCDServer):
+    cfg, params, data = _small_setup()
+    srv = server(cfg, params, mlp_loss, mlp_accuracy, data,
+                 batch_size=16, spec=spec)
+    srv.run(rounds)
+    return srv
+
+
+def _churn():
+    return random_churn(ROUNDS, 8, seed=3, join_rate=0.5, leave_rate=0.4,
+                        drift_rate=0.3, min_devices=3, n_train=64,
+                        n_val=32, n_test=32)
+
+
+def _crash_then_resume(make_spec, fault, root, rounds=ROUNDS,
+                       server=FedCDServer, save_every=2):
+    """Run with periodic saves until the scripted crash fires, then
+    resume a FRESH server (same spec, no faults) from the checkpoint
+    root and drive it to the same horizon."""
+    faulted = dataclasses.replace(
+        make_spec(), save_every=save_every, checkpoint_dir=root,
+        faults=FaultSchedule((fault,)))
+    with pytest.raises(SimulatedCrash):
+        _run(faulted, rounds, server)
+    resumed = dataclasses.replace(make_spec(), resume_from=root)
+    return _run(resumed, rounds, server)
+
+
+def _assert_params_allclose(ref, srv):
+    for m in ref.registry.live_ids():
+        for a, b in zip(jax.tree.leaves(ref.registry.params[m]),
+                        jax.tree.leaves(srv.registry.params[m])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def fused_ref():
+    return _run(EngineSpec())
+
+
+# -- kill at every scripted phase: resumed == uninterrupted --------------
+
+@pytest.mark.parametrize("phase", FAULT_PHASES)
+def test_crash_any_phase_resumes_bit_identical(phase, tmp_path, fused_ref):
+    # mid-save only fires on a save round (cadence 2); the others crash
+    # mid-round at an odd round so resume replays an unsaved round too
+    t = 4 if phase == "mid-save" else 5
+    res = _crash_then_resume(EngineSpec, FaultEvent(t, phase),
+                             str(tmp_path / "ck"))
+    _assert_discrete_state_equal(fused_ref, res)
+    _assert_params_bit_identical(fused_ref, res)
+
+
+def test_pipelined_crash_resumes_bit_identical(tmp_path):
+    ref = _run(EngineSpec(pipeline=True))
+    res = _crash_then_resume(lambda: EngineSpec(pipeline=True),
+                             FaultEvent(5, "mid-dispatch"),
+                             str(tmp_path / "ck"))
+    # the resume boundary drains one in-flight speculation; that is
+    # invisible to results (repair semantics) so everything but the
+    # speculation COUNTERS must match
+    _assert_discrete_state_equal(ref, res)
+    _assert_params_bit_identical(ref, res)
+
+
+def test_semisync_crash_resumes_bit_identical(tmp_path):
+    ref = _run(EngineSpec(straggler=STRAGGLER))
+    res = _crash_then_resume(lambda: EngineSpec(straggler=STRAGGLER),
+                             FaultEvent(5, "post-readback"),
+                             str(tmp_path / "ck"))
+    _assert_discrete_state_equal(ref, res)
+    _assert_params_bit_identical(ref, res)
+    # the virtual clock, straggler buffer and fold accounting all
+    # restored: the stats histories are indistinguishable
+    assert res.semisync_stats.as_dict() == ref.semisync_stats.as_dict()
+
+
+def test_churn_pipelined_crash_resumes_bit_identical(tmp_path):
+    ref = _run(EngineSpec(scenario=_churn(), pipeline=True))
+    res = _crash_then_resume(
+        lambda: EngineSpec(scenario=_churn(), pipeline=True),
+        FaultEvent(5, "post-plan"), str(tmp_path / "ck"))
+    _assert_discrete_state_equal(ref, res)
+    _assert_params_bit_identical(ref, res)
+    assert res.databank.present_ids() == ref.databank.present_ids()
+    assert res.databank.next_id == ref.databank.next_id
+
+
+def test_fedavg_pipelined_crash_resumes_bit_identical(tmp_path):
+    ref = _run(EngineSpec(pipeline=True), rounds=6, server=FedAvgServer)
+    res = _crash_then_resume(lambda: EngineSpec(pipeline=True),
+                             FaultEvent(5, "post-plan"),
+                             str(tmp_path / "ck"), rounds=6,
+                             server=FedAvgServer)
+    for ms, mv in zip(ref.metrics, res.metrics):
+        assert ms.round == mv.round
+        assert ms.comm_bytes == mv.comm_bytes
+        np.testing.assert_array_equal(ms.test_acc, mv.test_acc)
+        np.testing.assert_array_equal(ms.val_acc, mv.val_acc)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- resharding-on-resume: any checkpoint onto any mesh shape ------------
+
+@needs_devices(2)
+def test_sharded_same_shape_resumes_bit_identical(tmp_path):
+    ref = _run(EngineSpec(model_shards=2))
+    res = _crash_then_resume(lambda: EngineSpec(model_shards=2),
+                             FaultEvent(5, "mid-dispatch"),
+                             str(tmp_path / "ck"))
+    _assert_discrete_state_equal(ref, res)
+    _assert_params_bit_identical(ref, res)
+    # same layout -> placement restored verbatim
+    assert res.registry.params.row_of == ref.registry.params.row_of
+
+
+@needs_devices(2)
+def test_fused_checkpoint_resumes_onto_sharded_mesh(tmp_path):
+    root = str(tmp_path / "ck")
+    # leave a fused-layout (1-shard) checkpoint at round 4
+    _run(EngineSpec(save_every=4, checkpoint_dir=root), rounds=4)
+    res = _run(EngineSpec(model_shards=2, resume_from=root))
+    ref = _run(EngineSpec(model_shards=2))
+    _assert_discrete_state_equal(ref, res)
+    _assert_params_allclose(ref, res)
+
+
+@needs_devices(4)
+def test_sharded_checkpoint_resumes_onto_2d_mesh(tmp_path):
+    root = str(tmp_path / "ck")
+    faulted = EngineSpec(model_shards=4, save_every=2,
+                         checkpoint_dir=root,
+                         faults=FaultSchedule(
+                             (FaultEvent(5, "mid-dispatch"),)))
+    with pytest.raises(SimulatedCrash):
+        _run(faulted)
+    # sharded@4 resumes as sharded@2x2: different model-shard count AND
+    # a data axis the checkpoint never had
+    res = _run(EngineSpec(model_shards=2, data_shards=2,
+                          resume_from=root))
+    ref = _run(EngineSpec(model_shards=2, data_shards=2))
+    _assert_discrete_state_equal(ref, res)
+    _assert_params_allclose(ref, res)
+
+
+# -- torn and corrupt checkpoints ----------------------------------------
+
+def test_mid_save_crash_falls_back_to_previous_step(tmp_path, fused_ref):
+    root = str(tmp_path / "ck")
+    res = _crash_then_resume(EngineSpec, FaultEvent(4, "mid-save"), root)
+    # step 4's arrays committed but its manifest never did
+    torn = os.path.join(root, "step_000004")
+    assert os.path.exists(os.path.join(torn, ARRAYS))
+    assert not os.path.exists(os.path.join(torn, MANIFEST))
+    assert latest_checkpoint(root).endswith("step_000002")
+    _assert_discrete_state_equal(fused_ref, res)
+    _assert_params_bit_identical(fused_ref, res)
+
+
+@pytest.fixture()
+def saved(tmp_path):
+    """A valid step-4 checkpoint directory."""
+    root = str(tmp_path / "ck")
+    _run(EngineSpec(save_every=4, checkpoint_dir=root), rounds=4)
+    return os.path.join(root, "step_000004")
+
+
+def test_flipped_byte_is_rejected_naming_the_key(saved):
+    data = dict(np.load(os.path.join(saved, ARRAYS)))
+    key = "score/history"
+    data[key] = data[key] + 1e-3       # silent corruption
+    np.savez(os.path.join(saved, ARRAYS), **data)
+    with pytest.raises(CheckpointError, match="score/history"):
+        verify_checkpoint(saved)
+    assert latest_checkpoint(os.path.dirname(saved)) is None
+
+
+def test_dropped_key_is_rejected_naming_the_key(saved):
+    data = dict(np.load(os.path.join(saved, ARRAYS)))
+    data.pop("present")
+    np.savez(os.path.join(saved, ARRAYS), **data)
+    with pytest.raises(CheckpointError, match="present"):
+        verify_checkpoint(saved)
+
+
+def test_truncated_manifest_is_rejected(saved):
+    with open(os.path.join(saved, MANIFEST), "w") as f:
+        f.write('{"schema": 1, "kind"')
+    with pytest.raises(CheckpointError, match="manifest"):
+        verify_checkpoint(saved)
+
+
+def test_resume_from_empty_root_is_an_error(tmp_path):
+    cfg, params, data = _small_setup()
+    with pytest.raises(CheckpointError, match="no valid"):
+        FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                    batch_size=16,
+                    spec=EngineSpec(resume_from=str(tmp_path)))
+
+
+def test_config_mismatch_names_the_field(saved):
+    cfg, params, data = _small_setup(lr=0.123)
+    with pytest.raises(CheckpointError, match="lr"):
+        FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                    batch_size=16, spec=EngineSpec(resume_from=saved))
+
+
+# -- direct save/restore roundtrip ---------------------------------------
+
+def test_manual_save_restore_roundtrip(tmp_path):
+    srv = _run(EngineSpec(), rounds=4)
+    path = srv.save(str(tmp_path / "snap"))
+    manifest, _ = verify_checkpoint(path)
+    assert manifest["round"] == 4
+    cfg, params, data = _small_setup()
+    res = FedCDServer(cfg, params, mlp_loss, mlp_accuracy, data,
+                      batch_size=16, spec=EngineSpec())
+    assert res.restore(path) == 4
+    assert res.rng.bit_generator.state == srv.rng.bit_generator.state
+    assert res.life_rng.bit_generator.state == \
+        srv.life_rng.bit_generator.state
+    assert res.registry.genealogy() == srv.registry.genealogy()
+    np.testing.assert_array_equal(res.present, srv.present)
+    _assert_discrete_state_equal(srv, res)
+    _assert_params_bit_identical(srv, res)
+    # the prefetched round-5 sample survived (the saved RNG stream is
+    # already past it — replaying the draw would double-consume)
+    assert res._prefetch[0] == srv._prefetch[0] == 5
+    np.testing.assert_array_equal(res._prefetch[1][0],
+                                  srv._prefetch[1][0])
+    np.testing.assert_array_equal(res._prefetch[1][1],
+                                  srv._prefetch[1][1])
+
+
+def test_save_is_atomic_no_tmp_residue(tmp_path):
+    srv = _run(EngineSpec(), rounds=2)
+    path = srv.save(str(tmp_path / "snap"))
+    assert not [f for f in os.listdir(path) if f.endswith(".tmp")]
+    # manifest commits last and agrees with the npz
+    manifest, arrays = verify_checkpoint(path)
+    assert set(manifest["arrays"]) == set(arrays)
