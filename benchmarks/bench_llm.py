@@ -1,0 +1,93 @@
+"""Mode-B LM engine: stacked/vmapped dispatch vs the per-model loop
+(DESIGN.md §14).
+
+Times ``engine="llm"`` (one donated round dispatch over the
+per-layer-stacked bank) against ``engine="legacy"`` (per-model Python
+loop, the equivalence oracle) on identical seeded runs of a tiny
+transformer at ``max_models=8``. Early milestones grow the population
+to 4+ live models, so the steady-state regime — the median per-round
+wall over the back half of the run, every dispatch shape compiled — is
+the multi-model one the acceptance bar names (stacked no slower than
+the loop at 4+ live models).
+
+Run directly or via ``python -m benchmarks.run --only llm``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(rounds: int = 12, quick: bool = False):
+    from repro.config import ArchConfig, FedCDConfig
+    from repro.federated.llm import FedLLMTrainer
+
+    arch = ArchConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=64,
+                      param_dtype="float32", compute_dtype="float32")
+    if quick:
+        rounds = max(rounds, 12)
+        n_clients, per_client, seq, k = 4, 2, 16, 3
+    else:
+        rounds = max(rounds, 12)
+        n_clients, per_client, seq, k = 8, 2, 32, 6
+    # 4 archetypes + partial participation keeps the eq-4 pruning from
+    # collapsing the clone tree: the population settles at 4 live
+    # models through the steady half (the regime the acceptance bar
+    # names)
+    fed = FedCDConfig(
+        n_devices=n_clients, devices_per_round=k,
+        score_window=3, milestones=(1, 2, 3),
+        late_delete_round=rounds + 1, max_models=8, lr=0.05, seed=0)
+
+    trainers = {
+        engine: FedLLMTrainer(arch, fed, n_clients, per_client, seq,
+                              n_archetypes=4, seed=0, spec=engine)
+        for engine in ("legacy", "llm")}
+    # interleave the engines round-by-round (identical seeded
+    # schedules) so machine-noise bursts hit both runs equally instead
+    # of biasing whichever engine ran second
+    for t in range(1, rounds + 1):
+        for tr in trainers.values():
+            tr.run_round(t)
+    total = {e: sum(m.wall_s for m in tr.metrics)
+             for e, tr in trainers.items()}
+
+    steady = list(range(rounds // 2 + 1, rounds + 1))
+    walls = {e: np.array([tr.metrics[t - 1].wall_s for t in steady])
+             for e, tr in trainers.items()}
+    # a round whose (trained, live) shape pair first appears late pays
+    # its jit compile inside the window — keep only rounds where BOTH
+    # engines ran warm (<= 5x their window min), then compare PAIRED:
+    # the engines ran back-to-back within each round, so the per-round
+    # ratio cancels machine-noise bursts that a ratio of independent
+    # medians would absorb
+    warm = np.ones(len(steady), bool)
+    for w in walls.values():
+        warm &= w <= 5 * w.min()
+    med = {e: float(np.median(w[warm])) for e, w in walls.items()}
+    live = int(np.median([trainers["llm"].metrics[t - 1].live_models
+                          for t in steady]))
+    legacy_x = float(np.median(walls["legacy"][warm] /
+                               walls["llm"][warm]))
+    return [
+        C.csv_line("llm_legacy_round", med["legacy"] * 1e6,
+                   f"live={live};rounds={rounds};"
+                   f"total_s={total['legacy']:.2f}"),
+        C.csv_line("llm_stacked_round", med["llm"] * 1e6,
+                   f"legacy_x={legacy_x:.2f};live={live};"
+                   f"rounds={rounds};total_s={total['llm']:.2f}"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(args.rounds, quick=args.quick):
+        print(line)

@@ -52,8 +52,9 @@ def main() -> None:
 
     from benchmarks import (bench_checkpoint, bench_comm,
                             bench_hierarchical, bench_hypergeometric,
-                            bench_kernels, bench_model_dynamics,
-                            bench_quantization, bench_wallclock)
+                            bench_kernels, bench_llm,
+                            bench_model_dynamics, bench_quantization,
+                            bench_wallclock)
 
     long_rounds = 16 if args.fast else 40
     short_rounds = 10 if args.fast else 25
@@ -87,6 +88,8 @@ def main() -> None:
             8 if args.fast else 16, args.model, quick=args.fast),
         "checkpoint": lambda: bench_checkpoint.run(
             8 if args.fast else 16, args.model, quick=args.fast),
+        "llm": lambda: bench_llm.run(8 if args.fast else 12,
+                                     quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),

@@ -100,12 +100,13 @@ def _set_rng(gen: np.random.Generator, state: dict) -> None:
 
 
 def _kind(server: Any) -> str:
-    """Duck-typed dispatch: FedCDServer carries a planner, FedLLMTrainer
-    a client count, FedAvgServer neither."""
-    if hasattr(server, "planner"):
-        return "fedcd"
+    """Duck-typed dispatch: FedLLMTrainer carries a client count (check
+    it FIRST — since the plan/executor unification it carries a planner
+    too), FedCDServer a planner, FedAvgServer neither."""
     if hasattr(server, "n_clients"):
         return "fedllm"
+    if hasattr(server, "planner"):
+        return "fedcd"
     return "fedavg"
 
 
@@ -275,13 +276,27 @@ def _snapshot_fedllm(server: Any) -> Tuple[dict, dict]:
     _snapshot_params(arrays, scalars, server.registry)
     scalars["registry"] = server.registry.to_json()
     scalars["rng"] = {"rng": _rng_state(server.rng)}
+    # the pipelined trainer's saved RNG stream is PAST round t+1's
+    # draws — the prefetched inputs themselves must ride along or the
+    # resumed round t+1 would re-draw from the wrong stream position
+    pf = getattr(server, "_prefetch", None)
+    if pf is None:
+        scalars["prefetch_round"] = None
+    else:
+        scalars["prefetch_round"] = int(pf[0])
+        arrays["prefetch/participating"] = np.asarray(pf[1])
+        arrays["prefetch/tokens"] = np.asarray(pf[2])
+        arrays["prefetch/labels"] = np.asarray(pf[3])
+        arrays["prefetch/vt"] = np.asarray(pf[4])
+        arrays["prefetch/vl"] = np.asarray(pf[5])
     if server.metrics:
         arrays["metrics/client_acc"] = np.stack(
             [m.client_acc for m in server.metrics])
     scalars["metrics"] = [
         {"round": m.round, "mean_loss": m.mean_loss,
          "live_models": m.live_models, "active_models": m.active_models,
-         "score_std": m.score_std, "wall_s": m.wall_s}
+         "score_std": m.score_std, "wall_s": m.wall_s,
+         "trained_models": m.trained_models}
         for m in server.metrics]
     scalars["n_devices"] = int(server.n_clients)
     return arrays, scalars
@@ -464,6 +479,14 @@ def _restore_params(server: Any, manifest: dict, arrays: dict) -> None:
             # placement on the NEW shard layout; the load EWMA
             # described the old layout and restarts cold
             pb.restore(rows)
+    elif isinstance(reg.params, StackedParamBank):
+        # dict-mode checkpoint (legacy engine) into a stacked registry:
+        # adopt the id-keyed rows through fresh least-loaded placement.
+        # (Before this branch the dict silently REPLACED the bank,
+        # leaving the executor's programs pointed at a dead tree.)
+        rows = {m: _unflatten(template, arrays, f"params/{m}",
+                              as_numpy=True) for m in live}
+        reg.params.restore(rows)
     else:
         reg.params = {m: _unflatten(template, arrays, f"params/{m}")
                       for m in live}
@@ -586,13 +609,25 @@ def restore_server_state(server: Any, path: str) -> int:
     else:                                # fedllm
         _restore_scores(server, arrays)
         _restore_params(server, manifest, arrays)
+        pr = scalars.get("prefetch_round")
+        if pr is not None and "prefetch/tokens" in arrays:
+            server._prefetch = (
+                int(pr),
+                np.asarray(arrays["prefetch/participating"], bool),
+                np.asarray(arrays["prefetch/tokens"]),
+                np.asarray(arrays["prefetch/labels"]),
+                np.asarray(arrays["prefetch/vt"]),
+                np.asarray(arrays["prefetch/vl"]))
+        elif hasattr(server, "_prefetch"):
+            server._prefetch = None
         from repro.federated.llm import LLMRoundMetrics
         server.metrics = [
             LLMRoundMetrics(round=s["round"], mean_loss=s["mean_loss"],
                             client_acc=arrays["metrics/client_acc"][i],
                             live_models=s["live_models"],
                             active_models=s["active_models"],
-                            score_std=s["score_std"], wall_s=s["wall_s"])
+                            score_std=s["score_std"], wall_s=s["wall_s"],
+                            trained_models=s.get("trained_models", 0))
             for i, s in enumerate(scalars["metrics"])]
     return manifest["round"]
 

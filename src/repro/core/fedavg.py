@@ -72,6 +72,10 @@ class FedAvgServer:
         spec = resolve_spec(
             spec, dict(engine=engine, mesh=mesh, pipeline=pipeline,
                        straggler=straggler), "FedAvgServer")
+        if spec.engine == "llm":
+            raise ValueError(
+                "engine='llm' is the mode-B LM plane — construct "
+                "federated.llm.FedLLMTrainer with this spec instead")
         for name, on in (("scenario churn", spec.scenario is not None),
                          ("sparse_eval", spec.sparse_eval is not None),
                          ("migrate_threshold",

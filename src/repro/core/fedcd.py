@@ -122,6 +122,10 @@ class FedCDServer:
                        migrate_threshold=migrate_threshold,
                        use_agg_kernel=use_agg_kernel,
                        straggler=straggler), "FedCDServer")
+        if spec.engine == "llm":
+            raise ValueError(
+                "engine='llm' is the mode-B LM plane — construct "
+                "federated.llm.FedLLMTrainer with this spec instead")
         engine, mesh = spec.engine, spec.resolve_mesh()
         self.spec = spec
         self.cfg = cfg

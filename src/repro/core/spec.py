@@ -14,7 +14,7 @@ equivalent spec).
 String grammar (``EngineSpec.parse``)::
 
     spec      := engine [ "@" shards ] ( "+" flag )*
-    engine    := "fused" | "batched" | "legacy" | "sharded"
+    engine    := "fused" | "batched" | "legacy" | "sharded" | "llm"
     shards    := INT | INT "x" INT            # model [x data]
     flag      := "pipeline" | "semisync" | "kernel"
                | "sparse" ":" FLOAT | "migrate" ":" FLOAT
@@ -39,6 +39,12 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Optional
 
 MESHLESS_ENGINES = ("fused", "batched", "legacy")
+# "llm" is the mode-B LM plane (federated/llm.py): a StackedParamBank of
+# per-layer-stacked transformer params driven through the same
+# plan/executor split. It accepts +pipeline (cross-round input prefetch)
+# and the checkpoint fields; the fused-only capabilities (sharding,
+# sparse_eval, scenario, straggler, kernel) are rejected at validate().
+ENGINES = MESHLESS_ENGINES + ("llm",)
 
 
 @dataclass(frozen=True)
@@ -158,21 +164,26 @@ class EngineSpec:
         """Every cross-field rule the servers used to scatter across
         their constructors, checked up front. Returns self (chainable).
         """
-        if self.engine not in MESHLESS_ENGINES:
+        if self.engine not in ENGINES:
             raise ValueError(
-                f"engine must be one of {MESHLESS_ENGINES}: "
+                f"engine must be one of {ENGINES}: "
                 f"{self.engine!r}")
         if self.model_shards < 1 or self.data_shards < 1:
             raise ValueError(
                 f"shard counts must be >= 1: "
                 f"{self.model_shards}x{self.data_shards}")
         if self.engine != "fused":
-            for name, on in (("mesh sharding", self.sharded),
-                             ("pipeline=True", self.pipeline),
-                             ("sparse_eval", self.sparse_eval is not None),
-                             ("scenario churn", self.scenario is not None),
-                             ("a straggler model",
-                              self.straggler is not None)):
+            checks = [("mesh sharding", self.sharded),
+                      ("sparse_eval", self.sparse_eval is not None),
+                      ("scenario churn", self.scenario is not None),
+                      ("a straggler model", self.straggler is not None)]
+            if self.engine == "llm":
+                # the LM plane pipelines (input prefetch) but has no
+                # eval-matrix sparsity / churn / semi-sync machinery
+                checks.append(("use_agg_kernel", self.use_agg_kernel))
+            else:
+                checks.append(("pipeline=True", self.pipeline))
+            for name, on in checks:
                 if on:
                     raise ValueError(
                         f"{name} requires engine='fused', got "

@@ -49,7 +49,8 @@ from repro.federated.simulation import (bucket_size, make_eval,
                                         make_fused_apply, make_fused_eval,
                                         make_fused_finish,
                                         make_fused_round, make_group_eval,
-                                        make_group_train, make_local_train,
+                                        make_group_train, make_llm_eval,
+                                        make_llm_round, make_local_train,
                                         make_pair_eval, make_pair_train,
                                         make_sharded2d_apply,
                                         make_sharded2d_eval,
@@ -1643,3 +1644,157 @@ class FedAvgSharded2DExecutor(FedAvgFusedExecutor):
     def _dispatch_eval_only(self) -> Tuple[Any, Any]:
         return (self._eval2d(self._stacked, *self._dev["val"]),
                 self._eval2d(self._stacked, *self._dev["test"]))
+
+
+# -- mode-B LM executors (DESIGN.md §14) ----------------------------------
+
+class LLMExecutorBase(RoundExecutor):
+    """Shared scaffolding for the mode-B LM executors driven by
+    ``federated.llm.FedLLMTrainer``. Unlike the mode-A executors the
+    round's token batches are drawn host-side by the trainer (the LM
+    data plane has no DeviceDataBank), so the trainer hands them over
+    via :meth:`set_batches` before ``launch``. Train/eval steps come in
+    UNJITTED (``launch.steps.make_train_step`` / ``llm.make_acc_step``);
+    each executor owns its compiled form."""
+
+    def __init__(self, fed: FedCDConfig, registry: ModelRegistry,
+                 n_clients: int):
+        # deliberately NOT RoundExecutor.__init__ — there is no mode-A
+        # data plane to adopt
+        self.cfg = fed
+        self.registry = registry
+        self.data = None
+        self.databank = None
+        self.n_devices = n_clients
+        self._result: Optional[RoundResult] = None
+        self._batches = None
+        self._pending: Optional[RoundPlan] = None
+        self.round_losses: List[float] = []
+
+    def set_batches(self, tokens: np.ndarray, labels: np.ndarray,
+                    vt: np.ndarray, vl: np.ndarray) -> None:
+        """Hand this round's (train, val) token batches to the executor
+        (host arrays; uploaded once per round here)."""
+        self._batches = (jnp.asarray(tokens), jnp.asarray(labels),
+                         jnp.asarray(vt), jnp.asarray(vl))
+
+    def _train_sets(self, plan: RoundPlan
+                    ) -> Tuple[List[int], List[np.ndarray]]:
+        """Models that actually train this round + their per-client
+        weight rows: the plan's agg set minus models whose weight mass
+        is zero (scores can underflow to 0 for every holder — the
+        legacy loop's ``w.sum() <= 0`` skip, kept so both engines train
+        the identical set)."""
+        models, weights = [], []
+        for m in plan.agg_models:
+            w = self._holder_weights(plan, m)
+            if w.sum() <= 0:
+                continue
+            models.append(m)
+            weights.append(w)
+        return models, weights
+
+    def readback(self) -> RoundResult:
+        self._pending = None
+        result, self._result = self._result, None
+        return result
+
+    def collect(self, preferred: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError(
+            "the LM path has no test split / preferred-model collection")
+
+
+class LLMLegacyExecutor(LLMExecutorBase):
+    """The original per-model Python loop over dict-mode registry
+    storage — the LM plane's equivalence oracle (every model trains and
+    evals in its own dispatch)."""
+
+    def __init__(self, fed, registry, n_clients, train_fn, acc_fn):
+        super().__init__(fed, registry, n_clients)
+        self._train = jax.jit(train_fn)
+        self._acc = jax.jit(acc_fn)
+
+    def launch(self, plan: RoundPlan) -> None:
+        tokens, labels, vt, vl = self._batches
+        losses = []
+        for m, w in zip(*self._train_sets(plan)):
+            params, met = self._train(self.registry.params[m], tokens,
+                                      labels, jnp.asarray(w), None)
+            self.registry.params[m] = params
+            losses.append(float(met["loss"]))
+        self.round_losses = losses
+        accs = np.zeros((self.n_devices, self.cfg.max_models))
+        for m in plan.live:
+            accs[:, m] = np.asarray(
+                self._acc(self.registry.params[m], vt, vl))
+        self._result = RoundResult(accs)
+        self._pending = plan
+
+
+class FedLLMExecutor(LLMExecutorBase):
+    """The stacked LM engine: params live in a per-layer-stacked
+    ``StackedParamBank`` (model-row axis composed OUTSIDE the tensor
+    shardings — ``launch.sharding.lm_bank_shardings``) and the round is
+    ONE jitted donated dispatch: gather padded training rows, scan the
+    score-weighted train step over them, scatter back, scan per-client
+    eval over the padded live rows (``simulation.make_llm_round``).
+    The model axis is a pure batch axis, so the trajectory matches the
+    per-model loop exactly in discrete state (params to reduction
+    order — the equivalence tier pins it)."""
+
+    def __init__(self, fed, registry, n_clients, train_fn, acc_fn):
+        super().__init__(fed, registry, n_clients)
+        self._round = make_llm_round(train_fn, acc_fn)
+        self._eval = make_llm_eval(acc_fn)
+        # row schedules pad to a static bucket: a transformer round
+        # step is expensive to trace, and every distinct (train rows,
+        # live rows) pair is a fresh executable. Eval rows take a
+        # coarse floor (4) so live-count drift between deletions stops
+        # changing the shape key; train rows take the EXACT small
+        # count (floor 1) — a padding lane costs a full extra train
+        # step (e.g. 4/3 compute when 3 models train padded to 4),
+        # and trained counts revisit the same few values, so the key
+        # set stays ≤ max_models while bucket_size still coarsens
+        # counts past 8 (DESIGN.md §10/§14).
+        self._row_floor = 4
+        self._train_floor = 1
+
+    def launch(self, plan: RoundPlan) -> None:
+        tokens, labels, vt, vl = self._batches
+        bank = self.registry.params
+        models, weights = self._train_sets(plan)
+        eval_rows = pad_live_rows([bank.row_of[m] for m in plan.live],
+                                  self._row_floor)
+        if models:
+            rows = pad_live_rows([bank.row_of[m] for m in models],
+                                 self._train_floor)
+            # padding lanes repeat row 0 WITH row 0's weights: duplicate
+            # scatters write identical values, so padding is invisible
+            w = np.zeros((len(rows), self.n_devices), np.float32)
+            w[:len(models)] = np.stack(weights)
+            w[len(models):] = w[0]
+            new_tree, losses, mat = self._round(
+                bank.tree, rows, w, tokens, labels, vt, vl, eval_rows)
+            bank.swap(new_tree)
+            self.round_losses = [float(x)
+                                 for x in np.asarray(losses)[:len(models)]]
+        else:
+            mat = self._eval(bank.tree, eval_rows, vt, vl)
+            self.round_losses = []
+        mat = np.asarray(mat)
+        accs = np.zeros((self.n_devices, self.cfg.max_models))
+        for j, m in enumerate(plan.live):
+            accs[:, m] = mat[j]
+        self._result = RoundResult(accs)
+        self._pending = plan
+
+    def readback(self) -> RoundResult:
+        # the launch matrices have materialized: the tree retired by
+        # swap() (and any clone-write retirees from last round's
+        # lifecycle) can destruct without blocking the host
+        self.registry.params.release_retired()
+        return super().readback()
+
+    def quiesce(self) -> None:
+        self.registry.params.release_retired()

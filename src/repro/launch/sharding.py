@@ -177,6 +177,23 @@ def jnp_ndim(x: Any) -> int:
     return getattr(x, "ndim", jax.numpy.ndim(x))
 
 
+def lm_bank_shardings(cfg: ArchConfig, template: Any,
+                      mesh: jax.sharding.Mesh,
+                      policy: str = "train") -> Any:
+    """Pytree of NamedSharding for a per-layer-stacked LM bank
+    (DESIGN.md §14): each leaf's ``(max_models,) + leaf.shape`` array
+    keeps the model-row axis REPLICATED and composes the megatron
+    tensor specs from :func:`param_shardings` on the inner dims. The
+    small-fleet LM regime is the transpose of the FedCD bank layout
+    (:func:`bank_shardings` row-shards over ``model``): here a handful
+    of multi-GB transformers share the tensor-parallel axis, so the
+    row axis is a vmap batch dim, not a placement dim."""
+    inner = param_shardings(cfg, template, mesh, policy)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P(None, *s.spec)), inner,
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
 def data_row_sharding(mesh: jax.sharding.Mesh, ndim: int) -> NamedSharding:
     """Sharding for one device-data-bank leaf: the leading data-row axis
     over the mesh's ``data`` axis, everything else replicated (each

@@ -26,9 +26,10 @@ import argparse
 import json
 import os
 
-from repro.checkpoint import CheckpointManager, save_checkpoint, save_registry
+from repro.checkpoint import save_checkpoint, save_registry
 from repro.config import FedCDConfig
 from repro.configs import get_arch, reduced
+from repro.core.spec import EngineSpec
 from repro.federated.llm import FedLLMTrainer
 
 
@@ -46,6 +47,10 @@ def main() -> None:
     ap.add_argument("--max-models", type=int, default=8)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="llm",
+                    help="EngineSpec preset: 'llm' (stacked dispatch, "
+                         "default), 'llm+pipeline' (input prefetch), or "
+                         "'legacy' (per-model loop oracle)")
     ap.add_argument("--save-every", type=int, default=0, metavar="N",
                     help="snapshot full trainer state every N rounds "
                          "under <out>/ckpts (0 = off)")
@@ -64,22 +69,21 @@ def main() -> None:
         max_models=args.max_models, lr=args.lr, seed=args.seed,
         late_delete_round=max(args.rounds // 2, 8))
 
+    # checkpoint cadence rides the EngineSpec (the trainer saves/resumes
+    # internally — same elastic path as FedCDServer/FedAvgServer)
+    base = EngineSpec.parse(args.engine)
+    spec = EngineSpec(
+        engine=base.engine, pipeline=base.pipeline,
+        save_every=args.save_every,
+        checkpoint_dir=(os.path.join(args.out, "ckpts")
+                        if args.save_every else None),
+        resume_from=args.resume)
     trainer = FedLLMTrainer(arch, fed, args.clients, args.per_client,
-                            args.seq, args.archetypes, seed=args.seed)
+                            args.seq, args.archetypes, seed=args.seed,
+                            spec=spec)
     if args.resume:
-        start = trainer.restore(args.resume)
-        print(f"resumed from round {start} ({args.resume})")
-    mgr = (CheckpointManager(os.path.join(args.out, "ckpts"),
-                             args.save_every)
-           if args.save_every else None)
-    for t in range(len(trainer.metrics) + 1, args.rounds + 1):
-        m = trainer.run_round(t)
-        if t % 5 == 0:
-            print(f"[fedcd-llm] round {t:3d} loss={m.mean_loss:.3f} "
-                  f"live={m.live_models} acc={m.client_acc.mean():.3f}",
-                  flush=True)
-        if mgr is not None:
-            mgr.maybe_save(trainer, t)
+        print(f"resumed from round {len(trainer.metrics)} ({args.resume})")
+    trainer.run(args.rounds, log_every=5)
 
     os.makedirs(args.out, exist_ok=True)
     for m in trainer.registry.live_ids():
