@@ -1,0 +1,227 @@
+"""Serving gateway bench (DESIGN.md §15): grouped continuous batching
+vs the serial single-request path, chunked prefill vs the old
+token-at-a-time loop, and a train/serve interleave mode.
+
+Replays a Zipf-over-devices request trace against a trained FedCD LM
+population (4 live models) and reports p50/p99 TTFT (queue-relative, so
+the serial path's head-of-line blocking is visible), tokens/s, and
+batching efficiency. The acceptance bar: grouped decode ≥ 2x the serial
+path's tokens/s at 4 live models and 32 concurrent requests.
+
+Run directly or via ``python -m benchmarks.run --only serve``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+MAX_LEN = 64
+
+
+def _zipf_devices(n_dev: int, n_req: int, rng, a: float = 1.2):
+    """Zipf-over-devices: a few devices dominate the trace (their
+    cluster's model group stays hot), the tail trickles in."""
+    ranks = rng.permutation(n_dev)
+    p = 1.0 / (np.arange(1, n_dev + 1) ** a)
+    return ranks[rng.choice(n_dev, size=n_req, p=p / p.sum())]
+
+
+def _population(rounds: int):
+    from repro.config import ArchConfig, FedCDConfig
+    from repro.federated.llm import FedLLMTrainer
+
+    arch = ArchConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=64,
+                      param_dtype="float32", compute_dtype="float32")
+    # 4 archetypes + 3 milestones: the population settles at 4 live
+    # models (the regime the acceptance bar names); no late deletes so
+    # the timed trace serves a stable population
+    fed = FedCDConfig(n_devices=8, devices_per_round=6, score_window=3,
+                      milestones=(1, 2, 3), late_delete_round=10_000,
+                      max_models=8, lr=0.05, seed=0)
+    tr = FedLLMTrainer(arch, fed, 8, 2, 16, n_archetypes=4, seed=0)
+    tr.run(rounds)
+    return arch, tr
+
+
+def _serial(arch, tr, trace, prompts, max_new: int):
+    """The pre-gateway path: one request at a time, per-request bank-row
+    param gather, token-at-a-time prefill AND decode, host argmax."""
+    from repro.launch.steps import make_serve_step
+    from repro.models import transformer as tf
+    from repro.serve import RoutingTable
+
+    step = jax.jit(make_serve_step(arch))
+    rt = RoutingTable(tr.registry, lambda: tr.state)
+
+    def one(d, prompt):
+        params = tr.registry.params[rt.resolve(int(d))]
+        caches = tf.init_lm_caches(arch, 1, MAX_LEN)
+        logits = None
+        for t in range(prompt.size):
+            logits, caches = step(params, caches,
+                                  jnp.asarray([[prompt[t]]], jnp.int32))
+        toks = [int(np.argmax(np.asarray(logits)[0]))]
+        first_t = time.perf_counter()
+        for _ in range(max_new - 1):
+            logits, caches = step(params, caches,
+                                  jnp.asarray([[toks[-1]]], jnp.int32))
+            toks.append(int(np.argmax(np.asarray(logits)[0])))
+        return toks, first_t
+
+    one(trace[0], prompts[0])                       # compile warm-up
+    t0 = time.perf_counter()
+    ttfts, n_tok = [], 0
+    for d, p in zip(trace, prompts):
+        toks, first_t = one(d, p)
+        ttfts.append(first_t - t0)                  # queue-relative
+        n_tok += len(toks)
+    wall = time.perf_counter() - t0
+    return wall, n_tok, np.asarray(ttfts)
+
+
+def _grouped(arch, tr, trace, prompts, max_new: int, lanes: int,
+             chunk: int):
+    from repro.serve import ServeGateway
+
+    gw = ServeGateway(arch, tr.registry, lambda: tr.state,
+                      max_len=MAX_LEN, lanes=lanes, chunk=chunk)
+    for d, p in zip(trace, prompts):                # compile warm-up
+        gw.submit(int(d), p, max_new)
+    gw.drain()
+    t0 = time.perf_counter()
+    reqs = [gw.submit(int(d), p, max_new) for d, p in zip(trace, prompts)]
+    gw.drain()
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in reqs)
+    ttfts = np.asarray(sorted(r.first_token_t - t0 for r in reqs))
+    effs = [g.batching_efficiency() for g in gw.groups.values()
+            if g.steps]
+    return gw, wall, n_tok, ttfts, float(np.mean(effs))
+
+
+def _prefill_speed(arch, tr, rng, P: int = 48, chunk: int = 16,
+                   reps: int = 5):
+    """Chunked jitted prefill vs the old repeated-decode prompt loop."""
+    from repro.launch.steps import make_prefill_step, make_serve_step
+    from repro.models import transformer as tf
+
+    params = tr.registry.params[tr.registry.live_ids()[0]]
+    prefill = jax.jit(make_prefill_step(arch))
+    step = jax.jit(make_serve_step(arch))
+    prompt = rng.integers(0, arch.vocab_size, P).astype(np.int32)
+
+    def chunked():
+        caches = tf.init_lm_caches(arch, 1, MAX_LEN)
+        logits = None
+        for s in range(0, P, chunk):
+            logits, caches = prefill(
+                params, caches, jnp.asarray(prompt[None, s:s + chunk]),
+                chunk)
+        jax.block_until_ready(logits)
+
+    def token_loop():
+        caches = tf.init_lm_caches(arch, 1, MAX_LEN)
+        logits = None
+        for t in range(P):
+            logits, caches = step(params, caches,
+                                  jnp.asarray([[prompt[t]]], jnp.int32))
+        jax.block_until_ready(logits)
+
+    out = {}
+    for name, fn in (("chunked", chunked), ("token_loop", token_loop)):
+        fn()                                        # compile warm-up
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            walls.append(time.perf_counter() - t0)
+        out[name] = float(np.median(walls))
+    return out
+
+
+def _interleave(tr, gw, start_round: int, n_rounds: int, n_req: int,
+                max_new: int, rng):
+    """Serve between training rounds: each round adopts the trainer's
+    new bank via ``sync`` (score-drift re-route + pool reconcile), then
+    drains a fresh trace slice."""
+    n_tok, serve_wall, rerouted = 0, 0.0, 0
+    t_all = time.perf_counter()
+    for i in range(n_rounds):
+        tr.run_round(start_round + 1 + i)
+        out = gw.sync()
+        rerouted += len(out["rerouted"])
+        trace = _zipf_devices(8, n_req, rng)
+        t0 = time.perf_counter()
+        reqs = [gw.submit(int(d), rng.integers(0, 64, 12), max_new)
+                for d in trace]
+        gw.drain()
+        serve_wall += time.perf_counter() - t0
+        n_tok += sum(len(r.tokens) for r in reqs)
+    wall = time.perf_counter() - t_all
+    return wall, serve_wall, n_tok, rerouted
+
+
+def run(quick: bool = False):
+    rounds = 6 if quick else 10
+    n_req = 32
+    max_new = 8 if quick else 16
+    lanes, chunk = 8, 8
+    rng = np.random.default_rng(0)
+
+    arch, tr = _population(rounds)
+    live = len(tr.registry.live_ids())
+    trace = _zipf_devices(8, n_req, rng)
+    prompts = [rng.integers(0, arch.vocab_size, 12).astype(np.int32)
+               for _ in range(n_req)]
+
+    s_wall, s_tok, s_ttft = _serial(arch, tr, trace, prompts, max_new)
+    gw, g_wall, g_tok, g_ttft, eff = _grouped(arch, tr, trace, prompts,
+                                              max_new, lanes, chunk)
+    speedup = (g_tok / g_wall) / (s_tok / s_wall)
+    pre = _prefill_speed(arch, tr, rng)
+    i_wall, i_serve, i_tok, i_rerouted = _interleave(
+        tr, gw, rounds, 2 if quick else 3, 8, max_new, rng)
+    st = gw.stats()
+
+    def pct(x, q):
+        return float(np.percentile(x, q)) * 1e3
+
+    return [
+        C.csv_line("serve_serial", s_wall / s_tok * 1e6,
+                   f"tokens_s={s_tok / s_wall:.1f};"
+                   f"p50_ttft_ms={pct(s_ttft, 50):.1f};"
+                   f"p99_ttft_ms={pct(s_ttft, 99):.1f};"
+                   f"reqs={n_req};live={live}"),
+        C.csv_line("serve_grouped", g_wall / g_tok * 1e6,
+                   f"serial_x={speedup:.2f};"
+                   f"tokens_s={g_tok / g_wall:.1f};"
+                   f"p50_ttft_ms={pct(g_ttft, 50):.1f};"
+                   f"p99_ttft_ms={pct(g_ttft, 99):.1f};"
+                   f"batch_eff={eff:.2f};live={live};"
+                   f"lanes={lanes};reqs={n_req}"),
+        C.csv_line("serve_prefill_chunked", pre["chunked"] * 1e6,
+                   f"tokenloop_x={pre['token_loop'] / pre['chunked']:.2f};"
+                   f"prompt=48;chunk=16"),
+        C.csv_line("serve_interleave", i_wall * 1e6,
+                   f"serve_tokens_s={i_tok / i_serve:.1f};"
+                   f"serve_frac={i_serve / i_wall:.2f};"
+                   f"rerouted={i_rerouted};"
+                   f"rebuilds={st['routing']['rebuilds']}"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(quick=args.quick):
+        print(line)

@@ -54,7 +54,7 @@ def main() -> None:
                             bench_hierarchical, bench_hypergeometric,
                             bench_kernels, bench_llm,
                             bench_model_dynamics, bench_quantization,
-                            bench_wallclock)
+                            bench_serve, bench_wallclock)
 
     long_rounds = 16 if args.fast else 40
     short_rounds = 10 if args.fast else 25
@@ -90,6 +90,7 @@ def main() -> None:
             8 if args.fast else 16, args.model, quick=args.fast),
         "llm": lambda: bench_llm.run(8 if args.fast else 12,
                                      quick=args.fast),
+        "serve": lambda: bench_serve.run(quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),

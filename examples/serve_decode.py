@@ -1,5 +1,6 @@
-"""Serving example: batched decode with KV / recurrent-state caches for
-three architecture families, incl. a sliding-window ring buffer.
+"""Serving example: chunked prefill + batched decode with KV /
+recurrent-state caches for three architecture families, incl. a
+sliding-window ring buffer.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,18 +10,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
-from repro.launch.steps import make_serve_step
+from repro.launch.serve import chunked_prefill
+from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import transformer as tf
 
 
-def serve(name: str, window: int = 0, batch: int = 2, steps: int = 16):
+def serve(name: str, window: int = 0, batch: int = 2, steps: int = 16,
+          prompt: int = 12):
     cfg = reduced(get_arch(name))
     key = jax.random.PRNGKey(0)
     params = tf.init_lm(cfg, key)
-    caches = tf.init_lm_caches(cfg, batch, max_len=steps + 8, window=window)
+    caches = tf.init_lm_caches(cfg, batch, max_len=prompt + steps + 8,
+                               window=window)
+    prefill = jax.jit(make_prefill_step(cfg, window=window),
+                      donate_argnums=(1,))
     step = jax.jit(make_serve_step(cfg, window=window), donate_argnums=(1,))
-    tok = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
-    logits, caches = step(params, caches, tok)     # compile
+    prompts = jax.random.randint(key, (batch, prompt), 0, cfg.vocab_size)
+    chunk = min(8, window) if window else 8
+    logits, caches = chunked_prefill(prefill, params, caches, prompts, chunk)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    logits, caches = step(params, caches, tok)     # compile decode
     t0 = time.time()
     for _ in range(steps):
         logits, caches = step(params, caches, tok)

@@ -45,6 +45,10 @@ SPLITS = ("train", "val", "test")
 
 
 class DeviceDataBank:
+    #: EWMA decay for observed per-data-shard pair load (mirrors
+    #: ``StackedParamBank.LOAD_DECAY`` — one round carries half weight).
+    LOAD_DECAY = 0.5
+
     def __init__(self, data: Dict[str, Tuple[np.ndarray, np.ndarray]],
                  n_cap: Optional[int] = None, id_cap: Optional[int] = None,
                  mesh: Any = None):
@@ -91,6 +95,29 @@ class DeviceDataBank:
         self._present: set = set(range(n0))
         self._next_id = n0
         self.version = 0
+        self.load_ewma = np.zeros(max(self.n_shards, 1))
+
+    def note_pair_load(self, per_shard_pairs: Any) -> None:
+        """Fold one round's observed per-data-shard work-pair counts into
+        the placement EWMA (the 2-D executor calls this once per
+        dispatched round, the way it feeds the model bank). Fully-decayed
+        residue snaps to zero so long-idle shards tie and the
+        present-count fallback decides again."""
+        self.load_ewma = (self.LOAD_DECAY * self.load_ewma
+                          + (1.0 - self.LOAD_DECAY)
+                          * np.asarray(per_shard_pairs, float))
+        self.load_ewma[self.load_ewma < 1e-6] = 0.0
+
+    def _hotness(self, s: int) -> int:
+        """Shard pair load in units of the MEAN load, rounded — same
+        quantization as ``StackedParamBank._hotness``: balanced traffic
+        ties at 1 and falls through to the present-count fallback, so
+        participation noise cannot reshuffle placement; only genuinely
+        hot (≥~1.5x mean) or idle shards separate."""
+        mean = float(self.load_ewma.mean())
+        if mean <= 1e-9:
+            return 0
+        return round(float(self.load_ewma[s]) / mean)
 
     # -- introspection ------------------------------------------------------
     def __contains__(self, device_id: int) -> bool:
@@ -128,9 +155,11 @@ class DeviceDataBank:
 
     # -- placement ----------------------------------------------------------
     def _alloc_row(self) -> int:
-        """Least-loaded data shard (fewest present rows, ties low), then
-        the lowest free row inside it — freed slots are REUSED (class
-        docstring)."""
+        """Churn-aware least-loaded data shard: observed pair-load EWMA
+        first (in mean-load units, so balanced traffic ties — see
+        :meth:`_hotness`), present-row count as the tiebreak (ties low),
+        then the lowest free row inside the winning shard — freed slots
+        are REUSED (class docstring)."""
         used = {self.row_of[d] for d in self._present}
         best = None
         for s in range(self.n_shards):
@@ -139,7 +168,7 @@ class DeviceDataBank:
             free = [r for r in block if r not in used]
             if not free:
                 continue
-            key = (len(block) - len(free), s)
+            key = (self._hotness(s), len(block) - len(free), s)
             if best is None or key < best[0]:
                 best = (key, free[0])
         if best is None:
@@ -205,6 +234,8 @@ class DeviceDataBank:
         self._present = set()
         self.row_of = dict(row_of) if row_of is not None else {}
         self._next_id = next_id
+        # the observed loads described the pre-restore placement
+        self.load_ewma = np.zeros(max(self.n_shards, 1))
         host = {k: (np.array(xs), np.array(ys))       # writable copies
                 for k, (xs, ys) in self.splits.items()}
         for d in sorted(devices):

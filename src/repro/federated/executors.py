@@ -1139,6 +1139,17 @@ class Sharded2DExecutor(ShardedExecutor):
     def _n_cells(self) -> int:
         return self._n_shards * self._n_dshards
 
+    def _note_load(self, plan: RoundPlan) -> None:
+        # model-axis load -> param bank (inherited), plus the DATA-axis
+        # twin: per-data-shard pair counts feed the data bank's
+        # churn-aware row placement, so joining devices land away from
+        # shards whose resident devices concentrate the round's pairs
+        super()._note_load(plan)
+        counts = np.zeros(self._n_dshards)
+        for d in plan.pair_device:
+            counts[self.databank.shard_of(d)] += 1
+        self.databank.note_pair_load(counts)
+
     def _batch_args(self, pair_model: List[int],
                     pair_device: List[int], perms: np.ndarray
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,

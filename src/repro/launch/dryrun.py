@@ -81,15 +81,28 @@ def build_case(cfg: ArchConfig, shape: ShapeConfig, mesh,
         return fn, args, shards, (0,)
 
     if shape.kind == "prefill":
-        step = steps_mod.make_prefill_step(cfg, mesh, dp, hints=hints)
-        args = [params_abs, specs["tokens"]]
-        shards = [pshard, batch_spec(mesh, shape.global_batch, 2)]
         if cfg.family == "audio":
-            args.append(specs["frames"])
-            shards.append(batch_spec(mesh, shape.global_batch, 3))
-        def fn(params, tokens, frames=None):
-            return step(params, tokens, frames)
-        return fn, args, shards, ()
+            # no incremental encdec prefill: full-sequence forward
+            def fn(params, tokens, frames):
+                logits, _ = ed.encdec_forward(cfg, params, frames, tokens)
+                return logits[:, -1, :]
+            args = [params_abs, specs["tokens"], specs["frames"]]
+            shards = [pshard, batch_spec(mesh, shape.global_batch, 2),
+                      batch_spec(mesh, shape.global_batch, 3)]
+            return fn, args, shards, ()
+        step = steps_mod.make_prefill_step(cfg, window, mesh, dp, hints=hints)
+        caches_abs = abstract_caches(cfg, shape, window, params_abs)
+        cshard = auto_shardings(caches_abs, mesh)
+        # one chunk of the chunked prefill; a ring window caps chunk size
+        S = min(shape.seq_len, window) if window else shape.seq_len
+        tok_abs = jax.ShapeDtypeStruct((shape.global_batch, S), jnp.int32)
+        nv_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        args = [params_abs, caches_abs, tok_abs, nv_abs]
+        shards = [pshard, cshard, batch_spec(mesh, shape.global_batch, 2),
+                  replicated(mesh, 0)]
+        def fn(params, caches, tokens, n_valid):
+            return step(params, caches, tokens, n_valid)
+        return fn, args, shards, (1,)
 
     # decode
     step = steps_mod.make_serve_step(cfg, window, mesh, dp, hints=hints)

@@ -1,8 +1,13 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens
-per request against KV/state caches (ring-buffer window optional).
+"""Batched serving driver: chunked-prefill a prompt batch in one jitted
+dispatch per chunk, then decode N tokens per request against KV/state
+caches (ring-buffer window optional).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
       --batch 4 --prompt-len 64 --decode 32
+
+Pass ``--no-reduced`` to run the full-size architecture. The multi-model
+request path (routing, group-by-model continuous batching) lives in
+``repro.serve.gateway``.
 """
 from __future__ import annotations
 
@@ -14,17 +19,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import transformer as tf
+
+
+def chunked_prefill(prefill, params, caches, prompts, chunk: int):
+    """Drive a ``make_prefill_step`` step over a (B, P) prompt batch in
+    fixed-shape chunks (ragged tail padded + masked via n_valid).
+    Returns (last-token logits (B, V), caches)."""
+    B, P = prompts.shape
+    logits = None
+    for s in range(0, P, chunk):
+        part = prompts[:, s:s + chunk]
+        nv = part.shape[1]
+        if nv < chunk:
+            part = jnp.pad(part, ((0, 0), (0, chunk - nv)))
+        logits, caches = prefill(params, caches, part,
+                                 jnp.asarray(nv, jnp.int32))
+    return logits, caches
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrink the architecture (--no-reduced for full)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk length (one dispatch per chunk)")
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -32,21 +57,23 @@ def main() -> None:
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    assert cfg.family != "audio", "use whisper driver paths in examples/"
+    if cfg.family == "audio":
+        raise ValueError("use whisper driver paths in examples/")
+    chunk = min(args.chunk, args.window) if args.window else args.chunk
     key = jax.random.PRNGKey(args.seed)
     params = tf.init_lm(cfg, key)
     max_len = args.prompt_len + args.decode
     caches = tf.init_lm_caches(cfg, args.batch, max_len, window=args.window)
+    prefill = jax.jit(make_prefill_step(cfg, window=args.window),
+                      donate_argnums=(1,))
     step = jax.jit(make_serve_step(cfg, window=args.window),
                    donate_argnums=(1,))
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    # prefill via repeated decode (single-host path; production prefill is
-    # the chunked attention forward lowered in dryrun.py)
     t0 = time.time()
-    for t in range(args.prompt_len):
-        logits, caches = step(params, caches, prompts[:, t:t + 1])
+    logits, caches = chunked_prefill(prefill, params, caches, prompts, chunk)
+    jax.block_until_ready(logits)
     prefill_s = time.time() - t0
 
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
@@ -60,7 +87,7 @@ def main() -> None:
     decode_s = time.time() - t0
     toks = args.batch * args.decode
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"decode={args.decode} window={args.window}")
+          f"decode={args.decode} chunk={chunk} window={args.window}")
     print(f"prefill: {prefill_s:.2f}s  decode: {decode_s:.2f}s "
           f"({toks / max(decode_s, 1e-9):.1f} tok/s)")
     seq = jnp.concatenate(out, axis=1)

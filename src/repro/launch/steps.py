@@ -151,17 +151,32 @@ def make_eval_step(cfg: ArchConfig, n_clients: int, mesh=None,
     return step
 
 
-def make_prefill_step(cfg: ArchConfig, mesh=None,
+def make_prefill_step(cfg: ArchConfig, window: int = 0, mesh=None,
                       dp_axes: Tuple[str, ...] = ("data",),
                       hints: bool = False) -> Callable:
-    def step(params, tokens, frames=None):
+    """Chunked cache-filling prefill: ONE jitted dispatch appends a whole
+    token chunk to every layer cache (vs. the old token-at-a-time Python
+    loop — one host sync per prompt token).
+
+    step(params, caches, tokens (B,S), n_valid ()) ->
+        (next-token logits (B,V) at the last valid position, caches)
+
+    Callers loop fixed-shape chunks over the prompt, padding the ragged
+    tail and passing ``n_valid`` so one compilation serves any prompt
+    length. With a ring-buffer window the chunk must satisfy S <= window.
+    """
+    if cfg.family == "audio":
+        raise ValueError("audio uses the encdec driver paths in examples/")
+
+    def step(params, caches, tokens, n_valid):
         with sharding_hints(mesh if hints else None, dp_axes):
-            if cfg.family == "audio":
-                logits, _ = ed.encdec_forward(cfg, params, frames, tokens)
-            else:
-                logits, _, _ = tf.lm_forward(cfg, params, tokens, mesh=mesh,
-                                             dp_axes=dp_axes)
-            return logits[:, -1, :]        # next-token logits
+            nv = jnp.asarray(n_valid, jnp.int32)
+            logits, caches = tf.lm_prefill(cfg, params, tokens, caches,
+                                           window=window, n_valid=nv,
+                                           mesh=mesh, dp_axes=dp_axes)
+            last = jax.lax.dynamic_slice_in_dim(logits, nv - 1, 1, axis=1)
+            return last[:, 0, :], caches
+
     return step
 
 

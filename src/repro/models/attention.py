@@ -177,6 +177,58 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
     }
 
 
+def attention_prefill(params: Params, cfg: ArchConfig, x: jax.Array,
+                      cache: Params, window: int = 0,
+                      n_valid: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Params]:
+    """Multi-token cache-filling prefill: append ``S`` tokens to the
+    cache in ONE attended forward. x (B,S,d).
+
+    The chunk attends to the concatenation [cache slots, in-chunk keys]
+    rather than scatter-then-attend: with a ring buffer a scatter of the
+    chunk would clobber up-to-S-1 history slots that the chunk's EARLY
+    queries are still entitled to see (slot ``p % C`` of a late in-chunk
+    token overwrites position ``p - C``, which is inside an early
+    query's window). Attending first and scattering after keeps every
+    query's view exact; requires ``S <= C`` so in-chunk slots are
+    distinct.
+
+    ``n_valid`` (traced scalar) marks a right-padded chunk: tokens at
+    offsets ``>= n_valid`` neither enter any query's view nor get
+    written back (their scatter lanes are dropped), and the cache index
+    advances by ``n_valid`` only — so a padded final chunk leaves the
+    cache exactly as an unpadded one would."""
+    B, S, _ = x.shape
+    idx = cache["index"]
+    offs = jnp.arange(S, dtype=jnp.int32)
+    positions = idx + offs
+    real = offs < (jnp.asarray(n_valid, jnp.int32) if n_valid is not None
+                   else jnp.asarray(S, jnp.int32))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    C = cache["k"].shape[1]
+    kv_pos = jnp.concatenate([cache["pos"],
+                              jnp.where(real, positions, -1)])
+    scores = _gqa_scores(q, jnp.concatenate([cache["k"], k], axis=1))
+    valid = (kv_pos[None, :] >= 0) & (kv_pos[None, :] <= positions[:, None])
+    if window:
+        valid &= kv_pos[None, :] > positions[:, None] - window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, jnp.concatenate([cache["v"], v], axis=1))
+    out = out.astype(x.dtype)
+    H, hd = out.shape[2], out.shape[3]
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), params["wo"])
+    slots = positions % C if window else positions
+    slots = jnp.where(real, slots, C)        # padded lanes: dropped
+    knew = cache["k"].at[:, slots].set(k, mode="drop")
+    vnew = cache["v"].at[:, slots].set(v, mode="drop")
+    pnew = cache["pos"].at[slots].set(positions, mode="drop")
+    n_adv = (jnp.asarray(n_valid, jnp.int32) if n_valid is not None
+             else jnp.asarray(S, jnp.int32))
+    new_cache = {"k": knew, "v": vnew, "pos": pnew, "index": idx + n_adv}
+    return y, new_cache
+
+
 def attention_decode(params: Params, cfg: ArchConfig, x: jax.Array,
                      cache: Params, window: int = 0) -> Tuple[jax.Array, Params]:
     """One-token decode. x (B,1,d); cache as from ``init_kv_cache``."""

@@ -103,6 +103,63 @@ def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
     }
 
 
+def mla_prefill(params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
+                window: int = 0,
+                n_valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+    """Absorbed multi-token cache-filling prefill. x (B,S,d).
+
+    Same attend-to-[cache, chunk]-then-scatter structure as
+    ``attention_prefill`` (see its docstring for why scatter-then-attend
+    is wrong under a ring buffer), in the absorbed latent form: scores
+    and values go through ``c_kv`` so the chunk costs one latent GEMM,
+    not a decompressed K/V materialization."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    idx = cache["index"]
+    offs = jnp.arange(S, dtype=jnp.int32)
+    positions = idx + offs
+    real = offs < (jnp.asarray(n_valid, jnp.int32) if n_valid is not None
+                   else jnp.asarray(S, jnp.int32))
+    q_nope, q_rope = _queries(params, cfg, x, positions)      # (B,S,H,·)
+    c_kv, k_rope = _latents(params, cfg, x, positions)        # (B,S,r),(B,S,1,e)
+    C = cache["c_kv"].shape[1]
+    ckv_all = jnp.concatenate([cache["c_kv"], c_kv], axis=1)
+    krope_all = jnp.concatenate([cache["k_rope"], k_rope[:, :, 0, :]], axis=1)
+    pos_all = jnp.concatenate([cache["pos"],
+                               jnp.where(real, positions, -1)])
+
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
+    scale = 1.0 / jnp.sqrt(float(m.qk_nope_dim + m.qk_rope_dim))
+    s_nope = jnp.einsum("bshr,btr->bhst", q_eff, ckv_all,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshe,bte->bhst", q_rope, krope_all,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale                        # (B,H,S,C+S)
+    valid = (pos_all[None, :] >= 0) & (pos_all[None, :] <= positions[:, None])
+    if window:
+        valid &= pos_all[None, :] > positions[:, None] - window
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhst,btr->bshr", probs,
+                     ckv_all.astype(jnp.float32)).astype(x.dtype)
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", lat, wv_b)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * m.v_head_dim),
+                   params["wo"])
+    slots = positions % C if window else positions
+    slots = jnp.where(real, slots, C)        # padded lanes: dropped
+    ckv_new = cache["c_kv"].at[:, slots].set(c_kv, mode="drop")
+    krope_new = cache["k_rope"].at[:, slots].set(k_rope[:, :, 0, :],
+                                                 mode="drop")
+    pos_new = cache["pos"].at[slots].set(positions, mode="drop")
+    n_adv = (jnp.asarray(n_valid, jnp.int32) if n_valid is not None
+             else jnp.asarray(S, jnp.int32))
+    return y, {"c_kv": ckv_new, "k_rope": krope_new, "pos": pos_new,
+               "index": idx + n_adv}
+
+
 def mla_decode(params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
                window: int = 0) -> Tuple[jax.Array, Params]:
     """Absorbed one-token decode. x (B,1,d)."""

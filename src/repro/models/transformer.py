@@ -152,6 +152,45 @@ def _decode_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
     return x + y, cache
 
 
+def _prefill_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
+                   cache: Params, window: int, n_valid,
+                   mesh: Optional[jax.sharding.Mesh],
+                   dp_axes: Tuple[str, ...]) -> Tuple[jax.Array, Params]:
+    """Cache-filling chunk forward: append S tokens in one pass. x (B,S,d)."""
+    if kind in (C.ATTN_MLP, C.ATTN_MOE, C.MLA_MLP, C.MLA_MOE):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        if kind in (C.MLA_MLP, C.MLA_MOE):
+            a, cache = mla_mod.mla_prefill(params["attn"], cfg, h, cache,
+                                           window, n_valid)
+        else:
+            a, cache = attn.attention_prefill(params["attn"], cfg, h, cache,
+                                              window, n_valid)
+        x = x + a
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if kind in (C.ATTN_MOE, C.MLA_MOE):
+            f, _ = moe_mod.apply_moe(params["moe"], cfg, h, mesh, dp_axes)
+        else:
+            f = apply_mlp(params["mlp"], h)
+        return x + f, cache
+    # Recurrent kinds: one-token decode scanned over time inside the same
+    # dispatch; state updates gated per-timestep so padded tail tokens of
+    # the final chunk never advance the recurrence.
+    S = x.shape[1]
+    nv = (jnp.asarray(n_valid, jnp.int32) if n_valid is not None
+          else jnp.asarray(S, jnp.int32))
+
+    def tstep(c, xs):
+        xt, t = xs
+        y, nc = _decode_block(params, cfg, kind, xt[:, None, :], c, window,
+                              mesh, dp_axes)
+        nc = jax.tree.map(lambda new, old: jnp.where(t < nv, new, old), nc, c)
+        return nc, y[:, 0]
+
+    cache, ys = jax.lax.scan(
+        tstep, cache, (jnp.swapaxes(x, 0, 1), jnp.arange(S, dtype=jnp.int32)))
+    return jnp.swapaxes(ys, 0, 1), cache
+
+
 # ---------------------------------------------------------------------------
 # Segments (runs of identical layer kind -> one lax.scan each)
 # ---------------------------------------------------------------------------
@@ -199,7 +238,8 @@ def _shared_block_params(shared: Params, lora: Params) -> Params:
 
 
 def _apply_shared_block(p: Params, cfg: ArchConfig, x: jax.Array,
-                        x0: jax.Array, positions, cache=None, window=0):
+                        x0: jax.Array, positions, cache=None, window=0,
+                        prefill=False, n_valid=None):
     """Zamba2 shared block: concat(hidden, embeds) -> proj -> attn+mlp."""
     hcat = jnp.concatenate([x, x0], axis=-1)
     h = jnp.einsum("bse,ed->bsd", hcat, p["w_concat"])
@@ -207,6 +247,9 @@ def _apply_shared_block(p: Params, cfg: ArchConfig, x: jax.Array,
     if cache is None:
         a = attn.attention_forward(p["attn"], cfg, hn, positions)
         new_cache = None
+    elif prefill:
+        a, new_cache = attn.attention_prefill(p["attn"], cfg, hn, cache,
+                                              window, n_valid)
     else:
         a, new_cache = attn.attention_decode(p["attn"], cfg, hn, cache, window)
     h = h + a
@@ -448,6 +491,75 @@ def lm_decode(cfg: ArchConfig, params: Params, tokens: jax.Array,
             lp, lc = xs
             y, nc = _decode_block(lp, cfg, kind, carry, lc, window, mesh,
                                   dp_axes)
+            return y, nc
+        x, nc = jax.lax.scan(body, x, (stacked, cache))
+        new_list.append(nc)
+    return _logits(cfg, params, x), new_list
+
+
+def lm_prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
+               caches: Any, window: int = 0,
+               n_valid: Optional[jax.Array] = None,
+               embeds: Optional[jax.Array] = None,
+               mesh: Optional[jax.sharding.Mesh] = None,
+               dp_axes: Tuple[str, ...] = ("data",)) -> Tuple[jax.Array, Any]:
+    """Chunked cache-filling prefill: one dispatch appends ``S`` tokens to
+    every layer cache. tokens (B,S) -> (logits (B,S,V) fp32, caches).
+
+    ``n_valid`` (traced scalar) marks how many leading tokens of a padded
+    final chunk are real: attention lanes past it are dropped from the
+    scatter and recurrent state updates are gated off, so the caller can
+    loop fixed-shape chunks without recompiling on the ragged tail."""
+    x = embed(params["embed"], tokens) if embeds is None else embeds
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "hybrid":
+        x0 = x
+
+        def site_body(carry, xs):
+            y = carry
+            group, lora, gcache, scache = xs
+            def inner(c, xs2):
+                lp, lc = xs2
+                y2, nc = _prefill_block(lp, cfg, C.MAMBA2, c, lc, window,
+                                        n_valid, mesh, dp_axes)
+                return y2, nc
+            y, ncg = jax.lax.scan(inner, y, (group, gcache))
+            sp = (_shared_block_params(params["shared"], lora)
+                  if lora is not None else params["shared"])
+            y, ncs = _apply_shared_block(sp, cfg, y, x0, None, cache=scache,
+                                         window=window or cfg.sliding_window,
+                                         prefill=True, n_valid=n_valid)
+            return y, (ncg, ncs)
+
+        lora = params.get("lora")
+        if lora is None:
+            x, (ncg, ncs) = jax.lax.scan(
+                lambda c, xs: site_body(c, (xs[0], None, xs[1], xs[2])),
+                x, (params["mamba_groups"], caches["groups"], caches["shared"]))
+        else:
+            x, (ncg, ncs) = jax.lax.scan(
+                site_body, x,
+                (params["mamba_groups"], lora, caches["groups"],
+                 caches["shared"]))
+        new_caches: Dict[str, Any] = {"groups": ncg, "shared": ncs}
+        if "tail" in caches:
+            def inner3(c, xs2):
+                lp, lc = xs2
+                y2, nc = _prefill_block(lp, cfg, C.MAMBA2, c, lc, window,
+                                        n_valid, mesh, dp_axes)
+                return y2, nc
+            x, nct = jax.lax.scan(inner3, x, (params["mamba_tail"],
+                                              caches["tail"]))
+            new_caches["tail"] = nct
+        return _logits(cfg, params, x), new_caches
+
+    new_list = []
+    for stacked, cache, (kind, _n) in zip(params["segments"], caches,
+                                          segments(cfg)):
+        def body(carry, xs, kind=kind):
+            lp, lc = xs
+            y, nc = _prefill_block(lp, cfg, kind, carry, lc, window, n_valid,
+                                   mesh, dp_axes)
             return y, nc
         x, nc = jax.lax.scan(body, x, (stacked, cache))
         new_list.append(nc)

@@ -1,0 +1,9 @@
+"""Personalized inference data plane (DESIGN.md §15): route requests to
+each device's preferred model, batch same-model requests into one
+decode dispatch, pool KV caches per live model."""
+from repro.serve.batcher import ModelGroup, Request
+from repro.serve.gateway import RequestRejected, RoutingTable, ServeGateway
+from repro.serve.kv_pool import KVPool, KVPoolManager
+
+__all__ = ["ModelGroup", "Request", "RequestRejected", "RoutingTable",
+           "ServeGateway", "KVPool", "KVPoolManager"]

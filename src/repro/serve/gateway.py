@@ -1,0 +1,354 @@
+"""Personalized serving gateway (DESIGN.md §15): route each device's
+request to its cluster's preferred model, decode same-model requests as
+ONE grouped dispatch against the device-resident bank row, back every
+live model with a per-model KV pool.
+
+Three pieces:
+
+* :class:`RoutingTable` — device → preferred-model map derived from the
+  score state (the same ``argmax(where(active, c, -1))`` the executors'
+  test-row prediction serves), cached and invalidated on the
+  ``(bank.version, live_ids)`` epoch so clone/delete/migrate events
+  re-route correctly. The bank version counter alone is NOT enough:
+  deletions don't bump it (``pop`` is a mask flip — the pipelined
+  executors REPAIR deletions rather than invalidate, and tests pin
+  ``invalidated == 0`` on extinction rounds), so liveness joins the
+  epoch explicitly.
+* :class:`ServeGateway` — admission (chunked prefill at batch 1 into a
+  fresh lane cache, one scatter to insert the lane), steady state (one
+  vmapped decode dispatch per model group per token, lanes share the
+  bank row via an IN-JIT row read — no per-request param gather), and
+  sampling fused into both dispatches (argmax / top-k) so the host sees
+  one (lanes,) token readback per group per step.
+* per-model KV pools (``serve.kv_pool``) allocated lazily on first
+  routed request, released on delete, pre-warmed for clones via the
+  registry genealogy; a released pool's in-flight requests re-route and
+  re-prefill their full context on the successor model.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.core.registry import StackedParamBank
+from repro.core.scores import normalized_scores
+from repro.models import transformer as tf
+from repro.serve.batcher import ModelGroup, Request
+from repro.serve.kv_pool import KVPoolManager
+
+
+class RequestRejected(Exception):
+    """The gateway cannot serve this request (unknown/departed device,
+    no live preferred model, or capacity exceeded)."""
+
+
+class RoutingTable:
+    """Cached device → preferred-model routing (module docstring).
+
+    ``state_fn`` returns the live :class:`~repro.core.scores.ScoreState`;
+    ``present_fn(device) -> bool`` (optional) gates departed devices.
+    """
+
+    def __init__(self, registry: Any, state_fn: Callable[[], Any],
+                 present_fn: Optional[Callable[[int], bool]] = None):
+        self.registry = registry
+        self.state_fn = state_fn
+        self.present_fn = present_fn
+        self._table: Optional[np.ndarray] = None
+        self._epoch: Optional[Tuple] = None
+        self.hits = 0
+        self.rebuilds = 0
+        self.invalidations = 0
+
+    def epoch(self) -> Tuple:
+        """(bank row-write version, live model ids): changes on clone
+        (row write), migrate (row move), restore, AND delete (liveness),
+        covering every event that can re-route a device."""
+        version = getattr(self.registry.params, "version", None)
+        return (version, tuple(self.registry.live_ids()))
+
+    def resolve(self, device: int) -> int:
+        """The model id serving ``device``, re-deriving the table when
+        the epoch moved. Raises :class:`RequestRejected` for departed
+        devices and devices with no live active model."""
+        if self.present_fn is not None and not self.present_fn(device):
+            raise RequestRejected(f"device {device} is not present")
+        ep = self.epoch()
+        if self._table is None or ep != self._epoch:
+            if self._table is not None:
+                self.invalidations += 1
+            self._rebuild(ep)
+        else:
+            self.hits += 1
+        if not 0 <= device < len(self._table):
+            raise RequestRejected(f"unknown device id {device}")
+        m = int(self._table[device])
+        if m < 0:
+            raise RequestRejected(
+                f"device {device} holds no live active model")
+        return m
+
+    def invalidate(self) -> None:
+        """Drop the cached table. The epoch only tracks lifecycle events
+        (clone/delete/migrate); call this when the SCORES moved under an
+        unchanged population (e.g. between trainer rounds) so routing
+        picks up drifted preferences."""
+        self._table = None
+
+    def _rebuild(self, ep: Tuple) -> None:
+        state = self.state_fn()
+        c = normalized_scores(state)
+        live = np.zeros(state.m_cap, bool)
+        live[list(ep[1])] = True
+        masked = np.where(state.active & live[None, :], c, -1.0)
+        pref = np.argmax(masked, axis=1)
+        pref[masked.max(axis=1) < 0.0] = -1
+        self._table = pref
+        self._epoch = ep
+        self.rebuilds += 1
+
+
+class ServeGateway:
+    """Group-by-model continuous-batching gateway over a stacked LM bank
+    (module docstring).
+
+    ``registry.params`` must be a :class:`StackedParamBank` (the LM
+    engine's per-layer-stacked bank — ``FedLLMTrainer`` with
+    ``engine="llm"``); ``state_fn`` supplies the score state the routing
+    derives from (e.g. ``lambda: trainer.state``).
+    """
+
+    def __init__(self, cfg: ArchConfig, registry: Any,
+                 state_fn: Callable[[], Any], *, max_len: int = 128,
+                 lanes: int = 8, chunk: int = 16, window: int = 0,
+                 eos_id: Optional[int] = None, top_k: int = 0,
+                 seed: int = 0,
+                 present_fn: Optional[Callable[[int], bool]] = None):
+        if not isinstance(registry.params, StackedParamBank):
+            raise ValueError(
+                "ServeGateway needs a stacked param bank "
+                "(ModelRegistry.create(..., stacked=True))")
+        self.cfg = cfg
+        self.registry = registry
+        self.window = window
+        self.chunk = min(chunk, window) if window else chunk
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.routing = RoutingTable(registry, state_fn, present_fn)
+        self.pools = KVPoolManager(cfg, lanes, max_len, window=window)
+        self.groups: Dict[int, ModelGroup] = {}
+        self._sample = self._make_sample(top_k)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._key = jax.random.PRNGKey(seed)
+        self._top_k = top_k
+        self._next_rid = 0
+        self.dispatches = 0          # decode dispatches (all groups)
+        self.tokens_out = 0          # generated tokens (incl. prefill's)
+
+    # -- jitted device-side pieces ----------------------------------------
+    @staticmethod
+    def _make_sample(top_k: int):
+        if top_k:
+            def sample(logits, key):          # (L, V) -> (L,)
+                vals, idx = jax.lax.top_k(logits, top_k)
+                choice = jax.random.categorical(key, vals, axis=-1)
+                return jnp.take_along_axis(
+                    idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
+        else:
+            def sample(logits, key):
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return sample
+
+    def _row_params(self, bank_tree, row):
+        # in-jit bank-row read: ONE compiled program serves every model
+        return jax.tree.map(lambda a: a[row], bank_tree)
+
+    def _prefill_fn(self, bank_tree, row, cache, tokens, n_valid, key):
+        params = self._row_params(bank_tree, row)
+        nv = jnp.asarray(n_valid, jnp.int32)
+        logits, cache = tf.lm_prefill(self.cfg, params, tokens, cache,
+                                      window=self.window, n_valid=nv)
+        last = jax.lax.dynamic_slice_in_dim(logits, nv - 1, 1, axis=1)
+        return self._sample(last[:, 0, :], key), cache
+
+    def _decode_fn(self, bank_tree, row, stacked, toks, key):
+        params = self._row_params(bank_tree, row)
+
+        def one_lane(cache, tok):
+            logits, nc = tf.lm_decode(self.cfg, params, tok[None, None],
+                                      cache, window=self.window)
+            return nc, logits[0, -1]
+
+        # params enter via closure (vmap in_axes=None semantics): every
+        # lane shares the row, so the GEMMs stay batched over lanes
+        new_stacked, logits = jax.vmap(one_lane)(stacked, toks)
+        return new_stacked, self._sample(logits, key)
+
+    @staticmethod
+    def _insert_fn(stacked, single, lane):
+        return jax.tree.map(lambda P, c: P.at[lane].set(c), stacked, single)
+
+    def _next_key(self):
+        if not self._top_k:
+            return self._key            # greedy ignores it — keep static
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- request path ------------------------------------------------------
+    def submit(self, device: int, prompt: Any, max_new: int) -> Request:
+        """Route + enqueue one request; admits immediately when the
+        target group has a free lane. Raises :class:`RequestRejected`
+        when the device cannot be served."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if not self.window and prompt.size + max_new > self.max_len:
+            raise RequestRejected(
+                f"prompt {prompt.size} + max_new {max_new} exceeds "
+                f"max_len {self.max_len} (no ring window)")
+        model = self.routing.resolve(device)
+        req = Request(rid=self._next_rid, device=device, prompt=prompt,
+                      max_new=max_new, submit_t=time.perf_counter())
+        self._next_rid += 1
+        self._enqueue(req, model)
+        return req
+
+    def _enqueue(self, req: Request, model: int) -> None:
+        group = self.groups.get(model)
+        if group is None:
+            group = ModelGroup(model, self.pools.get(model))
+            self.groups[model] = group
+        group.queue.append(req)
+        self._admit(group)
+
+    def _context(self, req: Request) -> np.ndarray:
+        """The token context a (re-)admission prefills: the prompt plus
+        anything already generated (re-routes continue the stream)."""
+        if not req.tokens:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.tokens, np.int32)])
+
+    def _admit(self, group: ModelGroup) -> List[Request]:
+        """Fill free lanes from the queue: chunked prefill at batch 1
+        into a fresh cache, one lane scatter, first token recorded."""
+        finished = []
+        bank = self.registry.params
+        row = jnp.asarray(bank.row_of[group.model], jnp.int32)
+        while group.queue and group.pool.free_lanes:
+            req = group.queue.popleft()
+            ctx = self._context(req)
+            cache = group.pool.template
+            tok = None
+            for s in range(0, ctx.size, self.chunk):
+                part = ctx[s:s + self.chunk]
+                nv = part.size
+                if nv < self.chunk:
+                    part = np.pad(part, (0, self.chunk - nv))
+                tok, cache = self._prefill(
+                    bank.tree, row, cache, jnp.asarray(part[None]),
+                    nv, self._next_key())
+                self.dispatches += 1
+            lane = group.pool.acquire()
+            group.pool.stacked = self._insert(group.pool.stacked, cache,
+                                              lane)
+            first = int(np.asarray(tok)[0])
+            group.admit(req, lane, first)
+            self.tokens_out += 1
+            if len(req.tokens) >= req.max_new or first == self.eos_id:
+                finished.append(group.finish(lane))
+        return finished
+
+    def step(self) -> List[Request]:
+        """One decode token for EVERY model group with live lanes: one
+        dispatch per group, one (lanes,) readback, finished requests
+        free their lanes and queued requests back-fill mid-stream."""
+        finished: List[Request] = []
+        bank = self.registry.params
+        for model in sorted(self.groups):
+            group = self.groups[model]
+            if not group.active:
+                if group.queue:
+                    finished.extend(self._admit(group))
+                continue
+            row = jnp.asarray(bank.row_of[model], jnp.int32)
+            group.pool.stacked, nxt = self._decode(
+                bank.tree, row, group.pool.stacked,
+                jnp.asarray(group.cur_tok), self._next_key())
+            self.dispatches += 1
+            group.steps += 1
+            group.lane_steps += len(group.active)
+            nxt_host = np.asarray(nxt)
+            for lane in sorted(group.active):
+                req = group.active[lane]
+                t = int(nxt_host[lane])
+                req.tokens.append(t)
+                self.tokens_out += 1
+                if len(req.tokens) >= req.max_new or t == self.eos_id:
+                    finished.append(group.finish(lane))
+                else:
+                    group.cur_tok[lane] = t
+            finished.extend(self._admit(group))
+        return finished
+
+    def drain(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until no group holds work. Returns finished requests in
+        completion order."""
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not any(g.has_work() for g in self.groups.values()):
+                return finished
+            finished.extend(self.step())
+        raise RuntimeError(f"drain exceeded {max_steps} steps")
+
+    # -- lifecycle sync ----------------------------------------------------
+    def sync(self) -> Dict[str, List]:
+        """Reconcile with the registry after clone/delete/migrate (call
+        between trainer rounds). Dead models' pools release and their
+        in-flight requests re-route (re-prefilling full context on the
+        successor model, counted in ``Request.rerouted``); requests whose
+        device no longer maps to any live model fail cleanly."""
+        self.routing.invalidate()     # scores moved since last round
+        prewarmed, released = self.pools.sync(self.registry)
+        orphans: List[Request] = []
+        for m in released:
+            group = self.groups.pop(m, None)
+            if group is not None:
+                orphans.extend(group.evict_all())
+        failed = []
+        for req in orphans:
+            req.rerouted += 1
+            try:
+                model = self.routing.resolve(req.device)
+            except RequestRejected as e:
+                req.failed = str(e)
+                failed.append(req)
+                continue
+            self._enqueue(req, model)
+        return {"prewarmed": prewarmed, "released": released,
+                "rerouted": [r.rid for r in orphans if not r.failed],
+                "failed": [r.rid for r in failed]}
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "dispatches": self.dispatches,
+            "tokens_out": self.tokens_out,
+            "routing": {"hits": self.routing.hits,
+                        "rebuilds": self.routing.rebuilds,
+                        "invalidations": self.routing.invalidations},
+            "pools": {"live": len(self.pools.pools),
+                      "created": self.pools.created,
+                      "released": self.pools.released,
+                      "bytes": self.pools.nbytes()},
+            "batching_efficiency": {
+                m: round(g.batching_efficiency(), 4)
+                for m, g in self.groups.items()},
+        }

@@ -1,0 +1,109 @@
+"""Per-model KV/state cache pools for the serving gateway (DESIGN.md §15).
+
+Each live model is backed by ONE :class:`KVPool`: a stacked pytree of
+``lanes`` single-request decode caches (each the ``batch=1`` layout from
+``models.transformer.init_lm_caches``, ring-buffer window included), so
+a model group's whole decode batch is one device-resident tree and a
+request's admission/retirement is a single lane index — no per-request
+cache allocation on the hot path.
+
+Pools follow the registry's genealogy through :class:`KVPoolManager.
+sync`: a deleted model's pool is released (its in-flight requests are
+the gateway's to re-route), and a clone whose PARENT held a pool is
+pre-warmed — the parent's devices are exactly where the clone's traffic
+comes from.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import transformer as tf
+
+
+class KVPool:
+    """Decode-lane pool for ONE model: ``stacked`` holds ``lanes``
+    single-request caches on a leading lane axis; ``acquire``/``release``
+    manage the free list. Lane contents are fully overwritten at
+    admission (the gateway scatters a freshly prefilled cache into the
+    lane), so released lanes need no reset pass."""
+
+    def __init__(self, cfg: ArchConfig, lanes: int, max_len: int,
+                 window: int = 0):
+        self.lanes = lanes
+        self.window = window
+        # batch=1 template: the per-lane cache layout (and the fresh
+        # cache admission prefills into — pure reads, never donated)
+        self.template = tf.init_lm_caches(cfg, 1, max_len, window=window)
+        self.stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (lanes,) + a.shape).copy(),
+            self.template)
+        self._free: List[int] = list(range(lanes))
+
+    @property
+    def free_lanes(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise IndexError("pool has no free lane")
+        return self._free.pop(0)
+
+    def release(self, lane: int) -> None:
+        if lane in self._free or not (0 <= lane < self.lanes):
+            raise ValueError(f"bad lane release: {lane}")
+        self._free.append(lane)
+        self._free.sort()
+
+    def nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.stacked))
+
+
+class KVPoolManager:
+    """Allocates/releases per-model :class:`KVPool`\\ s against the model
+    registry's liveness + genealogy."""
+
+    def __init__(self, cfg: ArchConfig, lanes: int, max_len: int,
+                 window: int = 0):
+        self.cfg = cfg
+        self.lanes = lanes
+        self.max_len = max_len
+        self.window = window
+        self.pools: Dict[int, KVPool] = {}
+        self.created = 0
+        self.released = 0
+
+    def get(self, model_id: int) -> KVPool:
+        """The model's pool, allocated lazily on first routed request."""
+        pool = self.pools.get(model_id)
+        if pool is None:
+            pool = KVPool(self.cfg, self.lanes, self.max_len, self.window)
+            self.pools[model_id] = pool
+            self.created += 1
+        return pool
+
+    def sync(self, registry: Any) -> Tuple[List[int], List[int]]:
+        """Reconcile pools with the registry after lifecycle events.
+        Releases pools of dead models and pre-warms pools for new clones
+        whose parent held one. Returns (prewarmed_ids, released_ids);
+        the gateway re-routes the released pools' in-flight requests."""
+        live = set(registry.live_ids())
+        released = [m for m in self.pools if m not in live]
+        for m in released:
+            del self.pools[m]
+            self.released += 1
+        prewarmed = []
+        for m in sorted(live - set(self.pools)):
+            parent = registry.entries[m].parent
+            if parent is not None and (parent in self.pools
+                                       or parent in released):
+                self.get(m)
+                prewarmed.append(m)
+        return prewarmed, released
+
+    def nbytes(self) -> int:
+        return sum(p.nbytes() for p in self.pools.values())

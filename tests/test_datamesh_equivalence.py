@@ -342,6 +342,66 @@ def test_bank_sharded_placement_and_write_routing():
         assert xs.sharding.shard_shape(xs.shape)[0] == xs.shape[0] // 2
 
 
+def test_data_bank_pair_load_ewma_fold_and_reset():
+    """EWMA bookkeeping mirrors the model bank's: half-life fold,
+    snap-to-zero of fully decayed residue, reset on elastic restore
+    (the observed loads described the pre-restore placement)."""
+    bank = _toy_bank()
+    bank.note_pair_load([8.0])
+    assert bank.load_ewma[0] == pytest.approx(4.0)
+    bank.note_pair_load([0.0])
+    assert bank.load_ewma[0] == pytest.approx(2.0)
+    for _ in range(40):
+        bank.note_pair_load([0.0])
+    assert (bank.load_ewma == 0).all()       # snapped, not denormal residue
+    bank.note_pair_load([6.0])
+    devices = {0: {k: (np.asarray(bank.splits[k][0][0]),
+                       np.asarray(bank.splits[k][1][0]))
+                   for k in ("train", "val", "test")}}
+    bank.restore(devices, next_id=5)
+    assert (bank.load_ewma == 0).all()
+
+
+@needs_devices(2)
+def test_data_bank_churn_aware_placement_follows_pair_load():
+    """Joining devices land on the data shard with the lowest observed
+    pair-load EWMA, not just the fewest present rows — the data-plane
+    twin of the model bank's work-aware placement."""
+    rng = np.random.default_rng(5)
+    mesh = make_launch_mesh(1, 2)
+    bank = _toy_bank(n0=2, n_cap=12, id_cap=30, mesh=mesh)
+    # rows 0,1 sit on shard 0; present-count alone would send the next
+    # joins to shard 1 — but shard 1 observed a hot round, so the
+    # work-aware choice is shard 0's free rows
+    bank.note_pair_load([0.0, 12.0])
+    d = bank.add(_toy_device(rng))
+    assert bank.shard_of(d) == 0
+    d2 = bank.add(_toy_device(rng))
+    assert bank.shard_of(d2) == 0
+    # quiet rounds decay the signal away -> present-count fallback
+    for _ in range(40):
+        bank.note_pair_load([0.0, 0.0])
+    d3 = bank.add(_toy_device(rng))
+    assert bank.shard_of(d3) == 1
+    # balanced traffic ties at hotness 1 -> fallback again
+    bank.note_pair_load([5.0, 5.0])
+    d4 = bank.add(_toy_device(rng))
+    assert bank.shard_of(d4) == 1
+
+
+@needs_devices(2)
+def test_sharded2d_executor_feeds_data_pair_load():
+    """The 2-D executor reports each dispatched round's per-data-shard
+    pair counts into the bank's placement EWMA (the way ShardedExecutor
+    feeds the model bank)."""
+    cfg, params, data = _small_setup()
+    mesh = make_launch_mesh(1, 2)
+    srv = _run(cfg, params, data, rounds=2, mesh=mesh)
+    bank = srv.executor.databank
+    assert bank.load_ewma.shape == (2,)
+    assert bank.load_ewma.sum() > 0
+
+
 def test_bank_rejects_mismatched_split_shapes():
     rng = np.random.default_rng(4)
     bank = _toy_bank()

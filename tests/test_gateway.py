@@ -1,0 +1,351 @@
+"""Serving gateway tier (DESIGN.md §15).
+
+Pins the four load-bearing properties of the personalized inference
+data plane:
+
+* chunked prefill ≡ token-at-a-time decode (logits AND cache contents)
+  across the attention / MLA / recurrent / hybrid families, including a
+  ragged (padded) final chunk and the sliding-window ring buffer;
+* routing-table caching: warm resolves never rebuild, training-round
+  bank swaps never invalidate, and every lifecycle event that can
+  re-route a device — clone (row write), delete (liveness flip, which
+  does NOT bump the bank version), migrate (row move) — does;
+* the gateway's grouped, lane-batched decode is bit-identical to the
+  single-request ``launch/serve.py`` path (row-gathered params +
+  ``make_prefill_step`` / ``make_serve_step``);
+* pool lifecycle: lanes free/back-fill mid-stream, deleted models'
+  pools release with in-flight requests re-routed onto the successor,
+  clones pre-warm via the registry genealogy.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, FedCDConfig, MLAConfig, XLSTMConfig
+from repro.core.registry import ModelRegistry
+from repro.core.scores import init_scores, push_accuracies
+from repro.federated.llm import FedLLMTrainer
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import transformer as tf
+from repro.serve import (KVPool, KVPoolManager, RequestRejected,
+                         RoutingTable, ServeGateway)
+
+# -- chunked prefill ≡ repeated decode --------------------------------------
+
+_F32 = dict(param_dtype="float32", compute_dtype="float32")
+FAMILIES = {
+    "dense_win": ArchConfig(name="tw", n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab_size=64,
+                            sliding_window=6, **_F32),
+    "mla": ArchConfig(name="tm", family="moe", attn_type="mla", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=64,
+                      mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                    qk_nope_dim=16, qk_rope_dim=8,
+                                    v_head_dim=16), **_F32),
+    "ssm": ArchConfig(name="ts", family="ssm", n_layers=3, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                      xlstm=XLSTMConfig(slstm_layers=(1,)), **_F32),
+    "hybrid": ArchConfig(name="th", family="hybrid", n_layers=5, d_model=64,
+                         n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                         shared_attn_every=2, shared_attn_lora_rank=4,
+                         **_F32),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_prefill_matches_token_at_a_time(family):
+    cfg = FAMILIES[family]
+    win = cfg.sliding_window
+    B, P, CH, MAXLEN = 2, 11, 4, 16          # P % CH != 0: padded tail
+    rng = np.random.default_rng(0)
+    params = tf.init_lm(cfg, jax.random.key(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+    cref = tf.init_lm_caches(cfg, B, MAXLEN, window=win)
+    logits_ref = None
+    for t in range(P):
+        logits_ref, cref = tf.lm_decode(cfg, params, toks[:, t:t + 1],
+                                        cref, window=win)
+
+    cpre = tf.init_lm_caches(cfg, B, MAXLEN, window=win)
+    last = None
+    for s in range(0, P, CH):
+        chunk = toks[:, s:s + CH]
+        nv = chunk.shape[1]
+        if nv < CH:
+            chunk = jnp.pad(chunk, ((0, 0), (0, CH - nv)))
+        lg, cpre = tf.lm_prefill(cfg, params, chunk, cpre, window=win,
+                                 n_valid=jnp.asarray(nv, jnp.int32))
+        last = lg[:, nv - 1, :]
+
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits_ref[:, 0, :]),
+                               atol=1e-4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(cref), jax.tree.leaves(cpre)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# -- routing table ----------------------------------------------------------
+
+def _world(n_dev=6, m_cap=4, n_shards=1):
+    """Synthetic registry + score state: models {0, 1} live, devices
+    0-2 prefer model 0 and 3-5 prefer model 1, all active on both."""
+    reg = ModelRegistry.create({"w": np.zeros(2, np.float32)}, m_cap=m_cap,
+                               stacked=True, n_shards=n_shards)
+    reg.clone(0, 1, {"w": np.ones(2, np.float32)})
+    state = init_scores(n_dev, m_cap, ell=2)
+    state.active[:, 1] = True
+    state.alive[1] = True
+    accs = np.zeros((n_dev, m_cap))
+    accs[:3, 0], accs[:3, 1] = 0.9, 0.1
+    accs[3:, 0], accs[3:, 1] = 0.1, 0.9
+    state = push_accuracies(state, accs)
+    return reg, state
+
+
+def test_routing_warm_cache_survives_training_swaps():
+    reg, state = _world()
+    rt = RoutingTable(reg, lambda: state)
+    assert [rt.resolve(d) for d in range(6)] == [0, 0, 0, 1, 1, 1]
+    assert (rt.rebuilds, rt.invalidations) == (1, 0)
+    assert rt.hits == 5
+    # a training round ADOPTS new params via swap: no version bump, no
+    # liveness change -> the cached table stays warm by design
+    bank = reg.params
+    v0 = bank.version
+    bank.swap(jax.tree.map(lambda a: a + 1.0, bank.tree))
+    assert bank.version == v0
+    assert rt.resolve(0) == 0
+    assert (rt.rebuilds, rt.invalidations) == (1, 0)
+    # the score-drift hook: explicit invalidate() rebuilds WITHOUT
+    # counting an epoch invalidation (nothing went stale)
+    rt.invalidate()
+    assert rt.resolve(0) == 0
+    assert (rt.rebuilds, rt.invalidations) == (2, 0)
+
+
+def test_routing_invalidates_on_clone():
+    reg, state = _world()
+    rt = RoutingTable(reg, lambda: state)
+    assert rt.resolve(5) == 1
+    # clone writes a bank row -> version bump -> stale table discarded
+    v0 = reg.params.version
+    mid = reg.clone(1, 5, {"w": np.full(2, 2.0, np.float32)})
+    assert reg.params.version == v0 + 1
+    state.active[:, mid] = True
+    state.alive[mid] = True
+    state.history[5, mid, :] = 1.0        # device 5 now prefers the clone
+    assert rt.resolve(5) == mid
+    assert (rt.rebuilds, rt.invalidations) == (2, 1)
+
+
+def test_routing_invalidates_on_delete_without_version_bump():
+    reg, state = _world()
+    rt = RoutingTable(reg, lambda: state)
+    state.active[4, 0] = False            # device 4 holds ONLY model 1
+    assert rt.resolve(3) == 1
+    # deletion is a pop (mask flip): the bank version must NOT move —
+    # liveness joins the epoch instead
+    v0 = reg.params.version
+    reg.kill(1, round_=9)
+    assert reg.params.version == v0
+    assert reg.live_ids() == [0]
+    assert rt.resolve(3) == 0             # re-routed to the survivor
+    assert rt.invalidations == 1
+    with pytest.raises(RequestRejected):
+        rt.resolve(4)                     # no live active model left
+
+
+def test_routing_invalidates_on_migrate():
+    reg, state = _world(n_shards=2)
+    rt = RoutingTable(reg, lambda: state)
+    assert rt.resolve(0) == 0
+    bank = reg.params
+    dest = 1 - bank.shard_of(0)
+    bank.migrate(0, dest)                 # pure layout, but version bumps
+    assert rt.resolve(0) == 0             # same route...
+    assert rt.invalidations == 1          # ...through a fresh table
+
+
+def test_routing_rejects_departed_and_unknown_devices():
+    reg, state = _world()
+    present = {0, 1, 2, 3, 4}
+    rt = RoutingTable(reg, lambda: state, present_fn=lambda d: d in present)
+    assert rt.resolve(2) == 0
+    with pytest.raises(RequestRejected):
+        rt.resolve(5)                     # departed (present_fn gate)
+    rt2 = RoutingTable(reg, lambda: state)
+    with pytest.raises(RequestRejected):
+        rt2.resolve(17)                   # outside the device-id space
+
+
+# -- KV pool lifecycle ------------------------------------------------------
+
+TINY = ArchConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=64, **_F32)
+
+
+def test_kv_pool_lane_accounting():
+    pool = KVPool(TINY, lanes=2, max_len=8)
+    assert pool.nbytes() > 0
+    a, b = pool.acquire(), pool.acquire()
+    assert (a, b) == (0, 1) and pool.free_lanes == 0
+    with pytest.raises(IndexError):
+        pool.acquire()
+    pool.release(a)
+    with pytest.raises(ValueError):
+        pool.release(a)                   # double release
+    assert pool.acquire() == a            # lowest free lane first
+
+
+def test_kv_pool_manager_follows_genealogy():
+    class _Entry:
+        def __init__(self, parent):
+            self.parent = parent
+
+    class _Reg:
+        entries = {0: _Entry(None), 1: _Entry(0), 2: _Entry(1)}
+        live = [0, 1]
+
+        def live_ids(self):
+            return list(self.live)
+
+    reg = _Reg()
+    mgr = KVPoolManager(TINY, lanes=2, max_len=8)
+    mgr.get(0)
+    mgr.get(1)
+    assert mgr.created == 2
+    # model 1 deleted, its clone 2 born: the pool releases and the
+    # clone pre-warms (parent's devices are where its traffic comes
+    # from); unrelated live models without traffic do NOT allocate
+    reg.live = [0, 2]
+    prewarmed, released = mgr.sync(reg)
+    assert released == [1] and prewarmed == [2]
+    assert sorted(mgr.pools) == [0, 2]
+    assert (mgr.created, mgr.released) == (3, 1)
+    # steady state: sync is a no-op
+    assert mgr.sync(reg) == ([], [])
+
+
+# -- gateway end-to-end -----------------------------------------------------
+
+FED = FedCDConfig(n_devices=8, devices_per_round=6, score_window=2,
+                  milestones=(2,), late_delete_round=20, max_models=6,
+                  lr=0.05, seed=0)
+
+
+def _trainer(rounds=3):
+    tr = FedLLMTrainer(TINY, FED, 8, 2, 16, n_archetypes=2, seed=0)
+    tr.run(rounds)
+    assert len(tr.registry.live_ids()) >= 2
+    return tr
+
+
+@pytest.fixture(scope="module")
+def trainer():
+    return _trainer()
+
+
+def test_gateway_decode_bit_identical_to_single_request(trainer):
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=64, lanes=4, chunk=8)
+    rng = np.random.default_rng(0)
+    reqs = [gw.submit(d, rng.integers(0, 64, size=10), max_new=6)
+            for d in range(8)]
+    gw.drain()
+    assert all(r.done and len(r.tokens) == 6 for r in reqs)
+    assert all(r.ttft_s is not None and r.total_s is not None for r in reqs)
+
+    # oracle: per-request param gather + batch-1 prefill/decode steps
+    prefill = jax.jit(make_prefill_step(TINY))
+    step = jax.jit(make_serve_step(TINY))
+    for d in (0, 5):
+        params = trainer.registry.params[gw.routing.resolve(d)]
+        caches = tf.init_lm_caches(TINY, 1, 64)
+        prompt = reqs[d].prompt
+        logits = None
+        for s in range(0, prompt.size, 8):
+            part = prompt[s:s + 8]
+            nv = part.size
+            if nv < 8:
+                part = np.pad(part, (0, 8 - nv))
+            logits, caches = prefill(params, caches,
+                                     jnp.asarray(part[None]), nv)
+        toks = [int(jnp.argmax(logits, -1)[0])]
+        for _ in range(5):
+            logits, caches = step(params, caches,
+                                  jnp.asarray([[toks[-1]]], jnp.int32))
+            toks.append(int(jnp.argmax(logits, -1)[0]))
+        assert toks == reqs[d].tokens
+
+
+def test_gateway_backfills_lanes_mid_stream(trainer):
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=64, lanes=2, chunk=8)
+    rng = np.random.default_rng(1)
+    # 5 same-model requests over 2 lanes: the queue back-fills as
+    # shorter requests retire mid-stream
+    reqs = [gw.submit(0, rng.integers(0, 64, size=6), max_new=n)
+            for n in (2, 7, 3, 5, 4)]
+    gw.drain()
+    assert all(r.done for r in reqs)
+    assert [len(r.tokens) for r in reqs] == [2, 7, 3, 5, 4]
+    group = gw.groups[gw.routing.resolve(0)]
+    assert not group.has_work()
+    assert group.pool.free_lanes == 2     # every lane returned
+    assert 0.0 < group.batching_efficiency() <= 1.0
+    # grouped decode: dispatches strictly fewer than a serial replay's
+    # per-token count (prefill chunks + one dispatch per decoded token)
+    serial = sum(1 + (len(r.tokens) - 1) for r in reqs)
+    decode_dispatches = gw.dispatches - sum(
+        -(-r.prompt.size // gw.chunk) for r in reqs)
+    assert decode_dispatches < serial
+
+
+def test_gateway_sync_reroutes_in_flight_on_delete():
+    tr = _trainer()
+    gw = ServeGateway(TINY, tr.registry, lambda: tr.state,
+                      max_len=64, lanes=4, chunk=8)
+    live = tr.registry.live_ids()
+    rng = np.random.default_rng(2)
+    reqs = [gw.submit(d, rng.integers(0, 64, size=8), max_new=12)
+            for d in range(8)]
+    by_model = {m: [r for r in reqs if r.model == m] for m in live}
+    victim = next(m for m in live if by_model[m])
+    survivor = next(m for m in live if m != victim)
+    gw.step()                             # some tokens in flight
+    tr.registry.kill(victim, round_=99)
+    out = gw.sync()
+    assert victim in out["released"]
+    moved = by_model[victim]
+    assert {r.rid for r in moved} <= set(out["rerouted"])
+    assert out["failed"] == []
+    gw.drain()
+    # re-routed requests continued their stream on the survivor with
+    # the full decode budget honored
+    for r in moved:
+        assert r.done and r.rerouted == 1 and r.model == survivor
+        assert len(r.tokens) == 12
+    for r in reqs:
+        assert r.done and len(r.tokens) == 12
+    assert victim not in gw.groups and victim not in gw.pools.pools
+    assert gw.stats()["pools"]["released"] == 1
+
+
+def test_gateway_rejects_oversized_and_unroutable(trainer):
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=16, lanes=2, chunk=8,
+                      present_fn=lambda d: d != 3)
+    with pytest.raises(RequestRejected):
+        gw.submit(0, np.arange(12), max_new=8)    # 12 + 8 > max_len
+    with pytest.raises(RequestRejected):
+        gw.submit(3, [1, 2], max_new=2)           # departed device
+    with pytest.raises(RequestRejected):
+        gw.submit(999, [1, 2], max_new=2)         # unknown device
+    with pytest.raises(ValueError):
+        gw.submit(0, [], max_new=2)               # empty prompt
