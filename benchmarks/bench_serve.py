@@ -1,6 +1,8 @@
-"""Serving gateway bench (DESIGN.md §15): grouped continuous batching
-vs the serial single-request path, chunked prefill vs the old
-token-at-a-time loop, and a train/serve interleave mode.
+"""Serving gateway bench (DESIGN.md §15–16): grouped continuous
+batching vs the serial single-request path, chunked prefill vs the old
+token-at-a-time loop, a train/serve interleave mode, and (``run_spec``,
+``--only spec``) the PR 10 additions — speculative decoding with
+cluster-shared drafts, paged int8 KV pools, and admission control.
 
 Replays a Zipf-over-devices request trace against a trained FedCD LM
 population (4 live models) and reports p50/p99 TTFT (queue-relative, so
@@ -8,7 +10,16 @@ the serial path's head-of-line blocking is visible), tokens/s, and
 batching efficiency. The acceptance bar: grouped decode ≥ 2x the serial
 path's tokens/s at 4 live models and 32 concurrent requests.
 
-Run directly or via ``python -m benchmarks.run --only serve``.
+The spec-decode rows report acceptance rate, emitted tokens per verify
+round, and per-round dispatch overhead alongside tokens/s: on this
+CPU-only container both draft and target rounds are host-dispatch
+bound at tiny model sizes, so wall-clock speedup is confounded (see
+DESIGN.md §16 — the tokens-per-dispatch ratio is the transferable
+number). The paged-KV row pins the int8 shrink bar (>= 3.5x resident
+bytes vs dense fp32 at equal lanes).
+
+Run directly (``--spec`` / ``--paged-kv`` for the PR 10 benches) or via
+``python -m benchmarks.run --only serve,spec``.
 """
 from __future__ import annotations
 
@@ -185,6 +196,7 @@ def run(quick: bool = False):
     s_wall, s_tok, s_ttft = _serial(arch, tr, trace, prompts, max_new)
     gw, g_wall, g_tok, g_ttft, eff = _grouped(arch, tr, trace, prompts,
                                               max_new, lanes, chunk)
+    st0 = gw.stats()["pools"]
     speedup = (g_tok / g_wall) / (s_tok / s_wall)
     pre = _prefill_speed(arch, tr, rng)
     i_wall, i_serve, i_tok, i_rerouted = _interleave(
@@ -206,7 +218,9 @@ def run(quick: bool = False):
                    f"p50_ttft_ms={pct(g_ttft, 50):.1f};"
                    f"p99_ttft_ms={pct(g_ttft, 99):.1f};"
                    f"batch_eff={eff:.2f};live={live};"
-                   f"lanes={lanes};reqs={n_req}"),
+                   f"lanes={lanes};reqs={n_req};"
+                   f"kv_bytes={st0['bytes']};"
+                   f"kv_bytes_in_use={st0['bytes_in_use']}"),
         C.csv_line("serve_prefill_chunked", pre["chunked"] * 1e6,
                    f"tokenloop_x={pre['token_loop'] / pre['chunked']:.2f};"
                    f"prompt=48;chunk=16"),
@@ -218,10 +232,122 @@ def run(quick: bool = False):
     ]
 
 
+def _gateway_trace(arch, tr, trace, prompts, max_new, lanes, chunk, **kw):
+    """Warm-compile + time one gateway configuration over the trace."""
+    from repro.serve import ServeGateway
+
+    gw = ServeGateway(arch, tr.registry, lambda: tr.state,
+                      max_len=MAX_LEN, lanes=lanes, chunk=chunk, **kw)
+    for d, p in zip(trace, prompts):                # compile warm-up
+        gw.submit(int(d), p, max_new)
+    gw.drain()
+    t0 = time.perf_counter()
+    reqs = [gw.submit(int(d), p, max_new) for d, p in zip(trace, prompts)]
+    gw.drain()
+    wall = time.perf_counter() - t0
+    return gw, wall, sum(len(r.tokens) for r in reqs)
+
+
+def run_spec(quick: bool = False, k: int = 4, draft_layers: int = 1,
+             spec: bool = True, paged: bool = True):
+    """PR 10 rows: speculative decode (``--spec``), paged int8 KV
+    (``--paged-kv``) and admission control, all against the grouped
+    gateway baseline on the same Zipf trace."""
+    from repro.serve import (KVPool, PagedKVPool, RequestRejected,
+                             ServeGateway)
+
+    rounds = 6 if quick else 10
+    n_req = 24 if quick else 32
+    max_new = 8 if quick else 16
+    lanes, chunk = 8, 8
+    rng = np.random.default_rng(0)
+    arch, tr = _population(rounds)
+    live = len(tr.registry.live_ids())
+    trace = _zipf_devices(8, n_req, rng)
+    prompts = [rng.integers(0, arch.vocab_size, 12).astype(np.int32)
+               for _ in range(n_req)]
+
+    _, b_wall, b_tok = _gateway_trace(arch, tr, trace, prompts, max_new,
+                                      lanes, chunk)
+    base_tps = b_tok / b_wall
+    lines = [C.csv_line("serve_spec_baseline", b_wall / b_tok * 1e6,
+                        f"tokens_s={base_tps:.1f};live={live};"
+                        f"lanes={lanes};reqs={n_req}")]
+
+    if spec:
+        gw, wall, tok = _gateway_trace(arch, tr, trace, prompts, max_new,
+                                       lanes, chunk, spec_k=k,
+                                       draft_layers=draft_layers)
+        sp = gw.stats()["spec"]
+        # tokens a lane emits per verify round vs the 2 dispatches the
+        # round costs: the CPU-portable speedup number (run docstring)
+        tok_per_round = 1.0 + sp["acceptance_rate"] * k
+        lines.append(C.csv_line(
+            "serve_spec_decode", wall / tok * 1e6,
+            f"grouped_x={(tok / wall) / base_tps:.2f};"
+            f"tokens_s={tok / wall:.1f};k={k};"
+            f"draft_layers={sp['draft_layers']};"
+            f"acceptance={sp['acceptance_rate']:.3f};"
+            f"lane_tokens_per_round={tok_per_round:.2f};"
+            f"dispatches_per_round=2;"
+            f"draft_bytes={sp['draft_bytes']}"))
+
+    if paged:
+        gw, wall, tok = _gateway_trace(arch, tr, trace, prompts, max_new,
+                                       lanes, chunk, paged=True)
+        pg = gw.stats()["pools"]
+        dense = KVPool(arch, lanes=lanes, max_len=MAX_LEN)
+        pool = PagedKVPool(arch, lanes=lanes, max_len=MAX_LEN)
+        for _ in range(lanes):
+            pool.acquire()                          # fully occupied
+        shrink = dense.nbytes() / pool.nbytes_in_use()
+        lines.append(C.csv_line(
+            "serve_paged_kv", wall / tok * 1e6,
+            f"grouped_x={(tok / wall) / base_tps:.2f};"
+            f"tokens_s={tok / wall:.1f};"
+            f"kv_shrink_x={shrink:.2f};"
+            f"dense_bytes={dense.nbytes()};"
+            f"paged_bytes_in_use={pool.nbytes_in_use()};"
+            f"pages_reserved={pg['pages']['pages_reserved']}"))
+        assert shrink >= 3.5, f"paged int8 shrink {shrink:.2f}x < 3.5x"
+
+    # admission control: a burst beyond queue capacity must shed load
+    gw = ServeGateway(arch, tr.registry, lambda: tr.state,
+                      max_len=MAX_LEN, lanes=lanes, chunk=chunk,
+                      max_queue=4)
+    accepted = rejected = 0
+    t0 = time.perf_counter()
+    for d, p in zip(trace, prompts):
+        try:
+            gw.submit(int(d), p, max_new)
+            accepted += 1
+        except RequestRejected:
+            rejected += 1
+    gw.drain()
+    wall = time.perf_counter() - t0
+    adm = gw.stats()["admission"]
+    lines.append(C.csv_line(
+        "serve_admission", wall / max(accepted, 1) * 1e6,
+        f"reject_rate={rejected / n_req:.2f};accepted={accepted};"
+        f"rejected_overload={adm['rejected_overload']};"
+        f"rejected_rate={adm['rejected_rate']};"
+        f"max_queue=4;burst={n_req}"))
+    return lines
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--spec", action="store_true",
+                    help="run the speculative-decode rows instead")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="run the paged int8 KV rows instead")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for line in run(quick=args.quick):
+    if args.spec or args.paged_kv:
+        lines = run_spec(quick=args.quick, spec=args.spec,
+                         paged=args.paged_kv)
+    else:
+        lines = run(quick=args.quick)
+    for line in lines:
         print(line)

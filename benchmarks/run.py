@@ -91,6 +91,7 @@ def main() -> None:
         "llm": lambda: bench_llm.run(8 if args.fast else 12,
                                      quick=args.fast),
         "serve": lambda: bench_serve.run(quick=args.fast),
+        "spec": lambda: bench_serve.run_spec(quick=args.fast),
         "wallclock": lambda: bench_wallclock.run(long_rounds, args.model,
                                                  args.force),
         "comm": lambda: bench_comm.run(short_rounds, args.model, args.force),

@@ -299,6 +299,19 @@ def _snapshot_fedllm(server: Any) -> Tuple[dict, dict]:
          "trained_models": m.trained_models}
         for m in server.metrics]
     scalars["n_devices"] = int(server.n_clients)
+    # cluster-shared draft rows (speculative serving, DESIGN.md §16):
+    # population state like the target bank — keyed by model id
+    draft = getattr(server, "draft", None)
+    if draft is not None:
+        scalars["draft"] = {
+            "layers": int(draft.draft_layers),
+            "present": sorted(int(m) for m in draft.present)}
+        for m in sorted(draft.present):
+            r = draft.row(server.registry, m)
+            arrays.update(_flatten(
+                f"draft/{m}", jax.tree.map(lambda a: a[r], draft.tree)))
+    else:
+        scalars["draft"] = None
     return arrays, scalars
 
 
@@ -620,6 +633,29 @@ def restore_server_state(server: Any, path: str) -> int:
                 np.asarray(arrays["prefetch/vl"]))
         elif hasattr(server, "_prefetch"):
             server._prefetch = None
+        draft = getattr(server, "draft", None)
+        dmeta = scalars.get("draft")
+        if draft is not None:
+            if dmeta:
+                if int(dmeta["layers"]) != int(draft.draft_layers):
+                    raise CheckpointError(
+                        f"draft depth mismatch: checkpoint has "
+                        f"{dmeta['layers']} layers, trainer wants "
+                        f"{draft.draft_layers}")
+                template = jax.tree.map(lambda a: a[0], draft.tree)
+                draft.present = set()
+                for m in dmeta["present"]:
+                    row = _unflatten(template, arrays, f"draft/{m}")
+                    r = draft.row(server.registry, int(m))
+                    draft.tree = jax.tree.map(
+                        lambda a, x: a.at[r].set(x), draft.tree, row)
+                    draft.present.add(int(m))
+            else:
+                # checkpoint predates drafts: re-derive from the
+                # restored target rows (truncation is deterministic)
+                draft.present = set()
+                draft.refresh(server.registry,
+                              params_of=server.executor.params_of)
         from repro.federated.llm import LLMRoundMetrics
         server.metrics = [
             LLMRoundMetrics(round=s["round"], mean_loss=s["mean_loss"],

@@ -1710,6 +1710,13 @@ class LLMExecutorBase(RoundExecutor):
         result, self._result = self._result, None
         return result
 
+    def params_of(self, m: int):
+        """Read model ``m``'s current param tree — dict entry (legacy)
+        or bank-row view (stacked; ``bank[m]`` getitem). The serving
+        plane's :class:`~repro.serve.draft.DraftBank` refresh uses this
+        so draft truncation always reads post-round weights."""
+        return self.registry.params[m]
+
     def collect(self, preferred: np.ndarray
                 ) -> Tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError(

@@ -112,7 +112,8 @@ class FedLLMTrainer:
     def __init__(self, arch: ArchConfig, fed: FedCDConfig, n_clients: int,
                  per_client: int, seq: int, n_archetypes: int = 2,
                  mesh=None, seed: int = 0,
-                 spec: "EngineSpec | str" = "llm"):
+                 spec: "EngineSpec | str" = "llm",
+                 draft_layers: int = 0):
         spec = EngineSpec.coerce(spec)
         if spec.engine not in LLM_ENGINES:
             raise ValueError(
@@ -150,6 +151,17 @@ class FedLLMTrainer:
         self._perms = np.zeros((n_clients, 1, 1), np.int32)
         self._prefetch = None
         self.metrics: List[LLMRoundMetrics] = []
+        # cluster-shared draft rows for speculative serving (DESIGN.md
+        # §16): population state refreshed after every round's clone/
+        # delete pass and snapshotted with the trainer checkpoint
+        self.draft_layers = draft_layers
+        if draft_layers:
+            from repro.serve.draft import DraftBank
+            self.draft = DraftBank(arch, draft_layers, fed.max_models)
+            self.draft.refresh(self.registry,
+                               params_of=self.executor.params_of)
+        else:
+            self.draft = None
         # elastic checkpoint/resume + fault injection (DESIGN.md §13)
         self._faults = spec.faults
         self._ckpt = (CheckpointManager(spec.checkpoint_dir,
@@ -220,6 +232,11 @@ class FedLLMTrainer:
                 self.state, self.registry, t, fed, self.rng,
                 clone_params_fn=lambda p: jax.tree.map(jnp.copy, p))
             self.executor.on_clones(cloned)
+        if self.draft is not None:
+            # post-round draft "training": re-truncate from the freshly
+            # aggregated rows, pre-warm clones, drop deleted clusters
+            self.draft.refresh(self.registry,
+                               params_of=self.executor.params_of)
 
         losses = self.executor.round_losses
         cn = normalized_scores(self.state)

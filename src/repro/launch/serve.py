@@ -5,8 +5,12 @@ caches (ring-buffer window optional).
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
       --batch 4 --prompt-len 64 --decode 32
 
-Pass ``--no-reduced`` to run the full-size architecture. The multi-model
-request path (routing, group-by-model continuous batching) lives in
+Pass ``--no-reduced`` to run the full-size architecture; ``--spec-k K
+--draft-layers D`` adds a greedy speculative pass (truncated-depth
+draft proposes K tokens/step, the target verifies the whole chunk in
+one prefill dispatch) and checks it emits the identical token stream.
+The multi-model request path (routing, group-by-model continuous
+batching, per-cluster drafts, paged int8 pools) lives in
 ``repro.serve.gateway``.
 """
 from __future__ import annotations
@@ -21,6 +25,7 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import transformer as tf
+from repro.serve.draft import draft_config, truncate_lm_params
 
 
 def chunked_prefill(prefill, params, caches, prompts, chunk: int):
@@ -39,6 +44,42 @@ def chunked_prefill(prefill, params, caches, prompts, chunk: int):
     return logits, caches
 
 
+def spec_decode(cfg, params, caches, dcfg, dparams, dcaches, first_tok,
+                decode: int, k: int, window: int = 0):
+    """Greedy speculative loop over a (B,) batch: draft proposes ``k``
+    tokens per lane, the target verifies the [cur, d_1..d_k] chunk in
+    ONE prefill dispatch, and the batch advances by the MINIMUM lane
+    acceptance (``lm_spec_verify``'s shared n_keep — the single-model
+    driver's simplification; the gateway vmaps per-lane). Returns the
+    (B, >=decode) emitted token matrix plus (proposed, accepted)."""
+    B = first_tok.shape[0]
+    propose = jax.jit(
+        lambda p, prev, pk, cur, cs: tf.lm_spec_propose(
+            dcfg, p, prev, pk, cur, k, cs, window=window),
+        donate_argnums=(4,), static_argnums=())
+    verify = jax.jit(
+        lambda p, chunk, dr, cs: tf.lm_spec_verify(
+            cfg, p, chunk, dr, cs, window=window),
+        donate_argnums=(3,))
+    prev = jnp.zeros((B, k + 1), jnp.int32)
+    keep = jnp.asarray(0, jnp.int32)
+    cur = first_tok
+    emitted, proposed, accepted = [], 0, 0
+    n_out = 0
+    while n_out < decode:
+        props, dcaches = propose(dparams, prev, keep, cur, dcaches)
+        chunk = jnp.concatenate([cur, props], axis=1)
+        out, nk, caches = verify(params, chunk, props, caches)
+        nk_h = int(nk)
+        proposed += k
+        accepted += nk_h - 1
+        emitted.append(np.asarray(out[:, :nk_h]))
+        n_out += nk_h
+        prev, keep = chunk, nk
+        cur = out[:, nk_h - 1][:, None]
+    return np.concatenate(emitted, axis=1), proposed, accepted
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m")
@@ -52,6 +93,10 @@ def main() -> None:
                     help="prefill chunk length (one dispatch per chunk)")
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative tokens per step (0 = off)")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="draft depth for --spec-k (truncated target)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -75,6 +120,7 @@ def main() -> None:
     logits, caches = chunked_prefill(prefill, params, caches, prompts, chunk)
     jax.block_until_ready(logits)
     prefill_s = time.time() - t0
+    logits0 = logits
 
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
@@ -92,6 +138,38 @@ def main() -> None:
           f"({toks / max(decode_s, 1e-9):.1f} tok/s)")
     seq = jnp.concatenate(out, axis=1)
     print("sample token ids:", np.asarray(seq[0])[:16].tolist())
+
+    if args.spec_k:
+        k = args.spec_k
+        dcfg = draft_config(cfg, args.draft_layers)
+        dparams = truncate_lm_params(cfg, dcfg, params)
+        # headroom: each verify round writes a full k+1 chunk, so the
+        # last round may run past prompt+decode
+        scaches = tf.init_lm_caches(cfg, args.batch, max_len + k + 1,
+                                    window=args.window)
+        dcaches = tf.init_lm_caches(dcfg, args.batch, max_len + k + 1,
+                                    window=args.window)
+        _, scaches = chunked_prefill(prefill, params, scaches, prompts,
+                                     chunk)
+        dprefill = jax.jit(make_prefill_step(dcfg, window=args.window),
+                           donate_argnums=(1,))
+        _, dcaches = chunked_prefill(dprefill, dparams, dcaches, prompts,
+                                     chunk)
+        first = jnp.argmax(logits0, axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.time()
+        spec, proposed, accepted = spec_decode(
+            cfg, params, scaches, dcfg, dparams, dcaches, first,
+            args.decode, k, window=args.window)
+        spec_s = time.time() - t0
+        spec_seq = np.concatenate([np.asarray(first), spec], axis=1)
+        match = bool(np.array_equal(spec_seq[:, :args.decode + 1],
+                                    np.asarray(seq)))
+        rate = accepted / max(proposed, 1)
+        print(f"spec: k={k} draft_layers={dcfg.n_layers} "
+              f"{spec_s:.2f}s ({toks / max(spec_s, 1e-9):.1f} tok/s) "
+              f"acceptance={rate:.3f} match_vanilla={match}")
+        if not match:
+            raise SystemExit("speculative stream diverged from vanilla")
 
 
 if __name__ == "__main__":

@@ -229,6 +229,36 @@ def attention_prefill(params: Params, cfg: ArchConfig, x: jax.Array,
     return y, new_cache
 
 
+def attention_rollback(old: Params, full: Params, n_keep, S: int,
+                       window: int = 0) -> Params:
+    """Roll a speculative-verify chunk back to its first ``n_keep``
+    tokens (DESIGN.md §16). ``full`` is the cache after
+    ``attention_prefill`` of an ``S``-token chunk over ``old`` with
+    ``n_valid=S``; the result is bitwise the cache that the same prefill
+    with ``n_valid=n_keep`` (traced) would have produced — K/V
+    projections don't depend on ``n_valid``, so only the scatter mask
+    and the write index differ. Rejected positions' slots revert to
+    ``old`` (under a ring window that's the history they clobbered) and
+    the index retreats to ``idx + n_keep``. Leading stacked axes
+    (layers / shared-attention sites) broadcast through, so one call
+    rolls back a whole stacked segment."""
+    C = old["k"].shape[-3]
+    if S > C:
+        raise ValueError(f"verify chunk {S} exceeds cache slots {C}")
+    idx0 = jnp.min(old["index"]).astype(jnp.int32)
+    offs = jnp.arange(S, dtype=jnp.int32)
+    positions = idx0 + offs
+    slots = positions % C if window else positions
+    keep = jnp.zeros((C,), bool).at[slots].set(
+        offs < jnp.asarray(n_keep, jnp.int32), mode="drop")
+    return {
+        "k": jnp.where(keep[:, None, None], full["k"], old["k"]),
+        "v": jnp.where(keep[:, None, None], full["v"], old["v"]),
+        "pos": jnp.where(keep, full["pos"], old["pos"]),
+        "index": old["index"] + jnp.asarray(n_keep, jnp.int32),
+    }
+
+
 def attention_decode(params: Params, cfg: ArchConfig, x: jax.Array,
                      cache: Params, window: int = 0) -> Tuple[jax.Array, Params]:
     """One-token decode. x (B,1,d); cache as from ``init_kv_cache``."""

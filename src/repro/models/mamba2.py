@@ -186,3 +186,17 @@ def mamba2_decode(params: Params, cfg: ArchConfig, u: jax.Array,
     y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
     return out, {"ssm": h, "conv": conv_new}
+
+
+def mamba2_rollback(states: Params, n_keep, time_axis: int) -> Params:
+    """Select the recurrent state after ``n_keep`` consumed tokens from
+    a speculative verify's per-step collected states (DESIGN.md §16).
+    ``states`` stacks the POST-update state of every chunk step on
+    ``time_axis``, so step ``n_keep - 1`` (``n_keep >= 1``: the current
+    token is always consumed) is the state an ``n_keep``-token prefill
+    would have left behind — bitwise, because the prefill scan gates
+    per-step updates identically."""
+    i = jnp.asarray(n_keep, jnp.int32) - 1
+    return jax.tree.map(
+        lambda s: jax.lax.dynamic_index_in_dim(s, i, time_axis,
+                                               keepdims=False), states)

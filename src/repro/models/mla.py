@@ -160,6 +160,28 @@ def mla_prefill(params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
                "index": idx + n_adv}
 
 
+def mla_rollback(old: Params, full: Params, n_keep, S: int,
+                 window: int = 0) -> Params:
+    """Latent-cache analogue of ``attention.attention_rollback``: revert
+    a verify chunk's rejected slots (bitwise equal to ``mla_prefill``
+    with ``n_valid=n_keep``). Leading stacked axes broadcast through."""
+    C = old["c_kv"].shape[-2]
+    if S > C:
+        raise ValueError(f"verify chunk {S} exceeds cache slots {C}")
+    idx0 = jnp.min(old["index"]).astype(jnp.int32)
+    offs = jnp.arange(S, dtype=jnp.int32)
+    positions = idx0 + offs
+    slots = positions % C if window else positions
+    keep = jnp.zeros((C,), bool).at[slots].set(
+        offs < jnp.asarray(n_keep, jnp.int32), mode="drop")
+    return {
+        "c_kv": jnp.where(keep[:, None], full["c_kv"], old["c_kv"]),
+        "k_rope": jnp.where(keep[:, None], full["k_rope"], old["k_rope"]),
+        "pos": jnp.where(keep, full["pos"], old["pos"]),
+        "index": old["index"] + jnp.asarray(n_keep, jnp.int32),
+    }
+
+
 def mla_decode(params: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
                window: int = 0) -> Tuple[jax.Array, Params]:
     """Absorbed one-token decode. x (B,1,d)."""

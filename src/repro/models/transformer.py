@@ -155,8 +155,15 @@ def _decode_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
 def _prefill_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
                    cache: Params, window: int, n_valid,
                    mesh: Optional[jax.sharding.Mesh],
-                   dp_axes: Tuple[str, ...]) -> Tuple[jax.Array, Params]:
-    """Cache-filling chunk forward: append S tokens in one pass. x (B,S,d)."""
+                   dp_axes: Tuple[str, ...], collect: bool = False):
+    """Cache-filling chunk forward: append S tokens in one pass. x (B,S,d).
+
+    ``collect=True`` (the speculative-verify path) additionally returns
+    per-step recurrent states so the caller can roll the cache back to
+    an accept point: recurrent kinds stack each step's post-gate state
+    on a leading time axis; attention kinds return ``()`` — their
+    rollback merges old/full caches by slot mask instead (DESIGN.md
+    §16), which needs nothing collected."""
     if kind in (C.ATTN_MLP, C.ATTN_MOE, C.MLA_MLP, C.MLA_MOE):
         h = rmsnorm(params["norm1"], x, cfg.norm_eps)
         if kind in (C.MLA_MLP, C.MLA_MOE):
@@ -171,7 +178,7 @@ def _prefill_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
             f, _ = moe_mod.apply_moe(params["moe"], cfg, h, mesh, dp_axes)
         else:
             f = apply_mlp(params["mlp"], h)
-        return x + f, cache
+        return (x + f, cache, ()) if collect else (x + f, cache)
     # Recurrent kinds: one-token decode scanned over time inside the same
     # dispatch; state updates gated per-timestep so padded tail tokens of
     # the final chunk never advance the recurrence.
@@ -184,10 +191,13 @@ def _prefill_block(params: Params, cfg: ArchConfig, kind: str, x: jax.Array,
         y, nc = _decode_block(params, cfg, kind, xt[:, None, :], c, window,
                               mesh, dp_axes)
         nc = jax.tree.map(lambda new, old: jnp.where(t < nv, new, old), nc, c)
-        return nc, y[:, 0]
+        return nc, ((y[:, 0], nc) if collect else y[:, 0])
 
     cache, ys = jax.lax.scan(
         tstep, cache, (jnp.swapaxes(x, 0, 1), jnp.arange(S, dtype=jnp.int32)))
+    if collect:
+        ys, states = ys
+        return jnp.swapaxes(ys, 0, 1), cache, states
     return jnp.swapaxes(ys, 0, 1), cache
 
 
@@ -502,14 +512,21 @@ def lm_prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
                n_valid: Optional[jax.Array] = None,
                embeds: Optional[jax.Array] = None,
                mesh: Optional[jax.sharding.Mesh] = None,
-               dp_axes: Tuple[str, ...] = ("data",)) -> Tuple[jax.Array, Any]:
+               dp_axes: Tuple[str, ...] = ("data",),
+               collect_states: bool = False):
     """Chunked cache-filling prefill: one dispatch appends ``S`` tokens to
     every layer cache. tokens (B,S) -> (logits (B,S,V) fp32, caches).
 
     ``n_valid`` (traced scalar) marks how many leading tokens of a padded
     final chunk are real: attention lanes past it are dropped from the
     scatter and recurrent state updates are gated off, so the caller can
-    loop fixed-shape chunks without recompiling on the ragged tail."""
+    loop fixed-shape chunks without recompiling on the ragged tail.
+
+    ``collect_states=True`` returns ``(logits, caches, states)`` where
+    ``states`` mirrors the cache structure but holds per-timestep
+    recurrent states (time axis after the layer-stacking axes; attention
+    entries are ``()``) — the raw material ``lm_cache_rollback`` selects
+    from when speculative verify rejects a suffix of the chunk."""
     x = embed(params["embed"], tokens) if embeds is None else embeds
     x = x.astype(jnp.dtype(cfg.compute_dtype))
     if cfg.family == "hybrid":
@@ -520,6 +537,11 @@ def lm_prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
             group, lora, gcache, scache = xs
             def inner(c, xs2):
                 lp, lc = xs2
+                if collect_states:
+                    y2, nc, st = _prefill_block(lp, cfg, C.MAMBA2, c, lc,
+                                                window, n_valid, mesh,
+                                                dp_axes, collect=True)
+                    return y2, (nc, st)
                 y2, nc = _prefill_block(lp, cfg, C.MAMBA2, c, lc, window,
                                         n_valid, mesh, dp_axes)
                 return y2, nc
@@ -541,26 +563,151 @@ def lm_prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
                 site_body, x,
                 (params["mamba_groups"], lora, caches["groups"],
                  caches["shared"]))
+        stg = None
+        if collect_states:
+            ncg, stg = ncg
         new_caches: Dict[str, Any] = {"groups": ncg, "shared": ncs}
+        states: Dict[str, Any] = {"groups": stg}
         if "tail" in caches:
             def inner3(c, xs2):
                 lp, lc = xs2
+                if collect_states:
+                    y2, nc, st = _prefill_block(lp, cfg, C.MAMBA2, c, lc,
+                                                window, n_valid, mesh,
+                                                dp_axes, collect=True)
+                    return y2, (nc, st)
                 y2, nc = _prefill_block(lp, cfg, C.MAMBA2, c, lc, window,
                                         n_valid, mesh, dp_axes)
                 return y2, nc
             x, nct = jax.lax.scan(inner3, x, (params["mamba_tail"],
                                               caches["tail"]))
+            if collect_states:
+                nct, states["tail"] = nct
             new_caches["tail"] = nct
+        if collect_states:
+            return _logits(cfg, params, x), new_caches, states
         return _logits(cfg, params, x), new_caches
 
     new_list = []
+    state_list = []
     for stacked, cache, (kind, _n) in zip(params["segments"], caches,
                                           segments(cfg)):
         def body(carry, xs, kind=kind):
             lp, lc = xs
+            if collect_states:
+                y, nc, st = _prefill_block(lp, cfg, kind, carry, lc, window,
+                                           n_valid, mesh, dp_axes,
+                                           collect=True)
+                return y, (nc, st)
             y, nc = _prefill_block(lp, cfg, kind, carry, lc, window, n_valid,
                                    mesh, dp_axes)
             return y, nc
         x, nc = jax.lax.scan(body, x, (stacked, cache))
+        if collect_states:
+            nc, st = nc
+            state_list.append(st)
         new_list.append(nc)
+    if collect_states:
+        return _logits(cfg, params, x), new_list, state_list
     return _logits(cfg, params, x), new_list
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+def lm_cache_rollback(cfg: ArchConfig, old: Any, full: Any, states: Any,
+                      n_keep, S: int, window: int = 0) -> Any:
+    """Roll a verify chunk's caches back to its first ``n_keep`` tokens.
+
+    ``old`` is the cache BEFORE the verify prefill, ``full``/``states``
+    the cache and collected per-step states AFTER it (``lm_prefill``
+    with ``collect_states=True`` over an ``S``-token chunk). Attention
+    caches merge old/full per slot (prefill K/V values don't depend on
+    ``n_valid``, only the scatter mask does, so the merge is bitwise
+    identical to a prefill with ``n_valid=n_keep``); recurrent caches
+    select the state after step ``n_keep``. Requires ``n_keep >= 1``."""
+    if cfg.family == "hybrid":
+        out: Dict[str, Any] = {
+            "groups": mb.mamba2_rollback(states["groups"], n_keep, 2),
+            "shared": attn.attention_rollback(old["shared"], full["shared"],
+                                              n_keep, S,
+                                              window or cfg.sliding_window),
+        }
+        if "tail" in old:
+            out["tail"] = mb.mamba2_rollback(states["tail"], n_keep, 1)
+        return out
+    new_list = []
+    for old_c, full_c, st, (kind, _n) in zip(old, full, states,
+                                             segments(cfg)):
+        if kind in (C.ATTN_MLP, C.ATTN_MOE):
+            new_list.append(attn.attention_rollback(old_c, full_c, n_keep, S,
+                                                    window))
+        elif kind in (C.MLA_MLP, C.MLA_MOE):
+            new_list.append(mla_mod.mla_rollback(old_c, full_c, n_keep, S,
+                                                 window))
+        elif kind == C.MAMBA2:
+            new_list.append(mb.mamba2_rollback(st, n_keep, 1))
+        else:  # MLSTM / SLSTM
+            new_list.append(xl.xlstm_rollback(st, n_keep, 1))
+    return new_list
+
+
+def lm_spec_verify(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                   draft: jax.Array, caches: Any, window: int = 0,
+                   sample_fn=None,
+                   mesh: Optional[jax.sharding.Mesh] = None,
+                   dp_axes: Tuple[str, ...] = ("data",)):
+    """Verify a speculative chunk in ONE chunked forward.
+
+    ``tokens`` (B, S=k+1) is ``[cur, d_1..d_k]`` — the last emitted token
+    followed by the draft's k proposals; ``draft`` (B, k) is
+    ``[d_1..d_k]``. The target prefills the whole chunk, emits its own
+    next-token choice at every position (argmax, or ``sample_fn(logits)
+    -> (B, S) int32``), and accepts the longest prefix of draft tokens
+    that match. Returns ``(out (B,S), n_keep scalar, caches)`` where
+    ``n_keep = 1 + accepted`` is how many chunk tokens the rolled-back
+    caches consumed; the caller emits ``out[:, :n_keep]`` and feeds
+    ``out[:, n_keep-1]`` as the next round's ``cur``. ``n_keep`` is the
+    batch min so a multi-lane caller should vmap with B=1 per lane."""
+    S = tokens.shape[1]
+    logits, full, states = lm_prefill(cfg, params, tokens, caches,
+                                      window=window, mesh=mesh,
+                                      dp_axes=dp_axes, collect_states=True)
+    if sample_fn is None:
+        out = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        out = sample_fn(logits).astype(jnp.int32)
+    ok = (draft == out[:, :-1]).astype(jnp.int32)
+    acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)
+    n_keep = 1 + jnp.min(acc)
+    new_caches = lm_cache_rollback(cfg, caches, full, states, n_keep, S,
+                                   window)
+    return out, n_keep, new_caches
+
+
+def lm_spec_propose(cfg: ArchConfig, params: Params, prev_tokens: jax.Array,
+                    prev_keep, cur: jax.Array, k: int, caches: Any,
+                    window: int = 0,
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    dp_axes: Tuple[str, ...] = ("data",)):
+    """Draft-side fused commit + propose: one call per spec round.
+
+    First commits the PREVIOUS round's chunk ``prev_tokens`` (B, S) into
+    the draft caches with ``n_valid=prev_keep`` (0 is a safe no-op, for
+    the first round), then greedily decodes ``k`` proposals starting
+    from ``cur`` (B, 1). Only the committed cache is returned — the
+    proposal decode's cache side-effects are discarded, since the next
+    round's commit re-derives the accepted prefix exactly. Returns
+    ``(proposals (B, k), caches)``."""
+    _, caches = lm_prefill(cfg, params, prev_tokens, caches, window=window,
+                           n_valid=prev_keep, mesh=mesh, dp_axes=dp_axes)
+
+    def pstep(carry, _):
+        tok, cs = carry
+        lg, cs = lm_decode(cfg, params, tok, cs, window=window, mesh=mesh,
+                           dp_axes=dp_axes)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, cs), nxt[:, 0]
+
+    (_, _), props = jax.lax.scan(pstep, (cur, caches), None, length=k)
+    return jnp.moveaxis(props, 0, 1), caches

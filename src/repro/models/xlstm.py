@@ -253,3 +253,13 @@ def slstm_decode(params: Params, cfg: ArchConfig, x: jax.Array,
     f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, params["w_ff1"]))
     out = jnp.einsum("bsf,fd->bsd", f, params["w_ff2"])
     return out, {"c": c, "n": n, "m": m, "h": h}
+
+
+def xlstm_rollback(states: Params, n_keep, time_axis: int) -> Params:
+    """mLSTM/sLSTM analogue of ``mamba2.mamba2_rollback``: pick the
+    post-update recurrent state of verify-chunk step ``n_keep - 1`` out
+    of the per-step states collected on ``time_axis``."""
+    i = jnp.asarray(n_keep, jnp.int32) - 1
+    return jax.tree.map(
+        lambda s: jax.lax.dynamic_index_in_dim(s, i, time_axis,
+                                               keepdims=False), states)

@@ -59,14 +59,24 @@ class ModelGroup:
     decode dispatch. Finished requests free lanes mid-stream; the
     gateway re-admits from the queue in the same step."""
 
-    def __init__(self, model_id: int, pool: KVPool):
+    def __init__(self, model_id: int, pool: KVPool,
+                 draft_pool: Optional[KVPool] = None, spec_k: int = 0):
         self.model = model_id
         self.pool = pool
+        self.draft_pool = draft_pool
+        self.spec_k = spec_k
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.cur_tok = np.zeros((pool.lanes,), np.int32)
         self.steps = 0               # decode dispatches issued
         self.lane_steps = 0          # sum of active lanes over dispatches
+        # speculative-decode lane state: the chunk the draft committed
+        # last round ([cur, d_1..d_k]) and how many of its tokens the
+        # verifier kept (0 = nothing pending, e.g. right after admit)
+        self.prev_chunk = np.zeros((pool.lanes, spec_k + 1), np.int32)
+        self.prev_keep = np.zeros((pool.lanes,), np.int32)
+        self.spec_proposed = 0       # draft tokens proposed (active lanes)
+        self.spec_accepted = 0       # of those, accepted by the verifier
 
     @property
     def live_lanes(self) -> int:
@@ -84,6 +94,7 @@ class ModelGroup:
         req.tokens.append(int(first_token))
         req.first_token_t = time.perf_counter() if now is None else now
         self.cur_tok[lane] = int(first_token)
+        self.prev_keep[lane] = 0     # fresh lane: nothing to commit
         self.active[lane] = req
 
     def finish(self, lane: int, now: Optional[float] = None) -> Request:
@@ -92,6 +103,9 @@ class ModelGroup:
         req.done_t = time.perf_counter() if now is None else now
         req.lane = -1
         self.pool.release(lane)
+        if self.draft_pool is not None:
+            self.draft_pool.release(lane)
+        self.prev_keep[lane] = 0
         return req
 
     def evict_all(self) -> List[Request]:
@@ -103,6 +117,9 @@ class ModelGroup:
             req = self.active.pop(lane)
             req.lane = -1
             self.pool.release(lane)
+            if self.draft_pool is not None:
+                self.draft_pool.release(lane)
+            self.prev_keep[lane] = 0
             out.append(req)
         out.extend(self.queue)
         self.queue.clear()
@@ -113,3 +130,9 @@ class ModelGroup:
         if self.steps == 0:
             return 0.0
         return self.lane_steps / (self.steps * self.pool.lanes)
+
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the verifier accepted."""
+        if self.spec_proposed == 0:
+            return 0.0
+        return self.spec_accepted / self.spec_proposed

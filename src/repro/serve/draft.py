@@ -1,0 +1,160 @@
+"""Cluster-shared draft models for speculative decoding (DESIGN.md §16).
+
+FedCD's clone/delete population means every live model is one cluster's
+preferred model — so one small draft per cluster is the natural unit.
+Drafts here are truncated-depth siblings: the leading ``draft_layers``
+layers of the target (weights SHARED by construction — a layer-sliced
+view of the target's own rows, re-derived each round), plus the target's
+embedding/final-norm/head. That keeps the draft's vocabulary and
+residual geometry identical to the target's, which is what acceptance
+rate lives on, and makes "training" the draft free: refreshing the
+truncation after each federated round IS the draft update.
+
+:class:`DraftBank` mirrors the registry's :class:`~repro.core.registry.
+StackedParamBank` row layout (same ``row_of`` indices), so the gateway
+reads draft rows with the same in-jit ``tree_map(lambda a: a[row])``
+pattern it uses for target rows. Rows are population state: refreshed
+per round, snapshotted/restored with the trainer checkpoint, and
+released when their cluster's target is deleted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import transformer as tf
+
+
+def draft_depth(cfg: ArchConfig, draft_layers: int) -> int:
+    """The effective draft depth for ``cfg``: ``draft_layers`` clamped
+    to the target's depth and, for the hybrid family, snapped so the
+    truncation maps onto whole shared-attention sites (a site = ``every``
+    mamba layers + the shared block) plus at most the target's own tail.
+    """
+    if draft_layers <= 0:
+        raise ValueError(f"draft_layers must be positive: {draft_layers}")
+    d = min(draft_layers, cfg.n_layers)
+    if cfg.family != "hybrid":
+        return d
+    every = cfg.shared_attn_every
+    n_sites = cfg.n_layers // every
+    n_tail = cfg.n_layers - n_sites * every
+    d_sites = max(1, min(d // every, n_sites))
+    d_tail = min(max(d - d_sites * every, 0), n_tail)
+    return d_sites * every + d_tail
+
+
+def draft_config(cfg: ArchConfig, draft_layers: int) -> ArchConfig:
+    """The truncated-depth sibling's config: same family/width/vocab,
+    ``draft_depth`` layers, layout equal to ``cfg.layout()`` truncated —
+    so a draft cache is a plain ``init_lm_caches(draft_config(...))``
+    and the draft params are leading-row slices of the target's."""
+    d = draft_depth(cfg, draft_layers)
+    kw: dict = {"n_layers": d, "mtp": False}
+    if cfg.family == "ssm":
+        sl = tuple(i for i in cfg.xlstm.slstm_layers if i < d)
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, slstm_layers=sl)
+    dcfg = dataclasses.replace(cfg, **kw)
+    assert dcfg.layout() == cfg.layout()[:d], \
+        "draft layout is not a prefix of the target layout"
+    return dcfg
+
+
+def truncate_lm_params(cfg: ArchConfig, dcfg: ArchConfig,
+                       params: Any) -> Any:
+    """Slice a target param tree down to its draft: leading layer rows
+    of every stacked segment plus the full embedding/norm/head. Pure
+    slicing — no copies beyond what ``a[:n]`` gathers — so the draft is
+    exactly the target's own lower stack."""
+    out = {"embed": params["embed"], "final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        out["lm_head"] = params["lm_head"]
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_sites_d = dcfg.n_layers // every
+        n_tail_d = dcfg.n_layers - n_sites_d * every
+        out["mamba_groups"] = jax.tree.map(lambda a: a[:n_sites_d],
+                                           params["mamba_groups"])
+        if n_tail_d:
+            out["mamba_tail"] = jax.tree.map(lambda a: a[:n_tail_d],
+                                             params["mamba_tail"])
+        out["shared"] = params["shared"]
+        if "lora" in params:
+            out["lora"] = jax.tree.map(lambda a: a[:n_sites_d],
+                                       params["lora"])
+        return out
+    segs = []
+    remaining = dcfg.n_layers
+    for stacked, (_kind, n) in zip(params["segments"], tf.segments(cfg)):
+        take = min(n, remaining)
+        if take <= 0:
+            break
+        segs.append(jax.tree.map(lambda a: a[:take], stacked))
+        remaining -= take
+    out["segments"] = segs
+    return out
+
+
+class DraftBank:
+    """Stacked draft rows mirroring the target bank's row layout.
+
+    ``tree`` holds ``m_cap`` draft rows; a live model's draft sits at
+    the SAME row index the target bank's ``row_of`` maps it to, so one
+    gateway row read serves both. ``refresh`` re-derives every live
+    draft from the current target rows (per-round draft "training"),
+    pre-warms clones the moment their row lands (genealogy for free —
+    a clone's row IS the parent's weights until it diverges), and
+    releases drafts of deleted models.
+    """
+
+    def __init__(self, cfg: ArchConfig, draft_layers: int, m_cap: int):
+        self.cfg = cfg
+        self.draft_layers = draft_layers
+        self.dcfg = draft_config(cfg, draft_layers)
+        self.m_cap = m_cap
+        one = tf.init_lm(self.dcfg, jax.random.PRNGKey(0))
+        self.tree = jax.tree.map(
+            lambda a: jnp.zeros((m_cap,) + a.shape, a.dtype), one)
+        self.present: Set[int] = set()
+        self.refreshed = 0
+        self.released = 0
+
+    @staticmethod
+    def _row_of(bank: Any, m: int) -> int:
+        row_of = getattr(bank, "row_of", None)
+        return row_of[m] if row_of is not None else m
+
+    def row(self, registry: Any, m: int) -> int:
+        return self._row_of(registry.params, m)
+
+    def refresh(self, registry: Any,
+                params_of: Optional[Any] = None
+                ) -> Tuple[List[int], List[int]]:
+        """Reconcile drafts with the live population: re-truncate every
+        live model's row, drop dead models'. ``params_of(m)`` overrides
+        how target params are read (executors with retired-row reuse
+        pass their own accessor). Returns (added_ids, dropped_ids)."""
+        bank = registry.params
+        live = set(registry.live_ids())
+        dropped = sorted(self.present - live)
+        for m in dropped:
+            self.present.discard(m)
+            self.released += 1
+        added = sorted(live - self.present)
+        for m in sorted(live):
+            src = params_of(m) if params_of is not None else bank[m]
+            row = truncate_lm_params(self.cfg, self.dcfg, src)
+            r = self._row_of(bank, m)
+            self.tree = jax.tree.map(lambda a, x: a.at[r].set(x),
+                                     self.tree, row)
+            self.present.add(m)
+            self.refreshed += 1
+        return added, dropped
+
+    def nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.tree))

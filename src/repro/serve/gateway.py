@@ -24,6 +24,22 @@ Three pieces:
   routed request, released on delete, pre-warmed for clones via the
   registry genealogy; a released pool's in-flight requests re-route and
   re-prefill their full context on the successor model.
+
+PR 10 (DESIGN.md §16) adds three layers on top:
+
+* speculative decoding (``spec_k``): each model group carries a
+  cluster-shared truncated-depth draft (``serve.draft.DraftBank``, rows
+  mirroring the target bank's layout) that proposes k tokens per lane
+  per round in one fused commit+propose dispatch; the target verifies
+  all k lanes×tokens in ONE vmapped chunked prefill with in-jit accept
+  counting and cache rollback. Greedy spec decode is bit-identical to
+  vanilla greedy decode.
+* paged int8 KV pools (``paged=True``): ring-slot cache leaves live in
+  shared per-family page arenas as int8 rows + f16 scales; draft and
+  target pools draw from the same arenas.
+* admission control: bounded gateway queue (``max_queue``) and a per-
+  device token bucket (``rate_limit`` tokens/sec, ``rate_burst``
+  capacity) in ``submit``, rejecting with :class:`OverloadError`.
 """
 from __future__ import annotations
 
@@ -39,12 +55,19 @@ from repro.core.registry import StackedParamBank
 from repro.core.scores import normalized_scores
 from repro.models import transformer as tf
 from repro.serve.batcher import ModelGroup, Request
+from repro.serve.draft import DraftBank
 from repro.serve.kv_pool import KVPoolManager
 
 
 class RequestRejected(Exception):
     """The gateway cannot serve this request (unknown/departed device,
     no live preferred model, or capacity exceeded)."""
+
+
+class OverloadError(RequestRejected):
+    """Admission control rejected the request: the gateway queue is at
+    capacity or the device exceeded its token-rate budget. Transient —
+    the client should back off and retry."""
 
 
 class RoutingTable:
@@ -128,7 +151,12 @@ class ServeGateway:
                  lanes: int = 8, chunk: int = 16, window: int = 0,
                  eos_id: Optional[int] = None, top_k: int = 0,
                  seed: int = 0,
-                 present_fn: Optional[Callable[[int], bool]] = None):
+                 present_fn: Optional[Callable[[int], bool]] = None,
+                 spec_k: int = 0, draft: Optional[DraftBank] = None,
+                 draft_layers: int = 0, paged: bool = False,
+                 page_slots: int = 8, max_queue: int = 0,
+                 rate_limit: float = 0.0, rate_burst: float = 0.0,
+                 clock: Optional[Callable[[], float]] = None):
         if not isinstance(registry.params, StackedParamBank):
             raise ValueError(
                 "ServeGateway needs a stacked param bank "
@@ -140,7 +168,9 @@ class ServeGateway:
         self.max_len = max_len
         self.eos_id = eos_id
         self.routing = RoutingTable(registry, state_fn, present_fn)
-        self.pools = KVPoolManager(cfg, lanes, max_len, window=window)
+        self.paged = paged
+        self.pools = KVPoolManager(cfg, lanes, max_len, window=window,
+                                   paged=paged, page_slots=page_slots)
         self.groups: Dict[int, ModelGroup] = {}
         self._sample = self._make_sample(top_k)
         self._prefill = jax.jit(self._prefill_fn)
@@ -151,6 +181,43 @@ class ServeGateway:
         self._next_rid = 0
         self.dispatches = 0          # decode dispatches (all groups)
         self.tokens_out = 0          # generated tokens (incl. prefill's)
+        # -- speculative decoding (DESIGN.md §16) --------------------------
+        if spec_k:
+            lim = min(max_len, window) if window else max_len
+            if spec_k + 1 > lim:
+                raise ValueError(
+                    f"spec_k {spec_k} + 1 exceeds cache slots {lim}")
+            if draft is None:
+                if not draft_layers:
+                    raise ValueError("spec_k needs a DraftBank: pass "
+                                     "draft= or draft_layers=")
+                draft = DraftBank(cfg, draft_layers, registry.m_cap)
+                draft.refresh(registry)
+        self.spec_k = spec_k
+        self.draft = draft if spec_k else None
+        self.draft_pools: Optional[KVPoolManager] = None
+        self.spec_rounds = 0
+        if spec_k:
+            # draft pools draw from the SAME page arenas as the target's
+            # ("one arena per model family"), so a request's draft +
+            # target caches pack together
+            self.draft_pools = KVPoolManager(
+                self.draft.dcfg, lanes, max_len, window=window,
+                paged=paged, page_slots=page_slots,
+                arenas=self.pools.arenas if paged else None)
+            self._draft_prefill = jax.jit(self._draft_prefill_fn)
+            self._draft_propose = jax.jit(self._draft_propose_fn,
+                                          donate_argnums=(2,))
+            self._verify = jax.jit(self._verify_fn, donate_argnums=(2,))
+        # -- admission control ---------------------------------------------
+        self.max_queue = max_queue            # 0 = unbounded
+        self.rate_limit = float(rate_limit)   # tokens/sec/device; 0 = off
+        self.rate_burst = (float(rate_burst) if rate_burst
+                           else 2.0 * float(rate_limit))
+        self._clock = clock if clock is not None else time.monotonic
+        self._buckets: Dict[int, Tuple[float, float]] = {}
+        self.rejected_overload = 0
+        self.rejected_rate = 0
 
     # -- jitted device-side pieces ----------------------------------------
     @staticmethod
@@ -195,11 +262,61 @@ class ServeGateway:
     def _insert_fn(stacked, single, lane):
         return jax.tree.map(lambda P, c: P.at[lane].set(c), stacked, single)
 
+    def _draft_prefill_fn(self, draft_tree, row, cache, tokens, n_valid):
+        params = self._row_params(draft_tree, row)
+        nv = jnp.asarray(n_valid, jnp.int32)
+        _, cache = tf.lm_prefill(self.draft.dcfg, params, tokens, cache,
+                                 window=self.window, n_valid=nv)
+        return cache
+
+    def _draft_propose_fn(self, draft_tree, row, dstacked, prev_chunks,
+                          prev_keeps, cur_toks):
+        """Fused draft round: commit the previous chunk's accepted
+        prefix (n_valid=prev_keep; 0 is a no-op) then greedily propose
+        k tokens per lane. One dispatch for the whole group."""
+        params = self._row_params(draft_tree, row)
+
+        def one_lane(cache, prev, pk, cur):
+            props, cache = tf.lm_spec_propose(
+                self.draft.dcfg, params, prev[None], pk, cur[None, None],
+                self.spec_k, cache, window=self.window)
+            return cache, props[0]
+
+        new_stacked, props = jax.vmap(one_lane)(dstacked, prev_chunks,
+                                                prev_keeps, cur_toks)
+        return new_stacked, props
+
+    def _verify_fn(self, bank_tree, row, stacked, chunks, keys):
+        """Grouped verify: every lane's (k+1)-token chunk through ONE
+        vmapped chunked prefill; per-lane accept count + in-jit cache
+        rollback of the rejected suffix."""
+        params = self._row_params(bank_tree, row)
+        S = self.spec_k + 1
+
+        def one_lane(cache, chunk, key):
+            def sf(lg):                       # (1, S, V) -> (1, S)
+                ks = jax.random.split(key, S)
+                out = jax.vmap(self._sample)(jnp.swapaxes(lg, 0, 1), ks)
+                return jnp.swapaxes(out, 0, 1)
+            out, nk, cache = tf.lm_spec_verify(
+                self.cfg, params, chunk[None], chunk[None, 1:], cache,
+                window=self.window, sample_fn=sf)
+            return cache, (out[0], nk)
+
+        new_stacked, (outs, nks) = jax.vmap(one_lane)(stacked, chunks, keys)
+        return new_stacked, outs, nks
+
     def _next_key(self):
         if not self._top_k:
             return self._key            # greedy ignores it — keep static
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    def _next_keys(self, n: int):
+        if not self._top_k:
+            return jnp.broadcast_to(self._key, (n,) + self._key.shape)
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return jnp.stack(subs)
 
     # -- request path ------------------------------------------------------
     def submit(self, device: int, prompt: Any, max_new: int) -> Request:
@@ -213,7 +330,29 @@ class ServeGateway:
             raise RequestRejected(
                 f"prompt {prompt.size} + max_new {max_new} exceeds "
                 f"max_len {self.max_len} (no ring window)")
+        if self.max_queue:
+            queued = sum(len(g.queue) for g in self.groups.values())
+            if queued >= self.max_queue:
+                self.rejected_overload += 1
+                raise OverloadError(
+                    f"gateway queue full ({queued} >= {self.max_queue})")
         model = self.routing.resolve(device)
+        if self.rate_limit:
+            # token bucket per device: a request costs its whole token
+            # footprint (prompt + decode budget) up front
+            cost = float(prompt.size + max_new)
+            now = self._clock()
+            avail, last = self._buckets.get(device, (self.rate_burst, None))
+            if last is not None:
+                avail = min(self.rate_burst,
+                            avail + (now - last) * self.rate_limit)
+            if cost > avail:
+                self._buckets[device] = (avail, now)
+                self.rejected_rate += 1
+                raise OverloadError(
+                    f"device {device} over token-rate limit: cost "
+                    f"{cost:.0f} > {avail:.1f} available")
+            self._buckets[device] = (avail - cost, now)
         req = Request(rid=self._next_rid, device=device, prompt=prompt,
                       max_new=max_new, submit_t=time.perf_counter())
         self._next_rid += 1
@@ -223,7 +362,12 @@ class ServeGateway:
     def _enqueue(self, req: Request, model: int) -> None:
         group = self.groups.get(model)
         if group is None:
-            group = ModelGroup(model, self.pools.get(model))
+            draft_pool, k = None, 0
+            if self.spec_k and model in self.draft.present:
+                draft_pool = self.draft_pools.get(model)
+                k = self.spec_k
+            group = ModelGroup(model, self.pools.get(model),
+                               draft_pool=draft_pool, spec_k=k)
             self.groups[model] = group
         group.queue.append(req)
         self._admit(group)
@@ -238,14 +382,23 @@ class ServeGateway:
 
     def _admit(self, group: ModelGroup) -> List[Request]:
         """Fill free lanes from the queue: chunked prefill at batch 1
-        into a fresh cache, one lane scatter, first token recorded."""
-        finished = []
+        into a fresh cache, one lane scatter, first token recorded. In
+        spec mode the draft cache prefills the same context and lands
+        in the lockstep draft-pool lane."""
+        finished: List[Request] = []
+        if not (group.queue and group.pool.free_lanes):
+            return finished
         bank = self.registry.params
         row = jnp.asarray(bank.row_of[group.model], jnp.int32)
+        stacked = group.pool.read()
+        dstacked = (group.draft_pool.read() if group.draft_pool is not None
+                    else None)
         while group.queue and group.pool.free_lanes:
             req = group.queue.popleft()
             ctx = self._context(req)
             cache = group.pool.template
+            dcache = (group.draft_pool.template
+                      if group.draft_pool is not None else None)
             tok = None
             for s in range(0, ctx.size, self.chunk):
                 part = ctx[s:s + self.chunk]
@@ -256,14 +409,25 @@ class ServeGateway:
                     bank.tree, row, cache, jnp.asarray(part[None]),
                     nv, self._next_key())
                 self.dispatches += 1
+                if dcache is not None:
+                    dcache = self._draft_prefill(
+                        self.draft.tree, row, dcache,
+                        jnp.asarray(part[None]), nv)
+                    self.dispatches += 1
             lane = group.pool.acquire()
-            group.pool.stacked = self._insert(group.pool.stacked, cache,
-                                              lane)
+            stacked = self._insert(stacked, cache, lane)
+            if dcache is not None:
+                dlane = group.draft_pool.acquire()
+                assert dlane == lane, "draft/target lane desync"
+                dstacked = self._insert(dstacked, dcache, dlane)
             first = int(np.asarray(tok)[0])
             group.admit(req, lane, first)
             self.tokens_out += 1
             if len(req.tokens) >= req.max_new or first == self.eos_id:
                 finished.append(group.finish(lane))
+        group.pool.write(stacked)
+        if dstacked is not None:
+            group.draft_pool.write(dstacked)
         return finished
 
     def step(self) -> List[Request]:
@@ -278,10 +442,16 @@ class ServeGateway:
                 if group.queue:
                     finished.extend(self._admit(group))
                 continue
+            if group.spec_k:
+                finished.extend(self._spec_step(group))
+                finished.extend(self._admit(group))
+                continue
             row = jnp.asarray(bank.row_of[model], jnp.int32)
-            group.pool.stacked, nxt = self._decode(
-                bank.tree, row, group.pool.stacked,
+            work = group.pool.read()
+            work, nxt = self._decode(
+                bank.tree, row, work,
                 jnp.asarray(group.cur_tok), self._next_key())
+            group.pool.write(work)
             self.dispatches += 1
             group.steps += 1
             group.lane_steps += len(group.active)
@@ -296,6 +466,53 @@ class ServeGateway:
                 else:
                     group.cur_tok[lane] = t
             finished.extend(self._admit(group))
+        return finished
+
+    def _spec_step(self, group: ModelGroup) -> List[Request]:
+        """One speculative round for a group: ONE draft dispatch
+        (commit previous accepted prefix + propose k per lane) and ONE
+        target dispatch (verify all k via chunked prefill + rollback),
+        emitting 1..k+1 tokens per lane."""
+        finished: List[Request] = []
+        bank = self.registry.params
+        row = jnp.asarray(bank.row_of[group.model], jnp.int32)
+        k = group.spec_k
+        dwork = group.draft_pool.read()
+        dwork, props = self._draft_propose(
+            self.draft.tree, row, dwork, jnp.asarray(group.prev_chunk),
+            jnp.asarray(group.prev_keep), jnp.asarray(group.cur_tok))
+        group.draft_pool.write(dwork)
+        chunks = np.concatenate(
+            [group.cur_tok[:, None], np.asarray(props)], axis=1)
+        work = group.pool.read()
+        work, outs, nks = self._verify(
+            bank.tree, row, work, jnp.asarray(chunks),
+            self._next_keys(group.pool.lanes))
+        group.pool.write(work)
+        self.dispatches += 2
+        self.spec_rounds += 1
+        group.steps += 1
+        group.lane_steps += len(group.active)
+        outs_h, nks_h = np.asarray(outs), np.asarray(nks)
+        for lane in sorted(group.active):
+            req = group.active[lane]
+            nk = int(nks_h[lane])
+            group.spec_proposed += k
+            group.spec_accepted += nk - 1
+            group.prev_chunk[lane] = chunks[lane]
+            group.prev_keep[lane] = nk
+            done = False
+            for t in outs_h[lane, :nk]:
+                t = int(t)
+                req.tokens.append(t)
+                self.tokens_out += 1
+                if len(req.tokens) >= req.max_new or t == self.eos_id:
+                    finished.append(group.finish(lane))  # resets prev_keep
+                    done = True
+                    break
+                group.cur_tok[lane] = t
+            if not done:
+                group.cur_tok[lane] = int(req.tokens[-1])
         return finished
 
     def drain(self, max_steps: int = 10_000) -> List[Request]:
@@ -316,7 +533,14 @@ class ServeGateway:
         successor model, counted in ``Request.rerouted``); requests whose
         device no longer maps to any live model fail cleanly."""
         self.routing.invalidate()     # scores moved since last round
+        if self.draft is not None:
+            # drafts are population state: re-truncate live models'
+            # rows (clones pre-warm — their row is the parent's weights
+            # until divergence), drop deleted models' drafts
+            self.draft.refresh(self.registry)
         prewarmed, released = self.pools.sync(self.registry)
+        if self.draft_pools is not None:
+            self.draft_pools.sync(self.registry)
         orphans: List[Request] = []
         for m in released:
             group = self.groups.pop(m, None)
@@ -338,17 +562,43 @@ class ServeGateway:
 
     # -- introspection -----------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        return {
+        pools: Dict[str, Any] = {
+            "live": len(self.pools.pools),
+            "created": self.pools.created,
+            "released": self.pools.released,
+            # reserved: dense trees / whole shared arenas (draft pages
+            # included when spec+paged — the arenas are shared);
+            # in_use: bytes mapped by occupied lanes only
+            "bytes": self.pools.nbytes(),
+            "bytes_in_use": self.pools.nbytes_in_use()}
+        if self.paged:
+            pools["pages"] = self.pools.page_stats()
+        out: Dict[str, Any] = {
             "dispatches": self.dispatches,
             "tokens_out": self.tokens_out,
             "routing": {"hits": self.routing.hits,
                         "rebuilds": self.routing.rebuilds,
                         "invalidations": self.routing.invalidations},
-            "pools": {"live": len(self.pools.pools),
-                      "created": self.pools.created,
-                      "released": self.pools.released,
-                      "bytes": self.pools.nbytes()},
+            "pools": pools,
+            "admission": {"rejected_overload": self.rejected_overload,
+                          "rejected_rate": self.rejected_rate},
             "batching_efficiency": {
                 m: round(g.batching_efficiency(), 4)
                 for m, g in self.groups.items()},
         }
+        if self.spec_k:
+            proposed = sum(g.spec_proposed for g in self.groups.values())
+            accepted = sum(g.spec_accepted for g in self.groups.values())
+            out["spec"] = {
+                "k": self.spec_k,
+                "rounds": self.spec_rounds,
+                "proposed": proposed,
+                "accepted": accepted,
+                "acceptance_rate": (accepted / proposed if proposed
+                                    else 0.0),
+                "draft_layers": self.draft.dcfg.n_layers,
+                "draft_models": len(self.draft.present),
+                "draft_bytes": self.draft.nbytes(),
+                "draft_pool_bytes_in_use":
+                    self.draft_pools.nbytes_in_use()}
+        return out

@@ -1,31 +1,163 @@
-"""Per-model KV/state cache pools for the serving gateway (DESIGN.md §15).
+"""Per-model KV/state cache pools for the serving gateway (DESIGN.md
+§15, paged int8 storage §16).
 
-Each live model is backed by ONE :class:`KVPool`: a stacked pytree of
-``lanes`` single-request decode caches (each the ``batch=1`` layout from
-``models.transformer.init_lm_caches``, ring-buffer window included), so
-a model group's whole decode batch is one device-resident tree and a
-request's admission/retirement is a single lane index — no per-request
-cache allocation on the hot path.
+Each live model is backed by ONE pool of ``lanes`` single-request decode
+caches (each the ``batch=1`` layout from ``models.transformer.
+init_lm_caches``), so a model group's whole decode batch is one
+device-resident tree and a request's admission/retirement is a single
+lane index. Two storage backends share the interface:
+
+* :class:`KVPool` — dense: the stacked tree is resident at compute
+  dtype; ``read``/``write`` are free passthroughs.
+* :class:`PagedKVPool` — paged int8: ring-slot leaves (attention K/V,
+  MLA latents) are stored as fixed-size pages of int8 rows + one f16
+  scale per slot, allocated from a :class:`PageArena` shared across
+  every pool of the same model family (target AND draft pools draw from
+  the same arenas), with quantize-on-write / dequantize-on-read fused
+  into jitted converters. Recurrent states / positions / ring indices
+  are the dense residue — they are O(1) per lane, not O(max_len).
+
+The quantization contract matches ``kernels.quantize.ref`` (symmetric,
+``s = max|x_block| / 127``, block = one flattened slot row) with f16
+scale storage; because a written row's max-magnitude element always
+lands on ±127, re-quantizing a dequantized pool is bit-stable after the
+first write.
 
 Pools follow the registry's genealogy through :class:`KVPoolManager.
-sync`: a deleted model's pool is released (its in-flight requests are
-the gateway's to re-route), and a clone whose PARENT held a pool is
-pre-warmed — the parent's devices are exactly where the clone's traffic
-comes from.
+sync`: a deleted model's pool is released (pages returned to the arena;
+its in-flight requests are the gateway's to re-route), and a clone
+whose PARENT held a pool is pre-warmed.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ArchConfig
 from repro.models import transformer as tf
 
+QMAX = 127
+# Sentinel page id for unmapped page-table entries. A large POSITIVE
+# constant: JAX gather/scatter clamp or drop out-of-bounds indices under
+# mode="fill"/"drop", but a NEGATIVE index would silently wrap. Must
+# stay far above any reachable arena capacity.
+FREE = np.int32(1 << 30)
+GROW = 64  # arena growth granularity, in pages
+
+# Dict-key names of pageable (ring-slot) cache leaves -> slot-axis
+# position from the END of the leaf shape. Everything else (pos/index,
+# conv windows, SSM/xLSTM states) is dense residue.
+_PAGED_KEYS = {"k": -3, "v": -3, "c_kv": -2, "k_rope": -2}
+
+
+def _key_name(entry: Any) -> Optional[str]:
+    return getattr(entry, "key", None)
+
+
+class _LeafSpec:
+    """Paging geometry of one pageable leaf of the (unstacked) template:
+    shape = lead + (C,) + tail; per lane there are R = prod(lead)
+    independent slot sequences, each covering P pages of ps slots."""
+
+    def __init__(self, shape: Tuple[int, ...], ax: int, page_slots: int,
+                 dtype):
+        self.lead = tuple(shape[:ax])
+        self.C = shape[ax]
+        self.tail = tuple(shape[ax + 1:])
+        self.T = int(np.prod(self.tail, dtype=np.int64)) if self.tail else 1
+        self.ps = min(page_slots, self.C)
+        self.P = math.ceil(self.C / self.ps)
+        self.R = int(np.prod(self.lead, dtype=np.int64)) if self.lead else 1
+        self.dtype = dtype
+
+    @property
+    def arena_key(self) -> Tuple[int, int]:
+        return (self.T, self.ps)
+
+
+class PageArena:
+    """Shared int8 page heap for ONE (row_width, page_slots) class.
+
+    ``pages`` (N, ps, T) int8 + ``scales`` (N, ps) f16; the free list is
+    host-side. Growth appends pages (ids are stable — never remapped),
+    so page tables survive arbitrary interleavings of pool lifecycles.
+    """
+
+    def __init__(self, width: int, page_slots: int):
+        self.width = width
+        self.ps = page_slots
+        # seed with one growth block: gathers (mode="fill") need a
+        # non-empty page axis even before the first allocation
+        self.pages = jnp.zeros((GROW, page_slots, width), jnp.int8)
+        self.scales = jnp.zeros((GROW, page_slots), jnp.float16)
+        self._free: List[int] = list(range(GROW))
+
+    @property
+    def capacity(self) -> int:
+        return self.pages.shape[0]
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def page_nbytes(self) -> int:
+        return self.ps * self.width + self.ps * 2  # int8 rows + f16 scales
+
+    def alloc(self, n: int) -> np.ndarray:
+        if len(self._free) < n:
+            grow = max(GROW, n - len(self._free))
+            base = self.capacity
+            self.pages = jnp.concatenate(
+                [self.pages,
+                 jnp.zeros((grow, self.ps, self.width), jnp.int8)])
+            self.scales = jnp.concatenate(
+                [self.scales, jnp.zeros((grow, self.ps), jnp.float16)])
+            self._free.extend(range(base, base + grow))
+        out = np.asarray(self._free[:n], np.int32)
+        del self._free[:n]
+        return out
+
+    def free(self, ids: Any) -> None:
+        self._free.extend(int(i) for i in np.asarray(ids).ravel())
+        self._free.sort()
+
+    def nbytes(self) -> int:
+        return self.capacity * self.page_nbytes
+
+
+def _dequantize_leaf(pages, scales, pt, spec: _LeafSpec, lanes: int):
+    g = jnp.take(pages, pt, axis=0, mode="fill", fill_value=0)
+    s = jnp.take(scales, pt, axis=0, mode="fill", fill_value=0)
+    x = g.astype(jnp.float32) * s.astype(jnp.float32)[..., None]
+    x = x.reshape(lanes, spec.R, spec.P * spec.ps, spec.T)[:, :, :spec.C]
+    return x.reshape((lanes,) + spec.lead + (spec.C,)
+                     + spec.tail).astype(spec.dtype)
+
+
+def _quantize_leaf(pages, scales, pt, x, spec: _LeafSpec, lanes: int):
+    xr = x.astype(jnp.float32).reshape(lanes * spec.R, spec.C, spec.T)
+    pad = spec.P * spec.ps - spec.C
+    if pad:
+        xr = jnp.pad(xr, ((0, 0), (0, pad), (0, 0)))
+    xr = xr.reshape(lanes * spec.R * spec.P, spec.ps, spec.T)
+    # kernels.quantize ref contract, block = one slot row; clamp keeps
+    # the scale a normal f16 so all-zero rows stay exact zeros
+    s = jnp.maximum(jnp.max(jnp.abs(xr), axis=-1) / QMAX, 1e-6)
+    s16 = s.astype(jnp.float16)
+    q = jnp.clip(jnp.round(xr / s16.astype(jnp.float32)[..., None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    flat = pt.reshape(-1)
+    return (pages.at[flat].set(q, mode="drop"),
+            scales.at[flat].set(s16, mode="drop"))
+
 
 class KVPool:
-    """Decode-lane pool for ONE model: ``stacked`` holds ``lanes``
+    """Dense decode-lane pool for ONE model: ``stacked`` holds ``lanes``
     single-request caches on a leading lane axis; ``acquire``/``release``
     manage the free list. Lane contents are fully overwritten at
     admission (the gateway scatters a freshly prefilled cache into the
@@ -58,42 +190,198 @@ class KVPool:
         self._free.append(lane)
         self._free.sort()
 
+    # storage interface (paged pools convert; dense is a passthrough)
+    def read(self) -> Any:
+        return self.stacked
+
+    def write(self, stacked: Any) -> None:
+        self.stacked = stacked
+
     def nbytes(self) -> int:
         return sum(leaf.size * leaf.dtype.itemsize
                    for leaf in jax.tree_util.tree_leaves(self.stacked))
 
+    def nbytes_in_use(self) -> int:
+        return self.nbytes()
 
-class KVPoolManager:
-    """Allocates/releases per-model :class:`KVPool`\\ s against the model
-    registry's liveness + genealogy."""
+
+class PagedKVPool:
+    """Paged int8 decode-lane pool (module docstring).
+
+    Same lane/free-list interface as :class:`KVPool`; storage differs:
+    ring-slot leaves live in shared :class:`PageArena`\\ s behind per-
+    lane page tables (host np int32, FREE where unmapped), everything
+    else in a dense residue tree. ``read()`` materializes the dense
+    working tree for a dispatch; ``write()`` re-quantizes it back. On
+    CPU this costs a conversion pass either side of the dispatch — the
+    shrink is in the PERSISTENT pool bytes (what ``nbytes`` meters); an
+    accelerator build would fuse the dequant into the attention read.
+    """
 
     def __init__(self, cfg: ArchConfig, lanes: int, max_len: int,
-                 window: int = 0):
+                 window: int = 0, page_slots: int = 8,
+                 arenas: Optional[Dict[Tuple[int, int], PageArena]] = None):
+        self.lanes = lanes
+        self.window = window
+        self.page_slots = page_slots
+        self.template = tf.init_lm_caches(cfg, 1, max_len, window=window)
+        self.arenas = arenas if arenas is not None else {}
+        paths, self._treedef = jax.tree_util.tree_flatten_with_path(
+            self.template)
+        self._specs: List[Optional[_LeafSpec]] = []
+        self._residue: List[Optional[Any]] = []
+        self._tables: List[Optional[np.ndarray]] = []
+        self._readers: List[Any] = []
+        self._writers: List[Any] = []
+        for path, leaf in paths:
+            ax = _PAGED_KEYS.get(_key_name(path[-1]))
+            if ax is None:
+                self._specs.append(None)
+                self._residue.append(jnp.broadcast_to(
+                    leaf, (lanes,) + leaf.shape).copy())
+                self._tables.append(None)
+                self._readers.append(None)
+                self._writers.append(None)
+                continue
+            spec = _LeafSpec(leaf.shape, ax, page_slots, leaf.dtype)
+            self._specs.append(spec)
+            self._residue.append(None)
+            self._tables.append(np.full((lanes, spec.R, spec.P), FREE,
+                                        np.int32))
+            if spec.arena_key not in self.arenas:
+                self.arenas[spec.arena_key] = PageArena(spec.T, spec.ps)
+            self._readers.append(jax.jit(
+                lambda pages, scales, pt, spec=spec:
+                _dequantize_leaf(pages, scales, pt, spec, lanes)))
+            self._writers.append(jax.jit(
+                lambda pages, scales, pt, x, spec=spec:
+                _quantize_leaf(pages, scales, pt, x, spec, lanes),
+                donate_argnums=(0, 1)))
+        self._free: List[int] = list(range(lanes))
+
+    @property
+    def free_lanes(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise IndexError("pool has no free lane")
+        lane = self._free.pop(0)
+        for spec, pt in zip(self._specs, self._tables):
+            if spec is None:
+                continue
+            # stale page contents are fine: admission overwrites every
+            # slot of the lane before any read observes it
+            pt[lane] = self.arenas[spec.arena_key].alloc(
+                spec.R * spec.P).reshape(spec.R, spec.P)
+        return lane
+
+    def release(self, lane: int) -> None:
+        if lane in self._free or not (0 <= lane < self.lanes):
+            raise ValueError(f"bad lane release: {lane}")
+        for spec, pt in zip(self._specs, self._tables):
+            if spec is None:
+                continue
+            self.arenas[spec.arena_key].free(pt[lane])
+            pt[lane] = FREE
+        self._free.append(lane)
+        self._free.sort()
+
+    def read(self) -> Any:
+        leaves = []
+        for spec, res, pt, rd in zip(self._specs, self._residue,
+                                     self._tables, self._readers):
+            if spec is None:
+                leaves.append(res)
+            else:
+                ar = self.arenas[spec.arena_key]
+                leaves.append(rd(ar.pages, ar.scales, jnp.asarray(pt)))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def write(self, stacked: Any) -> None:
+        leaves = jax.tree_util.tree_leaves(stacked)
+        for i, (spec, leaf) in enumerate(zip(self._specs, leaves)):
+            if spec is None:
+                self._residue[i] = leaf
+            else:
+                ar = self.arenas[spec.arena_key]
+                ar.pages, ar.scales = self._writers[i](
+                    ar.pages, ar.scales, jnp.asarray(self._tables[i]), leaf)
+
+    def _mapped_pages(self) -> Dict[Tuple[int, int], int]:
+        out: Dict[Tuple[int, int], int] = {}
+        for spec, pt in zip(self._specs, self._tables):
+            if spec is None:
+                continue
+            k = spec.arena_key
+            out[k] = out.get(k, 0) + int(np.sum(pt != FREE))
+        return out
+
+    def _residue_nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in self._residue if leaf is not None)
+
+    def _tables_nbytes(self) -> int:
+        return sum(pt.nbytes for pt in self._tables if pt is not None)
+
+    def nbytes(self) -> int:
+        """Bytes this pool holds: mapped pages + dense residue + tables."""
+        mapped = sum(self.arenas[k].page_nbytes * n
+                     for k, n in self._mapped_pages().items())
+        return mapped + self._residue_nbytes() + self._tables_nbytes()
+
+    def nbytes_in_use(self) -> int:
+        return self.nbytes()
+
+
+class KVPoolManager:
+    """Allocates/releases per-model pools against the model registry's
+    liveness + genealogy. ``paged=True`` switches to :class:`PagedKVPool`
+    storage; ``arenas`` lets two managers (target + draft) share one set
+    of page arenas, the "one arena per model family" in DESIGN.md §16."""
+
+    def __init__(self, cfg: ArchConfig, lanes: int, max_len: int,
+                 window: int = 0, paged: bool = False, page_slots: int = 8,
+                 arenas: Optional[Dict[Tuple[int, int], PageArena]] = None):
         self.cfg = cfg
         self.lanes = lanes
         self.max_len = max_len
         self.window = window
-        self.pools: Dict[int, KVPool] = {}
+        self.paged = paged
+        self.page_slots = page_slots
+        self.arenas: Dict[Tuple[int, int], PageArena] = (
+            arenas if arenas is not None else {})
+        self.pools: Dict[int, Any] = {}
         self.created = 0
         self.released = 0
 
-    def get(self, model_id: int) -> KVPool:
+    def get(self, model_id: int) -> Any:
         """The model's pool, allocated lazily on first routed request."""
         pool = self.pools.get(model_id)
         if pool is None:
-            pool = KVPool(self.cfg, self.lanes, self.max_len, self.window)
+            if self.paged:
+                pool = PagedKVPool(self.cfg, self.lanes, self.max_len,
+                                   self.window, self.page_slots,
+                                   arenas=self.arenas)
+            else:
+                pool = KVPool(self.cfg, self.lanes, self.max_len,
+                              self.window)
             self.pools[model_id] = pool
             self.created += 1
         return pool
 
     def sync(self, registry: Any) -> Tuple[List[int], List[int]]:
         """Reconcile pools with the registry after lifecycle events.
-        Releases pools of dead models and pre-warms pools for new clones
-        whose parent held one. Returns (prewarmed_ids, released_ids);
-        the gateway re-routes the released pools' in-flight requests."""
+        Releases pools of dead models (returning their pages to the
+        shared arenas) and pre-warms pools for new clones whose parent
+        held one. Returns (prewarmed_ids, released_ids); the gateway
+        re-routes the released pools' in-flight requests."""
         live = set(registry.live_ids())
         released = [m for m in self.pools if m not in live]
         for m in released:
+            # NOTE: occupied lanes of a released paged pool still hold
+            # arena pages — the caller must evict/release them (the
+            # gateway's ``evict_all`` on the dropped group does this)
             del self.pools[m]
             self.released += 1
         prewarmed = []
@@ -106,4 +394,19 @@ class KVPoolManager:
         return prewarmed, released
 
     def nbytes(self) -> int:
-        return sum(p.nbytes() for p in self.pools.values())
+        """Reserved bytes: dense pools in full; in paged mode the shared
+        arenas' whole capacity (free pages included) plus residues."""
+        if not self.paged:
+            return sum(p.nbytes() for p in self.pools.values())
+        return (sum(a.nbytes() for a in self.arenas.values())
+                + sum(p._residue_nbytes() + p._tables_nbytes()
+                      for p in self.pools.values()))
+
+    def nbytes_in_use(self) -> int:
+        """Bytes actually mapped by live lanes (+ residues/tables)."""
+        return sum(p.nbytes_in_use() for p in self.pools.values())
+
+    def page_stats(self) -> Dict[str, int]:
+        reserved = sum(a.capacity for a in self.arenas.values())
+        in_use = sum(a.pages_in_use for a in self.arenas.values())
+        return {"pages_reserved": reserved, "pages_in_use": in_use}

@@ -1,0 +1,353 @@
+"""Speculative decoding + paged int8 KV tier (DESIGN.md §16).
+
+Pins the load-bearing properties of PR 10's serving additions:
+
+* greedy speculative decode emits the BIT-IDENTICAL token stream to
+  vanilla greedy decode across all five cache families (dense, sliding
+  window, MLA, recurrent ssm, hybrid) — acceptance only changes how
+  many dispatches it takes, never the tokens;
+* the in-jit cache rollback after a partial acceptance leaves the cache
+  bitwise equal to a from-scratch prefill of just the accepted prefix
+  (ring slots, positions, recurrent states — everything);
+* the gateway's spec / paged / spec+paged modes all reproduce the
+  vanilla gateway's streams, and the draft plane follows the population
+  lifecycle (release + re-route when a cluster's target is deleted);
+* paged int8 pools quantize idempotently (read/write round-trips are
+  stable from the first write on), return their pages on release, and
+  shrink resident KV bytes by >= 3.5x vs the dense fp32 pool;
+* admission control: bounded queue + per-device token bucket reject
+  with :class:`OverloadError` and count the rejections.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, FedCDConfig, MLAConfig, XLSTMConfig
+from repro.federated.llm import FedLLMTrainer
+from repro.launch.serve import chunked_prefill, spec_decode
+from repro.launch.steps import make_prefill_step
+from repro.models import transformer as tf
+from repro.serve import (DraftBank, KVPool, OverloadError, PagedKVPool,
+                         RequestRejected, ServeGateway, draft_config,
+                         truncate_lm_params)
+
+_F32 = dict(param_dtype="float32", compute_dtype="float32")
+TINY = ArchConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=64, **_F32)
+FAMILIES = {
+    "dense": TINY,
+    "dense_win": ArchConfig(name="tw", n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab_size=64,
+                            sliding_window=6, **_F32),
+    "mla": ArchConfig(name="tm", family="moe", attn_type="mla", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=64,
+                      mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                    qk_nope_dim=16, qk_rope_dim=8,
+                                    v_head_dim=16), **_F32),
+    "ssm": ArchConfig(name="ts", family="ssm", n_layers=3, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                      xlstm=XLSTMConfig(slstm_layers=(1,)), **_F32),
+    "hybrid": ArchConfig(name="th", family="hybrid", n_layers=5, d_model=64,
+                         n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                         shared_attn_every=2, shared_attn_lora_rank=4,
+                         **_F32),
+}
+FED = FedCDConfig(n_devices=8, devices_per_round=6, score_window=2,
+                  milestones=(2,), late_delete_round=20, max_models=6,
+                  lr=0.05, seed=0)
+
+
+# -- greedy spec ≡ vanilla greedy, all five families ------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_spec_greedy_bit_identical_to_vanilla(family):
+    cfg = FAMILIES[family]
+    win = cfg.sliding_window
+    B, P, N, K, CH = 2, 9, 10, 3, 4
+    rng = np.random.default_rng(0)
+    params = tf.init_lm(cfg, jax.random.key(0))
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+    prefill = jax.jit(make_prefill_step(cfg, window=win))
+    max_len = P + N + K + 1
+
+    caches = tf.init_lm_caches(cfg, B, max_len, window=win)
+    logits, caches = chunked_prefill(prefill, params, caches, prompts, CH)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    ref = [np.asarray(tok)]
+    for _ in range(N):
+        logits, caches = tf.lm_decode(cfg, params, tok, caches, window=win)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        ref.append(np.asarray(tok))
+    ref = np.concatenate(ref, axis=1)
+
+    dcfg = draft_config(cfg, 1)
+    dparams = truncate_lm_params(cfg, dcfg, params)
+    scaches = tf.init_lm_caches(cfg, B, max_len, window=win)
+    dcaches = tf.init_lm_caches(dcfg, B, max_len, window=win)
+    lg0, scaches = chunked_prefill(prefill, params, scaches, prompts, CH)
+    dprefill = jax.jit(make_prefill_step(dcfg, window=win))
+    _, dcaches = chunked_prefill(dprefill, dparams, dcaches, prompts, CH)
+    first = jnp.argmax(lg0, -1)[:, None].astype(jnp.int32)
+    spec, proposed, accepted = spec_decode(
+        cfg, params, scaches, dcfg, dparams, dcaches, first, N, K,
+        window=win)
+    got = np.concatenate([np.asarray(first), spec], axis=1)
+    np.testing.assert_array_equal(got[:, :N + 1], ref)
+    assert proposed > 0 and 0 <= accepted <= proposed
+
+
+# -- rollback ≡ from-scratch prefill of the accepted prefix -----------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_rollback_bitwise_equals_prefill_of_accepted_prefix(family):
+    cfg = FAMILIES[family]
+    win = cfg.sliding_window
+    B, P, K = 1, 7, 3
+    rng = np.random.default_rng(1)
+    params = tf.init_lm(cfg, jax.random.key(1))
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+    caches = tf.init_lm_caches(cfg, B, 24, window=win)
+    _, caches = tf.lm_prefill(cfg, params, prompt, caches, window=win)
+
+    chunk = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, K + 1)),
+                        jnp.int32)
+    # doctor the draft so the verifier rejects at position 1: the greedy
+    # out stream depends only on the chunk, so flip one draft token
+    out_probe, _, _ = tf.lm_prefill(cfg, params, chunk, caches, window=win,
+                                    collect_states=True)
+    out_probe = jnp.argmax(out_probe, -1).astype(jnp.int32)
+    draft = out_probe[:, :-1]
+    draft = draft.at[:, 1].set((draft[:, 1] + 1) % cfg.vocab_size)
+
+    out, n_keep, rolled = tf.lm_spec_verify(cfg, params, chunk, draft,
+                                            caches, window=win)
+    assert int(n_keep) == 2              # accepted d_1, rejected d_2
+
+    # oracle: prefill the same chunk with n_valid=n_keep on the same
+    # pre-verify cache — the rollback must reproduce it BITWISE
+    _, oracle = tf.lm_prefill(cfg, params, chunk, caches, window=win,
+                              n_valid=n_keep)
+    for a, b in zip(jax.tree.leaves(rolled), jax.tree.leaves(oracle)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- gateway modes ----------------------------------------------------------
+
+def _trainer(rounds=3):
+    tr = FedLLMTrainer(TINY, FED, 8, 2, 16, n_archetypes=2, seed=0)
+    tr.run(rounds)
+    assert len(tr.registry.live_ids()) >= 2
+    return tr
+
+
+@pytest.fixture(scope="module")
+def trainer():
+    return _trainer()
+
+
+def _streams(gw, seed=0, n=8, max_new=6):
+    rng = np.random.default_rng(seed)
+    reqs = [gw.submit(d, rng.integers(0, 64, size=10), max_new=max_new)
+            for d in range(n)]
+    gw.drain()
+    assert all(r.done and len(r.tokens) == max_new for r in reqs)
+    return [list(r.tokens) for r in reqs]
+
+
+@pytest.mark.parametrize("mode", ["spec", "paged", "spec_paged"])
+def test_gateway_modes_match_vanilla_streams(trainer, mode):
+    base = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                        max_len=64, lanes=4, chunk=8)
+    want = _streams(base)
+    kw = {}
+    if "spec" in mode:
+        kw.update(spec_k=3, draft_layers=1)
+    if "paged" in mode:
+        kw.update(paged=True, page_slots=8)
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=64, lanes=4, chunk=8, **kw)
+    assert _streams(gw) == want
+    st = gw.stats()
+    if "spec" in mode:
+        sp = st["spec"]
+        assert sp["proposed"] > 0
+        assert 0 <= sp["accepted"] <= sp["proposed"]
+        assert 0.0 <= sp["acceptance_rate"] <= 1.0
+        assert sp["draft_models"] >= 2
+        # each spec round emits >= 1 token/lane: never more rounds than
+        # the vanilla gateway took decode dispatches
+        assert sp["rounds"] <= base.dispatches
+    if "paged" in mode:
+        pg = st["pools"]["pages"]
+        assert pg["pages_in_use"] <= pg["pages_reserved"]
+        assert pg["pages_in_use"] == 0        # drained: lanes released
+        assert st["pools"]["bytes_in_use"] <= st["pools"]["bytes"]
+
+
+def test_gateway_spec_draft_released_and_rerouted_on_delete():
+    tr = _trainer()
+    gw = ServeGateway(TINY, tr.registry, lambda: tr.state,
+                      max_len=64, lanes=4, chunk=8, spec_k=3,
+                      draft_layers=1)
+    live = tr.registry.live_ids()
+    assert gw.draft.present == set(live)
+    rng = np.random.default_rng(2)
+    reqs = [gw.submit(d, rng.integers(0, 64, size=8), max_new=12)
+            for d in range(8)]
+    by_model = {m: [r for r in reqs if r.model == m] for m in live}
+    victim = next(m for m in live if by_model[m])
+    survivor = next(m for m in live if m != victim)
+    gw.step()                              # tokens in flight
+    tr.registry.kill(victim, round_=99)
+    out = gw.sync()
+    assert victim in out["released"]
+    assert victim not in gw.draft.present          # draft row released
+    assert victim not in gw.draft_pools.pools      # draft cache pool too
+    assert gw.draft.released >= 1
+    gw.drain()
+    for r in by_model[victim]:
+        assert r.done and r.rerouted == 1 and r.model == survivor
+    for r in reqs:
+        assert r.done and len(r.tokens) == 12
+
+
+def test_gateway_topk_acceptance_bounds(trainer):
+    # a FULL-depth draft is the target itself: with top_k=1 (greedy via
+    # the sampling path) every proposal must be accepted
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=64, lanes=4, chunk=8, spec_k=2,
+                      draft_layers=TINY.n_layers, top_k=1, seed=3)
+    _ = _streams(gw, seed=3)
+    assert gw.stats()["spec"]["acceptance_rate"] == 1.0
+    # real top-k sampling with a shallow draft: rate is a probability
+    gw2 = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                       max_len=64, lanes=4, chunk=8, spec_k=2,
+                       draft_layers=1, top_k=4, seed=4)
+    rng = np.random.default_rng(4)
+    reqs = [gw2.submit(d, rng.integers(0, 64, size=10), max_new=6)
+            for d in range(8)]
+    gw2.drain()
+    assert all(r.done and len(r.tokens) == 6 for r in reqs)
+    sp = gw2.stats()["spec"]
+    assert sp["proposed"] > 0
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+
+
+# -- paged int8 pools -------------------------------------------------------
+
+def test_paged_pool_roundtrip_idempotent_and_page_accounting():
+    pool = PagedKVPool(TINY, lanes=2, max_len=16, page_slots=8)
+    arena_free0 = {k: len(a._free) for k, a in pool.arenas.items()}
+    a = pool.acquire()
+    b = pool.acquire()
+    assert (a, b) == (0, 1)
+    rng = np.random.default_rng(5)
+    tmpl = pool.read()
+    noisy = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tmpl)
+    pool.write(noisy)
+    r1 = pool.read()
+    pool.write(r1)
+    r2 = pool.read()
+    # quantize(dequantize(q)) is exact from the first write on: the
+    # max-|q| slot hits QMAX, so the re-derived scale is bit-equal
+    for x, y in zip(jax.tree.leaves(r1), jax.tree.leaves(r2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    occupied = pool.nbytes_in_use()
+    assert occupied > 0
+    pool.release(a)
+    pool.release(b)
+    # releasing returns every page to the arena free lists and unmaps
+    # the lane tables (in-use drops to the residue + table overhead)
+    assert {k: len(a._free) for k, a in pool.arenas.items()} == arena_free0
+    assert sum(pool._mapped_pages().values()) == 0
+    assert pool.nbytes_in_use() < occupied
+    with pytest.raises(ValueError):
+        pool.release(a)                   # double release
+
+
+def test_paged_int8_shrinks_kv_bytes_3p5x():
+    lanes, max_len = 4, 64
+    dense = KVPool(TINY, lanes=lanes, max_len=max_len)
+    paged = PagedKVPool(TINY, lanes=lanes, max_len=max_len, page_slots=8)
+    for _ in range(lanes):
+        paged.acquire()                   # fully occupied
+    ratio = dense.nbytes() / paged.nbytes_in_use()
+    assert ratio >= 3.5, f"paged int8 shrink {ratio:.2f}x < 3.5x"
+
+
+# -- admission control ------------------------------------------------------
+
+def test_admission_bounded_queue_rejects_overload(trainer):
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=64, lanes=1, chunk=8, max_queue=1)
+    rng = np.random.default_rng(6)
+    gw.submit(0, rng.integers(0, 64, size=8), max_new=4)   # takes the lane
+    gw.submit(0, rng.integers(0, 64, size=8), max_new=4)   # queues
+    with pytest.raises(OverloadError):
+        gw.submit(0, rng.integers(0, 64, size=8), max_new=4)
+    assert gw.stats()["admission"]["rejected_overload"] == 1
+    gw.drain()                            # queued work still completes
+
+
+def test_admission_token_bucket_rate_limits_per_device(trainer):
+    clk = [0.0]
+    gw = ServeGateway(TINY, trainer.registry, lambda: trainer.state,
+                      max_len=64, lanes=4, chunk=8, rate_limit=10.0,
+                      rate_burst=20.0, clock=lambda: clk[0])
+    gw.submit(0, np.arange(8) % 64, max_new=4)       # cost 12 <= 20
+    with pytest.raises(OverloadError):
+        gw.submit(0, np.arange(8) % 64, max_new=4)   # 12 > 8 left
+    assert gw.stats()["admission"]["rejected_rate"] == 1
+    gw.submit(1, np.arange(8) % 64, max_new=4)       # independent budget
+    clk[0] = 1.0                                     # refill 10 tokens
+    gw.submit(0, np.arange(8) % 64, max_new=4)
+    # an unroutable device must NOT drain any bucket (rate check runs
+    # after routing), and still raises the plain rejection type
+    with pytest.raises(RequestRejected):
+        gw.submit(999, [1, 2], max_new=2)
+    assert 999 not in gw._buckets
+    gw.drain()
+
+
+# -- draft bank -------------------------------------------------------------
+
+def test_draft_bank_truncation_shapes_and_lifecycle():
+    tr = _trainer()
+    bank = DraftBank(TINY, 1, FED.max_models)
+    added, dropped = bank.refresh(tr.registry,
+                                  params_of=tr.executor.params_of)
+    live = tr.registry.live_ids()
+    assert added == sorted(live) and dropped == []
+    # draft rows are exact truncations of the CURRENT target rows
+    for m in live:
+        want = truncate_lm_params(TINY, bank.dcfg,
+                                  tr.executor.params_of(m))
+        r = bank.row(tr.registry, m)
+        got = jax.tree.map(lambda a: a[r], bank.tree)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the draft config is a layout prefix with MTP stripped
+    assert bank.dcfg.layout() == TINY.layout()[:bank.dcfg.n_layers]
+    assert not bank.dcfg.mtp
+    victim = live[0]
+    tr.registry.kill(victim, round_=99)
+    added, dropped = bank.refresh(tr.registry,
+                                  params_of=tr.executor.params_of)
+    assert dropped == [victim] and victim not in bank.present
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_draft_config_is_layout_prefix(family):
+    cfg = FAMILIES[family]
+    for d in range(1, cfg.n_layers + 1):
+        dcfg = draft_config(cfg, d)
+        assert dcfg.layout() == cfg.layout()[:dcfg.n_layers]
+        params = tf.init_lm(cfg, jax.random.key(0))
+        dparams = truncate_lm_params(cfg, dcfg, params)
+        want = jax.tree.structure(tf.init_lm(dcfg, jax.random.key(0)))
+        assert jax.tree.structure(dparams) == want
